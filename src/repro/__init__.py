@@ -1,0 +1,16 @@
+"""repro — Fast Incremental Gaussian Mixture Model (Pinto & Engel, 2015)
+as a first-class feature of a production-grade multi-pod JAX framework.
+
+Packages:
+  core         the paper's algorithm (precision-form FIGMN + IGMN baseline)
+  kernels      Pallas TPU kernels + jnp oracles
+  models       10-architecture LM model zoo (scan-over-layers)
+  configs      assigned architectures x input shapes + paper configs
+  train        AdamW, schedules, train-step factory
+  serve        continuous-batching decode engine
+  distributed  mesh/sharding rules, compression, HLO roofline analysis
+  checkpoint   sharded async elastic checkpointing
+  ft           FIGMN telemetry anomaly detection + straggler handling
+  data         deterministic synthetic pipelines
+  launch       mesh builder, multi-pod dry-run, train/serve CLIs
+"""

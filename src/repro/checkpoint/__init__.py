@@ -1,0 +1,2 @@
+"""repro.checkpoint — sharded, async, elastic checkpointing."""
+from repro.checkpoint.manager import CheckpointManager

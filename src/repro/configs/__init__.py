@@ -1,0 +1,36 @@
+"""Architecture registry: ``get(arch_id)`` → (FULL, SMOKE) ModelConfigs."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.models.config import ModelConfig
+from repro.configs import (gemma7b, granite_moe, h2o_danube, hymba,
+                           llama4_scout, minicpm3, qwen2_vl, seamless_m4t,
+                           xlstm_1_3b, yi6b)
+
+_MODULES = {
+    "llama4-scout-17b-a16e": llama4_scout,
+    "granite-moe-3b-a800m": granite_moe,
+    "yi-6b": yi6b,
+    "gemma-7b": gemma7b,
+    "h2o-danube-1.8b": h2o_danube,
+    "minicpm3-4b": minicpm3,
+    "seamless-m4t-large-v2": seamless_m4t,
+    "hymba-1.5b": hymba,
+    "qwen2-vl-72b": qwen2_vl,
+    "xlstm-1.3b": xlstm_1_3b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get(arch: str) -> ModelConfig:
+    return _MODULES[arch].FULL
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _MODULES[arch].SMOKE
+
+
+def all_full() -> Dict[str, ModelConfig]:
+    return {k: m.FULL for k, m in _MODULES.items()}

@@ -1,0 +1,21 @@
+"""gemma-7b — GeGLU, head_dim=256, MHA (kv=16), sqrt(d) embedding scale.
+
+[arXiv:2403.08295; hf]
+28L d_model=3072 16H (GQA kv=16) d_ff=24576 vocab=256000.
+Full attention ⇒ long_500k skipped.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma-7b", family="dense",
+    n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16, head_dim=256,
+    d_ff=24576, vocab_size=256000,
+    act="gelu", rope_theta=10000.0, embed_scale=True, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="gemma-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=32,
+    d_ff=256, vocab_size=256, act="gelu", embed_scale=True,
+    tie_embeddings=True, dtype="float32",
+)

@@ -1,0 +1,24 @@
+"""granite-moe-3b-a800m — 40 experts top-8, small expert FFNs.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+32L d_model=1536 24H (GQA kv=8) d_ff=512 vocab=49155, MoE 40e top-8.
+(Expert count is padded to the model-parallel degree at parameter-build
+time: 40 → 48 on a 16-way TP mesh, padding experts masked in the router.)
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size=49155,
+    n_experts=40, top_k=8, capacity_factor=1.25,
+    act="silu", rope_theta=10000.0,
+)
+
+SMOKE = ModelConfig(
+    name="granite-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=32, vocab_size=256,
+    n_experts=5, top_k=2, capacity_factor=1.25,
+    act="silu", dtype="float32",
+)

@@ -1,0 +1,28 @@
+"""hymba-1.5b — hybrid: parallel attention + Mamba heads per layer.
+
+[arXiv:2411.13676; hf]
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+SWA (window 1024) on all layers except global layers {0, 15, 31}; the
+published model's 128 meta-tokens are omitted (DESIGN.md §7).
+Hybrid SWA+SSM ⇒ sub-quadratic: long_500k RUNS (global layers drop to the
+sliding window in the long-context serving mode — see DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab_size=32001,
+    attn_kind="swa", window=1024, global_layers=(0, 15, 31),
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+    act="silu", rope_theta=10000.0, supports_long_context=True,
+)
+
+SMOKE = ModelConfig(
+    name="hymba-smoke", family="hybrid",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab_size=256,
+    attn_kind="swa", window=8, global_layers=(1,),
+    ssm_state=4, ssm_conv=4, ssm_expand=2,
+    act="silu", supports_long_context=True, dtype="float32",
+)

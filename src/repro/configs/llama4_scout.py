@@ -1,0 +1,28 @@
+"""llama4-scout-17b-a16e — MoE, 16 experts top-1, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16e top-1.
+
+Note: Llama-4 interleaves dense/MoE FFNs in the released model; the
+assignment specifies the MoE figures only, so every layer is MoE here
+(uniform stacks → single lax.scan; recorded in DESIGN.md).  Long context in
+the real model uses iRoPE/chunked attention; this backbone is full-attention
+⇒ long_500k is skipped (DESIGN.md §Arch-applicability).
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=202048,
+    n_experts=16, top_k=1, capacity_factor=1.25,
+    act="silu", rope_theta=500000.0,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-scout-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab_size=256,
+    n_experts=4, top_k=1, capacity_factor=1.25,
+    act="silu", dtype="float32",
+)

@@ -1,0 +1,27 @@
+"""minicpm3-4b — Multi-head Latent Attention (MLA).
+
+[hf:openbmb/MiniCPM3-4B; hf]
+62L d_model=2560 40H d_ff=6400 vocab=73448.
+MLA dims follow the released config: q_lora=768, kv_lora=256,
+qk_nope=64, qk_rope=32, v_head=64.  The decode cache stores only
+(kv_lora + qk_rope) = 288 values/token — 11× smaller than GQA-40.
+MLA is still full attention ⇒ long_500k skipped.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="minicpm3-4b", family="mla",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, head_dim=96,
+    d_ff=6400, vocab_size=73448,
+    q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+    act="silu", rope_theta=10000.0,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm3-smoke", family="mla",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=24,
+    d_ff=96, vocab_size=256,
+    q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+    v_head_dim=16, act="silu", dtype="float32",
+)

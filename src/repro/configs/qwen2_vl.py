@@ -1,0 +1,26 @@
+"""qwen2-vl-72b — VLM backbone with M-RoPE and dynamic resolution.
+
+[arXiv:2409.12191; hf]
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+The vision tower is a STUB per the assignment: ``input_specs`` provides
+pre-projected patch embeddings (B, S_vis, d_model) that occupy the leading
+positions; M-RoPE (sections 16/24/24 of head_dim/2) consumes the 3-stream
+(t, h, w) position ids.  Full attention ⇒ long_500k skipped.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=29568, vocab_size=152064,
+    rope_style="mrope", mrope_sections=(16, 24, 24),
+    act="silu", rope_theta=1000000.0, qk_norm=False,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab_size=256,
+    rope_style="mrope", mrope_sections=(4, 2, 2),
+    act="silu", dtype="float32",
+)

@@ -1,0 +1,101 @@
+"""Assigned input shapes and per-(arch × shape) input specs for the dry-run.
+
+Shapes (assignment):
+  train_4k     seq=4096    global_batch=256   → train_step
+  prefill_32k  seq=32768   global_batch=32    → prefill_step
+  decode_32k   seq=32768   global_batch=128   → serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq=524288  global_batch=1     → serve_step; requires
+               sub-quadratic attention: runs only for swa/hybrid/ssm archs
+               (cfg.supports_long_context), skipped for full attention.
+
+``input_specs`` returns ShapeDtypeStructs only — no allocation; the dry-run
+lowers against them (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# fraction of the sequence that is stub frontend embeddings
+VIS_FRACTION = 8            # qwen2-vl: S/8 positions are patch embeddings
+ENC_FRACTION = 4            # seamless: encoder frames = S/4 (audio stride)
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full-attention arch: long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f(cfg, *shape):
+    return jax.ShapeDtypeStruct(shape, cfg.param_dtype)
+
+
+def cache_max_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Decode-cache length: seq_len, or the SWA window in long-context
+    serving mode (ring buffer — the sub-quadratic memory story)."""
+    if shape.name == "long_500k" and cfg.attn_kind == "swa" and cfg.window:
+        return cfg.window
+    return shape.seq_len
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    b = shape.global_batch
+    enc_len = shape.seq_len // ENC_FRACTION if cfg.is_encdec else 0
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, cache_max_len(cfg, shape),
+                                       enc_len=enc_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {"tokens": _i32(b, s), "targets": _i32(b, s)}
+        if cfg.family == "vlm":
+            batch["pixel_embeds"] = _f(cfg, b, s // VIS_FRACTION, cfg.d_model)
+            batch["positions3"] = _i32(3, b, s)
+        if cfg.is_encdec:
+            batch["enc_frames"] = _f(cfg, b, s // ENC_FRACTION, cfg.d_model)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": _i32(b, s)}
+        if cfg.family == "vlm":
+            batch["pixel_embeds"] = _f(cfg, b, s // VIS_FRACTION, cfg.d_model)
+            batch["positions3"] = _i32(3, b, s)
+        if cfg.is_encdec:
+            batch["enc_frames"] = _f(cfg, b, s // ENC_FRACTION, cfg.d_model)
+        return {"batch": batch, "cache": abstract_cache(cfg, shape)}
+    # decode: one new token against a cache of seq_len
+    specs: Dict[str, Any] = {"token": _i32(b, 1),
+                             "cache": abstract_cache(cfg, shape)}
+    if cfg.family == "vlm":
+        specs["positions3"] = _i32(3, b, 1)
+    return specs

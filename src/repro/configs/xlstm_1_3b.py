@@ -1,0 +1,26 @@
+"""xlstm-1.3b — sLSTM + mLSTM block stack.  [arXiv:2405.04517; unverified]
+
+48L d_model=2048 4H vocab=50304, d_ff=0 (no separate FFN; the mLSTM
+up/down projections carry the capacity).  Layers are organised as 6 groups
+of (7 mLSTM + 1 sLSTM) — the paper's ~7:1 ratio — so both stacks scan with
+uniform parameters.  Recurrent state instead of KV cache ⇒ O(1)/token
+decode: long_500k RUNS.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, head_dim=512,
+    d_ff=0, vocab_size=50304,
+    ssm_expand=2, slstm_every=8, ssm_conv=4,
+    rope_style="none", supports_long_context=True, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke", family="ssm",
+    n_layers=4, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+    d_ff=0, vocab_size=256,
+    ssm_expand=2, slstm_every=2, ssm_conv=4,
+    rope_style="none", supports_long_context=True, tie_embeddings=True,
+    dtype="float32",
+)

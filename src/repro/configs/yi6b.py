@@ -1,0 +1,19 @@
+"""yi-6b — llama-arch GQA dense.  [arXiv:2403.04652; hf]
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+Full attention ⇒ long_500k skipped.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-6b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=11008, vocab_size=64000,
+    act="silu", rope_theta=5000000.0,
+)
+
+SMOKE = ModelConfig(
+    name="yi-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=160, vocab_size=256, act="silu", dtype="float32",
+)

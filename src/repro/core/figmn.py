@@ -1,0 +1,356 @@
+"""Fast IGMN — the paper's contribution (precision-matrix form).
+
+Implements §3 of Pinto & Engel (2015): the entire learning loop runs on the
+precision matrix Λ = C⁻¹ and on |C| maintained through rank-one updates, so a
+learning step is O(K·D²) instead of O(K·D³).
+
+Structure of one learning step (Algorithm 1):
+  1. d²_M(x, j) = (x-μ_j)ᵀ Λ_j (x-μ_j)                       (eq. 22, O(KD²))
+  2. if no active component satisfies d² < chi²_{D,1-β}: create (Algorithm 3)
+  3. else: update every component (eqs. 3–10) with the precision updates
+     (eqs. 20–21) and determinant-lemma updates (eqs. 25–26), all O(KD²).
+
+Everything is batched over the K-slot component pool; inactive slots take a
+mathematical no-op path (posterior forced to 0 ⇒ ω = 0 ⇒ identity update),
+so a single fused computation handles any number of live components.
+
+The stream loop is a ``lax.scan`` — the algorithm is inherently sequential in
+the data (that *is* the IGMN), but each step exposes K·D² parallel work.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
+
+_LOG_2PI = 1.8378770664093453
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def sigma_from_data(x: Array, delta: float) -> Array:
+    """Per-dimension sigma_ini = delta * std(dataset) (eq. 13).
+
+    The paper notes an *estimate* is fine for true online usage (e.g. sensor
+    ranges); this helper is for when the dataset is available.
+    """
+    std = jnp.std(x, axis=0)
+    # Guard constant dimensions: a zero std would make Λ infinite.
+    std = jnp.where(std <= 1e-12, 1.0, std)
+    return delta * std
+
+
+def init_state(cfg: FIGMNConfig) -> FIGMNState:
+    k, d = cfg.kmax, cfg.dim
+    dt = cfg.dtype
+    sigma = jnp.broadcast_to(jnp.asarray(cfg.sigma_ini, dt), (d,))
+    # Λ_j = σ_ini⁻² I (diagonal ⇒ no inversion cost); |C| = Π σ_ini².
+    lam0 = jnp.zeros((k, d, d), dt) + jnp.diag(1.0 / (sigma * sigma))[None]
+    logdet0 = jnp.full((k,), jnp.sum(2.0 * jnp.log(sigma)), dt)
+    return FIGMNState(
+        mu=jnp.zeros((k, d), dt),
+        lam=lam0,
+        logdet=logdet0,
+        det=jnp.exp(logdet0),
+        sp=jnp.zeros((k,), dt),
+        v=jnp.zeros((k,), dt),
+        active=jnp.zeros((k,), bool),
+        n_created=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distance / densities
+# ---------------------------------------------------------------------------
+
+def mahalanobis_sq(state: FIGMNState, x: Array) -> Array:
+    """(K,) squared Mahalanobis distance to every slot (eq. 22)."""
+    diff = x[None, :] - state.mu                       # (K, D)
+    return jnp.einsum("kd,kde,ke->k", diff, state.lam, diff)
+
+
+def _log_density(cfg: FIGMNConfig, state: FIGMNState, d2: Array) -> Array:
+    """log p(x|j) (eq. 2) from precomputed d² — uses log|C|."""
+    if cfg.faithful_det:
+        logdet = jnp.log(state.det)
+    else:
+        logdet = state.logdet
+    return -0.5 * (cfg.dim * _LOG_2PI + logdet + d2)
+
+
+def posteriors(cfg: FIGMNConfig, state: FIGMNState, d2: Array) -> Array:
+    """p(j|x) over the pool (eq. 3); inactive slots get exactly 0."""
+    logp = _log_density(cfg, state, d2)
+    # prior p(j) ∝ sp_j (eq. 12) — the normaliser cancels in the softmax.
+    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
+    logw = jnp.where(state.active, logw, -jnp.inf)
+    # Guard the all-inactive case (softmax of all -inf).
+    any_active = jnp.any(state.active)
+    logw = jnp.where(any_active, logw, 0.0)
+    post = jax.nn.softmax(logw)
+    return jnp.where(state.active, post, 0.0)
+
+
+def log_likelihood(cfg: FIGMNConfig, state: FIGMNState, x: Array) -> Array:
+    """Mixture log-density log Σ_j p(x|j) p(j) of a single point."""
+    d2 = mahalanobis_sq(state, x)
+    logp = _log_density(cfg, state, d2)
+    logprior = jnp.log(state.sp / jnp.maximum(jnp.sum(state.sp), 1e-30) + 1e-30)
+    logjoint = jnp.where(state.active, logp + logprior, -jnp.inf)
+    return jax.scipy.special.logsumexp(logjoint)
+
+
+# ---------------------------------------------------------------------------
+# The two rank-one updates (the heart of the paper)
+# ---------------------------------------------------------------------------
+
+def precision_rank2_update(
+    lam: Array, logdet: Array, det: Array,
+    e_star: Array, dmu: Array, w: Array, dim: int,
+) -> Tuple[Array, Array, Array]:
+    """Apply eqs. 20–21 (precision) and 25–26 (determinant) for all K slots.
+
+    lam:    (K, D, D)   Λ(t-1)
+    e_star: (K, D)      x - μ(t)
+    dmu:    (K, D)      ω e  = μ(t) - μ(t-1)
+    w:      (K,)        ω_j = p(j|x)/sp_j   (0 for no-op slots)
+    Returns (Λ(t), log|C(t)|, |C(t)|).  O(K·D²).
+    """
+    one_m_w = 1.0 - w                                   # (K,)
+    # --- first rank-one update (add  ω e*e*ᵀ  to  (1-ω)C) -----------------
+    y = jnp.einsum("kde,ke->kd", lam, e_star)           # Λ e*          (K,D)
+    s = jnp.einsum("kd,kd->k", e_star, y)               # e*ᵀ Λ e*      (K,)
+    denom1 = 1.0 + w * s / one_m_w
+    coef1 = w / (one_m_w * one_m_w * denom1)
+    lam_bar = lam / one_m_w[:, None, None] \
+        - coef1[:, None, None] * jnp.einsum("kd,ke->kde", y, y)
+    # --- second rank-one update (subtract Δμ Δμᵀ) --------------------------
+    yb = jnp.einsum("kde,ke->kd", lam_bar, dmu)         # Λ̄ Δμ          (K,D)
+    t = jnp.einsum("kd,kd->k", dmu, yb)                 # ΔμᵀΛ̄Δμ        (K,)
+    coef2 = 1.0 / (1.0 - t)
+    lam_new = lam_bar + coef2[:, None, None] * jnp.einsum("kd,ke->kde", yb, yb)
+    # --- determinants (eqs. 25–26), log-space and faithful -----------------
+    # log|·| is taken of absolute values so that the (documented) non-PSD
+    # regime of the printed eq. 11 degrades exactly like the covariance-form
+    # baseline (whose slogdet also yields log|det|) instead of NaN-ing.
+    logdet_new = logdet + dim * jnp.log(one_m_w) \
+        + jnp.log(jnp.abs(denom1)) + jnp.log(jnp.abs(1.0 - t))
+    det_new = det * one_m_w ** dim * denom1 * (1.0 - t)
+    return lam_new, logdet_new, det_new
+
+
+def precision_rank1_update_exact(
+    lam: Array, logdet: Array, det: Array,
+    e: Array, w: Array, dim: int,
+) -> Tuple[Array, Array, Array]:
+    """Beyond-paper 'exact' mode: C(t) = (1-ω)C + ω(1-ω)eeᵀ.
+
+    This is the *exact* sp-weighted moment recursion (the printed eq. 11
+    differs from it by -ω²eeᵀ).  Single rank-one ⇒ one Sherman–Morrison and
+    one determinant-lemma application, PSD-preserving for ω ∈ [0, 1):
+
+        Λ(t)      = (Λ − [ω/(1+ω eᵀΛe)] (Λe)(Λe)ᵀ) / (1-ω)
+        log|C(t)| = log|C| + D·log(1-ω) + log1p(ω eᵀΛe)
+
+    e: (K, D) is x − μ(t-1) (the *pre-update* residual, eq. 6).
+    """
+    one_m_w = 1.0 - w
+    y = jnp.einsum("kde,ke->kd", lam, e)                # Λ e
+    s = jnp.einsum("kd,kd->k", e, y)                    # eᵀ Λ e ≥ 0 (PSD)
+    denom = 1.0 + w * s
+    coef = w / denom
+    lam_new = (lam - coef[:, None, None] * jnp.einsum("kd,ke->kde", y, y)) \
+        / one_m_w[:, None, None]
+    logdet_new = logdet + dim * jnp.log(one_m_w) + jnp.log1p(w * s)
+    det_new = det * one_m_w ** dim * denom
+    return lam_new, logdet_new, det_new
+
+
+def fused_step_coeffs(d2: Array, w: Array, dim: int, update_mode: str
+                      ) -> Tuple[Array, Array]:
+    """Beyond-paper fusion (EXACT algebra, §Perf): both e* = (1-ω)e and
+    Δμ = ωe are scalar multiples of e, so every matvec in the rank-2 update
+    (eqs. 20–21) is a multiple of the ONE vector y = Λe — which is also what
+    the Mahalanobis gate (eq. 22) consumed: d² = eᵀy.
+
+    The whole update therefore collapses to
+        Λ(t) = Λ(t-1)/(1-ω) + β · y yᵀ          (paper mode)
+        Λ(t) = (Λ(t-1) − β · y yᵀ) / (1-ω)      (exact mode)
+    with scalar β(d², ω) — ONE HBM read (matvec, shared with the distance)
+    plus ONE read+write (apply) per point instead of four passes over the
+    (K, D, D) tensor.  Returns (β, Δlogdet, |C| factor — signed, so the
+    paper-faithful multiplicative determinant track stays exact).
+    """
+    one_m_w = 1.0 - w
+    if update_mode == "exact":
+        denom = 1.0 + w * d2
+        beta = w / denom
+        dlogdet = dim * jnp.log(one_m_w) + jnp.log1p(w * d2)
+        return beta, dlogdet, one_m_w ** dim * denom
+    denom1 = 1.0 + w * one_m_w * d2
+    alpha = 1.0 / one_m_w - w * d2 / denom1            # Λ̄e = α·y
+    t = w * w * alpha * d2                             # ΔμᵀΛ̄Δμ
+    beta = -(w / denom1) + (w * alpha) ** 2 / (1.0 - t)
+    dlogdet = dim * jnp.log(one_m_w) + jnp.log(jnp.abs(denom1)) \
+        + jnp.log(jnp.abs(1.0 - t))
+    return beta, dlogdet, one_m_w ** dim * denom1 * (1.0 - t)
+
+
+# ---------------------------------------------------------------------------
+# Learning step
+# ---------------------------------------------------------------------------
+
+def _update(cfg: FIGMNConfig, state: FIGMNState, x: Array,
+            d2: Array, y: Optional[Array] = None) -> FIGMNState:
+    """Update all components with posterior weights (eqs. 3–10, 20–21, 25–26).
+
+    y: optional precomputed Λe from the distance pass — enables the fused
+    single-rank-one form (see fused_step_coeffs); None falls back to the
+    literal two-matvec formulation (kept for the faithfulness tests).
+    """
+    post = posteriors(cfg, state, d2)                   # (K,) zeros on inactive
+    v_new = state.v + state.active.astype(cfg.dtype)    # eq. 4
+    sp_new = state.sp + post                            # eq. 5
+    e = x[None, :] - state.mu                           # eq. 6
+    w = post / jnp.maximum(sp_new, 1e-30)               # eq. 7  (ω)
+    dmu = w[:, None] * e                                # eq. 8
+    mu_new = state.mu + dmu                             # eq. 9
+    e_star = x[None, :] - mu_new                        # eq. 10
+    if y is not None and cfg.backend != "pallas":
+        beta, dlogdet, dfac = fused_step_coeffs(d2, w, cfg.dim,
+                                                cfg.update_mode)
+        one_m_w = 1.0 - w
+        yy = jnp.einsum("kd,ke->kde", y, y)
+        if cfg.update_mode == "exact":
+            lam_new = (state.lam - beta[:, None, None] * yy) \
+                / one_m_w[:, None, None]
+        else:
+            lam_new = state.lam / one_m_w[:, None, None] \
+                + beta[:, None, None] * yy
+        logdet_new = state.logdet + dlogdet
+        det_new = state.det * dfac
+    elif cfg.backend == "pallas":
+        from repro.kernels import ops as _kops
+        if y is not None:
+            lam_new, logdet_new, det_new = _kops.fused_apply(
+                state.lam, state.logdet, state.det, y, d2, w, cfg.dim,
+                cfg.update_mode)
+        elif cfg.update_mode == "exact":
+            lam_new, logdet_new, det_new = _kops.precision_rank1_update_exact(
+                state.lam, state.logdet, state.det, e, w, cfg.dim)
+        else:
+            lam_new, logdet_new, det_new = _kops.precision_rank2_update(
+                state.lam, state.logdet, state.det, e_star, dmu, w, cfg.dim)
+    elif cfg.update_mode == "exact":
+        lam_new, logdet_new, det_new = precision_rank1_update_exact(
+            state.lam, state.logdet, state.det, e, w, cfg.dim)
+    else:
+        lam_new, logdet_new, det_new = precision_rank2_update(
+            state.lam, state.logdet, state.det, e_star, dmu, w, cfg.dim)
+    return FIGMNState(mu=mu_new, lam=lam_new, logdet=logdet_new, det=det_new,
+                      sp=sp_new, v=v_new, active=state.active,
+                      n_created=state.n_created)
+
+
+def _create(cfg: FIGMNConfig, state: FIGMNState, x: Array,
+            d2: Array, y: Optional[Array] = None) -> FIGMNState:
+    """Algorithm 3: activate a free slot at μ = x, Λ = σ_ini⁻² I."""
+    del d2, y
+    dt = cfg.dtype
+    free = ~state.active
+    any_free = jnp.any(free)
+    # First free slot, or — pool exhausted — recycle the weakest component.
+    slot_free = jnp.argmax(free)
+    slot_weak = jnp.argmin(jnp.where(state.active, state.sp, jnp.inf))
+    slot = jnp.where(any_free, slot_free, slot_weak)
+    onehot = jax.nn.one_hot(slot, cfg.kmax, dtype=dt)
+    sigma = jnp.broadcast_to(jnp.asarray(cfg.sigma_ini, dt), (cfg.dim,))
+    lam0 = jnp.diag(1.0 / (sigma * sigma))
+    logdet0 = jnp.sum(2.0 * jnp.log(sigma))
+    sel = onehot[:, None]
+    mu_new = state.mu * (1 - sel) + x[None, :] * sel
+    lam_new = state.lam * (1 - sel[..., None]) + lam0[None] * sel[..., None]
+    return FIGMNState(
+        mu=mu_new,
+        lam=lam_new,
+        logdet=state.logdet * (1 - onehot) + logdet0 * onehot,
+        det=state.det * (1 - onehot) + jnp.exp(logdet0) * onehot,
+        sp=state.sp * (1 - onehot) + onehot,            # sp = 1
+        v=state.v * (1 - onehot) + onehot,              # v = 1
+        active=state.active | (onehot > 0),
+        n_created=state.n_created + 1,
+    )
+
+
+def prune(cfg: FIGMNConfig, state: FIGMNState) -> FIGMNState:
+    """§2.3: deactivate components with v > vmin and sp < spmin.
+
+    Priors renormalise automatically because p(j) is always computed from the
+    surviving sp mass (eq. 12).
+    """
+    remove = state.active & (state.v > cfg.vmin) & (state.sp < cfg.spmin)
+    return FIGMNState(mu=state.mu, lam=state.lam, logdet=state.logdet,
+                      det=state.det, sp=state.sp, v=state.v,
+                      active=state.active & ~remove, n_created=state.n_created)
+
+
+def learn_one(cfg: FIGMNConfig, state: FIGMNState, x: Array,
+              do_prune: bool = True) -> FIGMNState:
+    """Process one data point (Algorithm 1 body).
+
+    cfg.fused=True (default): the matvec y = Λe is computed ONCE, yields the
+    Mahalanobis gate (d² = eᵀy) AND the whole precision update (see
+    fused_step_coeffs) — 2 HBM passes over Λ per point instead of 4.
+    """
+    x = x.astype(cfg.dtype)
+    thresh = chi2_quantile(cfg.dim, 1.0 - cfg.beta).astype(cfg.dtype)
+    if cfg.fused:
+        diff = x[None, :] - state.mu                    # (K, D)
+        if cfg.backend == "pallas":
+            from repro.kernels import ops as _kops
+            y = _kops.matvec(state.lam, diff)
+        else:
+            y = jnp.einsum("kde,ke->kd", state.lam, diff)
+        d2 = jnp.einsum("kd,kd->k", diff, y)
+        accept = jnp.any(state.active & (d2 < thresh))
+        state = jax.lax.cond(
+            accept, partial(_update, y=y), _create, cfg, state, x, d2)
+    else:
+        d2 = mahalanobis_sq(state, x)
+        accept = jnp.any(state.active & (d2 < thresh))
+        state = jax.lax.cond(accept, _update, _create, cfg, state, x, d2)
+    if do_prune and cfg.spmin > 0:
+        state = prune(cfg, state)
+    return state
+
+
+@partial(jax.jit, static_argnames=("do_prune",))
+def fit(cfg: FIGMNConfig, state: FIGMNState, xs: Array,
+        do_prune: bool = True) -> FIGMNState:
+    """Single-pass fit over a stream ``xs`` of shape (N, D) via lax.scan."""
+
+    def step(s, x):
+        return learn_one(cfg, s, x, do_prune=do_prune), None
+
+    state, _ = jax.lax.scan(step, state, xs.astype(cfg.dtype))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+def covariances(state: FIGMNState) -> Array:
+    """Materialise C = Λ⁻¹ (testing/IO only — O(KD³), never on the fast path)."""
+    return jnp.linalg.inv(state.lam)
+
+
+def score_batch(cfg: FIGMNConfig, state: FIGMNState, xs: Array) -> Array:
+    """(N,) mixture log-densities (vectorised over points, no state change)."""
+    return jax.vmap(lambda x: log_likelihood(cfg, state, x))(xs)

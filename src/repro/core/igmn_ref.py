@@ -1,0 +1,137 @@
+"""Original IGMN (covariance form) — the paper's O(NKD³) baseline (§2).
+
+Maintains full covariance matrices and performs the inversion (via solve) and
+determinant computation per data point, exactly as the pre-paper algorithm
+did.  Kept as (a) the comparison baseline for the paper's Tables 2–3 timing
+experiments and (b) the ground-truth oracle for the equivalence claim: the
+paper's central validation is that both variants produce *identical* results.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, FIGMNConfig, IGMNState, chi2_quantile
+
+_LOG_2PI = 1.8378770664093453
+
+
+def init_state(cfg: FIGMNConfig) -> IGMNState:
+    k, d = cfg.kmax, cfg.dim
+    dt = cfg.dtype
+    sigma = jnp.broadcast_to(jnp.asarray(cfg.sigma_ini, dt), (d,))
+    cov0 = jnp.zeros((k, d, d), dt) + jnp.diag(sigma * sigma)[None]
+    return IGMNState(
+        mu=jnp.zeros((k, d), dt),
+        cov=cov0,
+        sp=jnp.zeros((k,), dt),
+        v=jnp.zeros((k,), dt),
+        active=jnp.zeros((k,), bool),
+        n_created=jnp.zeros((), jnp.int32),
+    )
+
+
+def mahalanobis_sq(state: IGMNState, x: Array) -> Array:
+    """(K,) distances via linear solve — the O(D³) step eq. 1 replaces."""
+    diff = x[None, :] - state.mu                                  # (K, D)
+    sol = jnp.linalg.solve(state.cov, diff[..., None])[..., 0]    # C⁻¹ diff
+    return jnp.einsum("kd,kd->k", diff, sol)
+
+
+def _log_density(cfg: FIGMNConfig, state: IGMNState, d2: Array) -> Array:
+    _, logdet = jnp.linalg.slogdet(state.cov)                     # O(KD³)
+    return -0.5 * (cfg.dim * _LOG_2PI + logdet + d2)
+
+
+def posteriors(cfg: FIGMNConfig, state: IGMNState, d2: Array) -> Array:
+    logp = _log_density(cfg, state, d2)
+    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
+    logw = jnp.where(state.active, logw, -jnp.inf)
+    logw = jnp.where(jnp.any(state.active), logw, 0.0)
+    post = jax.nn.softmax(logw)
+    return jnp.where(state.active, post, 0.0)
+
+
+def _update(cfg: FIGMNConfig, state: IGMNState, x: Array,
+            d2: Array) -> IGMNState:
+    post = posteriors(cfg, state, d2)
+    v_new = state.v + state.active.astype(cfg.dtype)
+    sp_new = state.sp + post
+    e = x[None, :] - state.mu
+    w = post / jnp.maximum(sp_new, 1e-30)
+    dmu = w[:, None] * e
+    mu_new = state.mu + dmu
+    e_star = x[None, :] - mu_new
+    if cfg.update_mode == "exact":
+        # Exact sp-weighted moment recursion (see figmn.py) — PSD-preserving.
+        cov_new = (1.0 - w)[:, None, None] * state.cov \
+            + (w * (1.0 - w))[:, None, None] * jnp.einsum("kd,ke->kde", e, e)
+    else:
+        # eq. 11 — the covariance update the paper decomposes into eqs. 16–17.
+        cov_new = (1.0 - w)[:, None, None] * state.cov \
+            + w[:, None, None] * jnp.einsum("kd,ke->kde", e_star, e_star) \
+            - jnp.einsum("kd,ke->kde", dmu, dmu)
+    return IGMNState(mu=mu_new, cov=cov_new, sp=sp_new, v=v_new,
+                     active=state.active, n_created=state.n_created)
+
+
+def _create(cfg: FIGMNConfig, state: IGMNState, x: Array,
+            d2: Array) -> IGMNState:
+    del d2
+    dt = cfg.dtype
+    free = ~state.active
+    any_free = jnp.any(free)
+    slot_free = jnp.argmax(free)
+    slot_weak = jnp.argmin(jnp.where(state.active, state.sp, jnp.inf))
+    slot = jnp.where(any_free, slot_free, slot_weak)
+    onehot = jax.nn.one_hot(slot, cfg.kmax, dtype=dt)
+    sigma = jnp.broadcast_to(jnp.asarray(cfg.sigma_ini, dt), (cfg.dim,))
+    cov0 = jnp.diag(sigma * sigma)
+    sel = onehot[:, None]
+    return IGMNState(
+        mu=state.mu * (1 - sel) + x[None, :] * sel,
+        cov=state.cov * (1 - sel[..., None]) + cov0[None] * sel[..., None],
+        sp=state.sp * (1 - onehot) + onehot,
+        v=state.v * (1 - onehot) + onehot,
+        active=state.active | (onehot > 0),
+        n_created=state.n_created + 1,
+    )
+
+
+def prune(cfg: FIGMNConfig, state: IGMNState) -> IGMNState:
+    remove = state.active & (state.v > cfg.vmin) & (state.sp < cfg.spmin)
+    return IGMNState(mu=state.mu, cov=state.cov, sp=state.sp, v=state.v,
+                     active=state.active & ~remove, n_created=state.n_created)
+
+
+def learn_one(cfg: FIGMNConfig, state: IGMNState, x: Array,
+              do_prune: bool = True) -> IGMNState:
+    x = x.astype(cfg.dtype)
+    d2 = mahalanobis_sq(state, x)
+    thresh = chi2_quantile(cfg.dim, 1.0 - cfg.beta).astype(cfg.dtype)
+    accept = jnp.any(state.active & (d2 < thresh))
+    state = jax.lax.cond(accept, _update, _create, cfg, state, x, d2)
+    if do_prune and cfg.spmin > 0:
+        state = prune(cfg, state)
+    return state
+
+
+@partial(jax.jit, static_argnames=("do_prune",))
+def fit(cfg: FIGMNConfig, state: IGMNState, xs: Array,
+        do_prune: bool = True) -> IGMNState:
+    def step(s, x):
+        return learn_one(cfg, s, x, do_prune=do_prune), None
+
+    state, _ = jax.lax.scan(step, state, xs.astype(cfg.dtype))
+    return state
+
+
+def log_likelihood(cfg: FIGMNConfig, state: IGMNState, x: Array) -> Array:
+    d2 = mahalanobis_sq(state, x)
+    logp = _log_density(cfg, state, d2)
+    logprior = jnp.log(state.sp / jnp.maximum(jnp.sum(state.sp), 1e-30) + 1e-30)
+    logjoint = jnp.where(state.active, logp + logprior, -jnp.inf)
+    return jax.scipy.special.logsumexp(logjoint)

@@ -1,0 +1,121 @@
+"""Supervised inference — conditional-mean reconstruction (§2.4 / §3 eq. 27).
+
+The IGMN predicts any subset of the joint vector from any other subset.  Given
+known elements x_i (indices ``idx_in``) it reconstructs targets x_t
+(``idx_out``) as a posterior-weighted conditional mean.
+
+Fast path (the paper's eq. 27): all quantities are extracted from the
+precision matrix Λ via the block decomposition
+
+    Λ = [[X, Y], [Z, W]]   (X: known-known, W: target-target, Z = Yᵀ)
+
+  * conditional mean      x̂_t = μ_t − W⁻¹ Z (x_i − μ_i)
+    (the paper writes Y W⁻¹; with the [known, target] block layout the
+    correctly-oriented operator is W⁻¹Z = (YW⁻¹)ᵀ by symmetry)
+  * marginal precision    C_i⁻¹ = X − Y W⁻¹ Z        (Schur complement)
+  * marginal determinant  log|C_i| = log|C| + log|W|
+    (from |C| = |C_i| · |Schur| and W = Schur⁻¹)
+
+Only W (o×o, o = #targets ≪ D) is ever inverted ⇒ O(KD²·o + Ko³) per query,
+versus the baseline's O(KD³).  For o = 1 (the paper's Weka setting) the
+"inversion" is a scalar reciprocal.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Array, FIGMNConfig, FIGMNState, IGMNState
+
+_LOG_2PI = 1.8378770664093453
+
+
+def _split_indices(dim: int, idx_out) -> Tuple[np.ndarray, np.ndarray]:
+    idx_out = np.asarray(idx_out, np.int32)
+    idx_in = np.setdiff1d(np.arange(dim, dtype=np.int32), idx_out)
+    return idx_in, idx_out
+
+
+@partial(jax.jit, static_argnames=("idx_out_t",))
+def _predict_fast(cfg: FIGMNConfig, state: FIGMNState, x_in: Array,
+                  idx_out_t: Tuple[int, ...]) -> Array:
+    idx_in, idx_out = _split_indices(cfg.dim, np.asarray(idx_out_t))
+    lam = state.lam
+    X = lam[:, idx_in[:, None], idx_in[None, :]]        # (K, i, i)
+    Y = lam[:, idx_in[:, None], idx_out[None, :]]       # (K, i, o)
+    W = lam[:, idx_out[:, None], idx_out[None, :]]      # (K, o, o)
+    Z = jnp.swapaxes(Y, -1, -2)                         # (K, o, i)
+    diff = x_in[None, :] - state.mu[:, idx_in]          # (K, i)
+
+    WinvZ = jnp.linalg.solve(W, Z)                      # (K, o, i)  o×o solve
+    xhat_j = state.mu[:, idx_out] \
+        - jnp.einsum("koi,ki->ko", WinvZ, diff)         # eq. 27 per component
+
+    # Marginal density of the known slice, from Λ blocks only.
+    prec_i = X - jnp.einsum("kio,koj->kij", Y, WinvZ)   # C_i⁻¹ (K, i, i)
+    d2 = jnp.einsum("ki,kij,kj->k", diff, prec_i, diff)
+    _, logdetW = jnp.linalg.slogdet(W)                  # o×o
+    logdet_ci = state.logdet + logdetW
+    ni = idx_in.shape[0]
+    logp = -0.5 * (ni * _LOG_2PI + logdet_ci + d2)
+    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
+    logw = jnp.where(state.active, logw, -jnp.inf)
+    post = jax.nn.softmax(jnp.where(jnp.any(state.active), logw, 0.0))
+    post = jnp.where(state.active, post, 0.0)
+    return jnp.einsum("k,ko->o", post, xhat_j)
+
+
+def predict(cfg: FIGMNConfig, state: FIGMNState, x_in: Array,
+            idx_out) -> Array:
+    """Reconstruct x[idx_out] from x_in (the remaining dims, in index order)."""
+    return _predict_fast(cfg, state, x_in,
+                         tuple(int(i) for i in np.asarray(idx_out)))
+
+
+def predict_batch(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
+                  idx_out) -> Array:
+    idx = tuple(int(i) for i in np.asarray(idx_out))
+    return jax.vmap(lambda x: _predict_fast(cfg, state, x, idx))(xs_in)
+
+
+# ---------------------------------------------------------------------------
+# Covariance-form baseline (eq. 15) — O(KD³) per query.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("idx_out_t",))
+def _predict_ref(cfg: FIGMNConfig, state: IGMNState, x_in: Array,
+                 idx_out_t: Tuple[int, ...]) -> Array:
+    idx_in, idx_out = _split_indices(cfg.dim, np.asarray(idx_out_t))
+    cov = state.cov
+    C_i = cov[:, idx_in[:, None], idx_in[None, :]]      # (K, i, i)
+    C_ti = cov[:, idx_out[:, None], idx_in[None, :]]    # (K, o, i)
+    diff = x_in[None, :] - state.mu[:, idx_in]
+
+    sol = jnp.linalg.solve(C_i, diff[..., None])[..., 0]   # O(D³)
+    xhat_j = state.mu[:, idx_out] + jnp.einsum("koi,ki->ko", C_ti, sol)
+
+    d2 = jnp.einsum("ki,ki->k", diff, sol)
+    _, logdet_ci = jnp.linalg.slogdet(C_i)                  # O(D³)
+    ni = idx_in.shape[0]
+    logp = -0.5 * (ni * _LOG_2PI + logdet_ci + d2)
+    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
+    logw = jnp.where(state.active, logw, -jnp.inf)
+    post = jax.nn.softmax(jnp.where(jnp.any(state.active), logw, 0.0))
+    post = jnp.where(state.active, post, 0.0)
+    return jnp.einsum("k,ko->o", post, xhat_j)
+
+
+def predict_ref(cfg: FIGMNConfig, state: IGMNState, x_in: Array,
+                idx_out) -> Array:
+    return _predict_ref(cfg, state, x_in,
+                        tuple(int(i) for i in np.asarray(idx_out)))
+
+
+def predict_ref_batch(cfg: FIGMNConfig, state: IGMNState, xs_in: Array,
+                      idx_out) -> Array:
+    idx = tuple(int(i) for i in np.asarray(idx_out))
+    return jax.vmap(lambda x: _predict_ref(cfg, state, x, idx))(xs_in)

@@ -1,0 +1,96 @@
+"""Mixture merging — data-parallel FIGMN at cluster scale (beyond-paper).
+
+The IGMN is sequential in its stream.  To scale across a `data`/`pod` mesh
+axis we run one FIGMN replica per data shard on its own sub-stream and
+periodically *merge* the replicas.  Merging two Gaussian mixtures is exact:
+the union of their (sp-weighted) components is the mixture of the combined
+stream up to assignment noise.  When the union exceeds the pool capacity we
+repeatedly moment-match the two most-similar components:
+
+    sp = sp_a + sp_b,   μ = (sp_a μ_a + sp_b μ_b)/sp
+    C  = Σ_i (sp_i/sp) (C_i + (μ_i-μ)(μ_i-μ)ᵀ)
+
+which preserves the first two moments of the merged pair.  This requires
+materialising C = Λ⁻¹ for the merged slots — O(D³) per merge — but merges are
+rare (every ``merge_every`` chunks) and off the per-point critical path, so
+the amortised complexity stays O(D²) per learned point.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, FIGMNConfig, FIGMNState
+
+
+def _top_k_by_sp(state: FIGMNState, kmax: int) -> FIGMNState:
+    """Keep the kmax highest-sp active slots (drop weakest on overflow)."""
+    score = jnp.where(state.active, state.sp, -jnp.inf)
+    _, idx = jax.lax.top_k(score, kmax)
+    take = lambda a: jnp.take(a, idx, axis=0)
+    return FIGMNState(
+        mu=take(state.mu), lam=take(state.lam), logdet=take(state.logdet),
+        det=take(state.det), sp=take(state.sp), v=take(state.v),
+        active=take(state.active), n_created=state.n_created)
+
+
+def union(cfg: FIGMNConfig, states: Sequence[FIGMNState]) -> FIGMNState:
+    """Exact merge: union of all replicas' components, truncated to kmax.
+
+    Posterior mass (sp) is additive across shards, so priors (eq. 12)
+    renormalise automatically.  Truncation drops the globally weakest slots
+    (they are precisely the prune candidates of §2.3).
+    """
+    cat = lambda f: jnp.concatenate([f(s) for s in states], axis=0)
+    big = FIGMNState(
+        mu=cat(lambda s: s.mu), lam=cat(lambda s: s.lam),
+        logdet=cat(lambda s: s.logdet), det=cat(lambda s: s.det),
+        sp=cat(lambda s: s.sp), v=cat(lambda s: s.v),
+        active=cat(lambda s: s.active),
+        n_created=sum(s.n_created for s in states))
+    return _top_k_by_sp(big, cfg.kmax)
+
+
+def moment_match_pair(cfg: FIGMNConfig, state: FIGMNState,
+                      ia: Array, ib: Array) -> FIGMNState:
+    """Moment-match slots ia, ib into ia; deactivate ib.  O(D³) (rare path)."""
+    sp_a, sp_b = state.sp[ia], state.sp[ib]
+    sp = sp_a + sp_b
+    wa, wb = sp_a / sp, sp_b / sp
+    mu = wa * state.mu[ia] + wb * state.mu[ib]
+    da = state.mu[ia] - mu
+    db = state.mu[ib] - mu
+    cov_a = jnp.linalg.inv(state.lam[ia])
+    cov_b = jnp.linalg.inv(state.lam[ib])
+    cov = wa * (cov_a + jnp.outer(da, da)) + wb * (cov_b + jnp.outer(db, db))
+    lam = jnp.linalg.inv(cov)
+    _, logdet = jnp.linalg.slogdet(cov)
+    ka = jax.nn.one_hot(ia, cfg.kmax, dtype=cfg.dtype)
+    kb = jax.nn.one_hot(ib, cfg.kmax, dtype=cfg.dtype)
+    upd = lambda old, new: old * (1 - ka[:, None]) + new[None, :] * ka[:, None]
+    return FIGMNState(
+        mu=upd(state.mu, mu),
+        lam=state.lam * (1 - ka[:, None, None]) + lam[None] * ka[:, None, None],
+        logdet=state.logdet * (1 - ka) + logdet * ka,
+        det=state.det * (1 - ka) + jnp.exp(logdet) * ka,
+        sp=state.sp * (1 - ka) * (1 - kb) + sp * ka,
+        v=jnp.maximum(state.v, state.v[ib] * ka),
+        active=state.active & ~(kb > 0),
+        n_created=state.n_created)
+
+
+def closest_pair(state: FIGMNState) -> tuple[Array, Array]:
+    """Most-similar active pair by symmetric squared Mahalanobis distance.
+
+    d(a,b) = (μa-μb)ᵀ(Λa+Λb)(μa-μb) — O(K²D²), cheap relative to a merge.
+    """
+    diff = state.mu[:, None, :] - state.mu[None, :, :]          # (K,K,D)
+    lam_sum = state.lam[:, None] + state.lam[None, :]           # (K,K,D,D)
+    d = jnp.einsum("abd,abde,abe->ab", diff, lam_sum, diff)
+    mask = state.active[:, None] & state.active[None, :]
+    k = state.active.shape[0]
+    d = jnp.where(mask & ~jnp.eye(k, dtype=bool), d, jnp.inf)
+    flat = jnp.argmin(d)
+    return flat // k, flat % k

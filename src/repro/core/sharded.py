@@ -1,0 +1,171 @@
+"""Distributed FIGMN — component-parallel (TP) execution via shard_map.
+
+The component pool (the K axis of every state array) is sharded across a mesh
+axis; each device owns kmax/axis_size slots.  One learning step then needs
+exactly two kinds of cross-device communication:
+
+  * posterior normalisation (eq. 3): a max + sum reduction over components
+    → one ``pmax`` + two ``psum`` of *scalars* per point,
+  * the create/update decision and create-slot election: ``psum``/``pmin``
+    of scalars.
+
+Everything O(K D²) stays local.  Per-point collective volume is O(1) scalars
+— the algorithm is embarrassingly component-parallel, which is what makes the
+FIGMN viable as an always-on telemetry model on a production mesh.
+
+Data-parallel scaling (streams sharded over `data`/`pod`) uses one replica
+per shard + periodic ``merge.union`` — see repro/core/merge.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import figmn
+from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
+
+_BIG = jnp.int32(2 ** 30)
+
+
+def state_pspec(axis: str) -> FIGMNState:
+    """PartitionSpec pytree: shard every per-component array on its K axis."""
+    return FIGMNState(
+        mu=P(axis), lam=P(axis), logdet=P(axis), det=P(axis),
+        sp=P(axis), v=P(axis), active=P(axis), n_created=P())
+
+
+def init_sharded(cfg: FIGMNConfig, mesh: Mesh, axis: str = "model"
+                 ) -> FIGMNState:
+    """Build an initial state already placed with the component sharding."""
+    state = figmn.init_state(cfg)
+    specs = state_pspec(axis)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), state, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _posteriors_global(cfg: FIGMNConfig, state: FIGMNState, d2: Array,
+                       axis: str) -> Array:
+    """p(j|x) for the local shard, normalised over ALL shards (eq. 3)."""
+    logp = figmn._log_density(cfg, state, d2)
+    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
+    logw = jnp.where(state.active, logw, -jnp.inf)
+    local_max = jnp.max(logw)
+    gmax = jax.lax.pmax(local_max, axis)
+    gmax = jnp.where(jnp.isfinite(gmax), gmax, 0.0)
+    p_un = jnp.where(state.active, jnp.exp(logw - gmax), 0.0)
+    z = jax.lax.psum(jnp.sum(p_un), axis)
+    return p_un / jnp.maximum(z, 1e-30)
+
+
+def _update_global(cfg: FIGMNConfig, state: FIGMNState, x: Array, d2: Array,
+                   axis: str) -> FIGMNState:
+    post = _posteriors_global(cfg, state, d2, axis)
+    v_new = state.v + state.active.astype(cfg.dtype)
+    sp_new = state.sp + post
+    e = x[None, :] - state.mu
+    w = post / jnp.maximum(sp_new, 1e-30)
+    dmu = w[:, None] * e
+    mu_new = state.mu + dmu
+    e_star = x[None, :] - mu_new
+    if cfg.update_mode == "exact":
+        lam_new, logdet_new, det_new = figmn.precision_rank1_update_exact(
+            state.lam, state.logdet, state.det, e, w, cfg.dim)
+    else:
+        lam_new, logdet_new, det_new = figmn.precision_rank2_update(
+            state.lam, state.logdet, state.det, e_star, dmu, w, cfg.dim)
+    return FIGMNState(mu=mu_new, lam=lam_new, logdet=logdet_new, det=det_new,
+                      sp=sp_new, v=v_new, active=state.active,
+                      n_created=state.n_created)
+
+
+def _create_global(cfg: FIGMNConfig, state: FIGMNState, x: Array, d2: Array,
+                   axis: str) -> FIGMNState:
+    """Elect exactly one global slot (first free, else weakest) and create."""
+    del d2
+    k_local = state.active.shape[0]
+    me = jax.lax.axis_index(axis)
+    free = ~state.active
+    # -- election 1: globally-first free slot ------------------------------
+    local_first = jnp.argmax(free)
+    cand = jnp.where(jnp.any(free), me * k_local + local_first, _BIG)
+    gfirst = jax.lax.pmin(cand, axis)
+    have_free = gfirst < _BIG
+    # -- election 2: globally weakest component (recycling) ----------------
+    sp_masked = jnp.where(state.active, state.sp, jnp.inf)
+    local_weak = jnp.argmin(sp_masked)
+    # encode (sp, global_idx) so pmin breaks ties deterministically
+    enc = sp_masked[local_weak] * (k_local * jax.lax.axis_size(axis)) \
+        + (me * k_local + local_weak).astype(cfg.dtype)
+    gweak_enc = jax.lax.pmin(enc, axis)
+    my_weak_enc = enc
+    # -- who creates? -------------------------------------------------------
+    mine_free = have_free & (gfirst >= me * k_local) \
+        & (gfirst < (me + 1) * k_local)
+    mine_weak = (~have_free) & (my_weak_enc == gweak_enc)
+    slot = jnp.where(have_free, gfirst - me * k_local, local_weak)
+    do_create = mine_free | mine_weak
+
+    dt = cfg.dtype
+    onehot = jax.nn.one_hot(slot, k_local, dtype=dt) \
+        * do_create.astype(dt)
+    sigma = jnp.broadcast_to(jnp.asarray(cfg.sigma_ini, dt), (cfg.dim,))
+    lam0 = jnp.diag(1.0 / (sigma * sigma))
+    logdet0 = jnp.sum(2.0 * jnp.log(sigma))
+    sel = onehot[:, None]
+    return FIGMNState(
+        mu=state.mu * (1 - sel) + x[None, :] * sel,
+        lam=state.lam * (1 - sel[..., None]) + lam0[None] * sel[..., None],
+        logdet=state.logdet * (1 - onehot) + logdet0 * onehot,
+        det=state.det * (1 - onehot) + jnp.exp(logdet0) * onehot,
+        sp=state.sp * (1 - onehot) + onehot,
+        v=state.v * (1 - onehot) + onehot,
+        active=state.active | (onehot > 0),
+        # psum(do_create) == 1 ⇒ every replica increments identically.
+        n_created=state.n_created
+        + jax.lax.psum(do_create.astype(jnp.int32), axis),
+    )
+
+
+def _learn_one_local(cfg: FIGMNConfig, state: FIGMNState, x: Array,
+                     axis: str) -> FIGMNState:
+    x = x.astype(cfg.dtype)
+    d2 = figmn.mahalanobis_sq(state, x)
+    thresh = chi2_quantile(cfg.dim, 1.0 - cfg.beta).astype(cfg.dtype)
+    local_acc = jnp.any(state.active & (d2 < thresh))
+    # Uniform predicate on every device ⇒ cond branches cannot diverge.
+    accept = jax.lax.psum(local_acc.astype(jnp.int32), axis) > 0
+    state = jax.lax.cond(accept,
+                         partial(_update_global, axis=axis),
+                         partial(_create_global, axis=axis),
+                         cfg, state, x, d2)
+    if cfg.spmin > 0:
+        state = figmn.prune(cfg, state)
+    return state
+
+
+def fit_sharded(cfg: FIGMNConfig, state: FIGMNState, xs: Array, mesh: Mesh,
+                axis: str = "model") -> FIGMNState:
+    """Single-pass fit with the component pool sharded over ``axis``.
+
+    xs: (N, D) replicated stream.  Returns the sharded final state.
+    """
+    axis_size = mesh.shape[axis]
+    if cfg.kmax % axis_size:
+        raise ValueError(f"kmax={cfg.kmax} not divisible by |{axis}|={axis_size}")
+
+    specs = state_pspec(axis)
+
+    def local_fit(state, xs):
+        def step(s, x):
+            return _learn_one_local(cfg, s, x, axis), None
+        state, _ = jax.lax.scan(step, state, xs.astype(cfg.dtype))
+        return state
+
+    fn = jax.shard_map(local_fit, mesh=mesh,
+                       in_specs=(specs, P()), out_specs=specs,
+                       check_vma=False)
+    return jax.jit(fn)(state, xs)

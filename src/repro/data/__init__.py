@@ -1,0 +1,2 @@
+"""repro.data — deterministic synthetic pipelines (token streams for LM
+training, GMM streams reproducing the paper's datasets)."""

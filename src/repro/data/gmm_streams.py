@@ -1,0 +1,61 @@
+"""Synthetic datasets reproducing the paper's Table 1 shapes (§4).
+
+Real UCI/MNIST/CIFAR downloads are unavailable offline; the paper's timing
+and scaling claims (Tables 2–3) depend only on (N, D, K), and its accuracy
+claim (Table 4) is *parity between the two IGMN variants*, which any
+labelled dataset exercises.  Generators are deterministic in (name, seed).
+
+  gaussian_classes — class-conditional Gaussians with random means/scales
+                     (stands in for the UCI tabular sets and image subsets)
+  two_spirals      — the classic interleaved-spirals benchmark (named in
+                     Table 1), genuinely non-linear
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.configs.figmn_paper import TABLE1, PaperDataset
+
+
+def two_spirals(n: int, noise: float = 0.05, seed: int = 0
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    m = n // 2
+    theta = np.sqrt(rng.uniform(0, 1, m)) * 3 * np.pi
+    r = theta / (3 * np.pi)
+    x1 = np.stack([r * np.cos(theta), r * np.sin(theta)], 1)
+    x2 = -x1
+    x = np.concatenate([x1, x2]) + rng.normal(0, noise, (2 * m, 2))
+    y = np.concatenate([np.zeros(m), np.ones(m)]).astype(np.int32)
+    idx = rng.permutation(2 * m)
+    return x[idx].astype(np.float32), y[idx]
+
+
+def gaussian_classes(n: int, d: int, k: int, seed: int = 0,
+                     sep: float = 3.0) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    means = rng.normal(0, sep, (k, d))
+    scales = rng.uniform(0.5, 1.5, (k, d))
+    y = rng.integers(0, k, n)
+    x = means[y] + rng.normal(0, 1, (n, d)) * scales[y]
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def load(name: str, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    spec = next(s for s in TABLE1 if s.name == name)
+    if name == "twospirals":
+        return two_spirals(spec.n, seed=seed)
+    return gaussian_classes(spec.n, spec.d, spec.n_classes, seed=seed)
+
+
+def train_test_split(x: np.ndarray, y: np.ndarray, fold: int = 0
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
+    """2-fold CV exactly as §4."""
+    n = x.shape[0]
+    half = n // 2
+    if fold == 0:
+        return x[:half], y[:half], x[half:], y[half:]
+    return x[half:], y[half:], x[:half], y[:half]

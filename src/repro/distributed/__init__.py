@@ -1,0 +1,2 @@
+"""repro.distributed — mesh construction, logical sharding rules, gradient
+compression collectives, and HLO collective-bytes analysis."""

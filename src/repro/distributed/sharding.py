@@ -1,0 +1,131 @@
+"""Logical-axis sharding: one rules table maps logical tensor axes to mesh
+axes; models annotate activations with ``constrain`` and parameter specs are
+derived from the same vocabulary.
+
+Physical mesh axes:
+  pod    — slow inter-pod links (DCN/ICI-over-optical), data parallel
+  data   — intra-pod data parallel + FSDP parameter sharding
+  model  — tensor parallel (heads / mlp / vocab / experts)
+
+Logical axes used across the model zoo:
+
+  batch      → ("pod", "data")     activations' batch dim
+  seq        → None (default) or "model" for sequence-parallel prefill
+  embed      → None                 residual-stream D (replicated)
+  heads      → "model"              attention heads (TP)
+  kv_heads   → "model" if divisible, dropped otherwise (GQA replication)
+  mlp        → "model"              FFN hidden
+  vocab      → "model"              embedding/output vocab
+  experts    → "model"              MoE expert banks (EP)
+  fsdp       → "data"               parameter FSDP dim (applied to D axes)
+  layers     → None                 stacked-layer leading axis
+
+A rule resolving to a mesh axis is silently dropped for a given tensor when
+the dim size does not divide the axis size — this is exactly the GQA
+kv<tp replication fallback and keeps one rules table valid for all 10 archs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "fsdp": "data",
+    "layers": None,
+    "kv_seq": None,
+    "state": None,
+}
+
+_ctx = threading.local()
+
+
+def _get() -> Tuple[Optional[Mesh], Dict[str, Axis]]:
+    return getattr(_ctx, "mesh", None), getattr(_ctx, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None):
+    """Activate a mesh + logical rules for model tracing."""
+    old = (getattr(_ctx, "mesh", None), getattr(_ctx, "rules", DEFAULT_RULES))
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _ctx.mesh, _ctx.rules = mesh, merged
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = old
+
+
+def _mesh_axes(mesh: Mesh, axis: Axis) -> Tuple[str, ...]:
+    if axis is None:
+        return ()
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    return tuple(a for a in names if a in mesh.shape)
+
+
+def resolve_spec(logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> P:
+    """Logical names → PartitionSpec under the active mesh/rules.
+
+    If ``shape`` is given, any axis whose dim does not divide the mesh-axis
+    product is dropped (replicated) — the GQA/expert fallback.
+    """
+    mesh, rules = _get()
+    if mesh is None:
+        return P()
+    out = []
+    for i, name in enumerate(logical):
+        axes = _mesh_axes(mesh, rules.get(name)) if name else ()
+        if shape is not None and axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if shape[i] % size != 0:
+                axes = ()
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh, _ = _get()
+    if mesh is None:
+        return x
+    spec = resolve_spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None
+                   ) -> Optional[NamedSharding]:
+    mesh, _ = _get()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(logical, shape))
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _get()[0]

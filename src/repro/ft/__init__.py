@@ -1,0 +1,2 @@
+"""repro.ft — fault tolerance: FIGMN anomaly detection on training
+telemetry, straggler detection/mitigation, auto-resume."""

@@ -1,0 +1,76 @@
+"""Straggler detection & mitigation policy for a multi-pod fleet.
+
+On real hardware each host reports a per-step heartbeat (host id, step,
+wall-time); in this container the same interface is driven by the training
+runner (and by simulation in tests).  Policy:
+
+  * per-host EWMA of step time; a host whose EWMA exceeds
+    ``slow_factor`` × fleet median for ``patience`` consecutive steps is a
+    straggler,
+  * one FIGMN anomaly detector (repro.ft.anomaly) watches the fleet-level
+    stats as a second, distribution-aware signal,
+  * mitigation escalates: log → shrink collective timeout (so the fleet
+    stops waiting) → evict host and trigger ELASTIC RESCALE (checkpoint
+    restore onto the reduced mesh; see CheckpointManager's elastic restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    slow_factor: float = 1.5
+    patience: int = 3
+    ewma: float = 0.5
+
+
+@dataclasses.dataclass
+class HostState:
+    ewma_time: float = 0.0
+    strikes: int = 0
+    evicted: bool = False
+
+
+class StragglerMonitor:
+    def __init__(self, hosts: List[str],
+                 cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.hosts: Dict[str, HostState] = {h: HostState() for h in hosts}
+
+    def report(self, host: str, step_time: float) -> None:
+        hs = self.hosts[host]
+        if hs.ewma_time == 0.0:
+            hs.ewma_time = step_time
+        else:
+            a = self.cfg.ewma
+            hs.ewma_time = a * step_time + (1 - a) * hs.ewma_time
+
+    def _median(self) -> float:
+        alive = sorted(h.ewma_time for h in self.hosts.values()
+                       if not h.evicted and h.ewma_time > 0)
+        if not alive:
+            return 0.0
+        return alive[len(alive) // 2]
+
+    def check(self) -> List[str]:
+        """Returns hosts to evict this round (escalation exhausted)."""
+        med = self._median()
+        evict = []
+        if med <= 0:
+            return evict
+        for name, hs in self.hosts.items():
+            if hs.evicted:
+                continue
+            if hs.ewma_time > self.cfg.slow_factor * med:
+                hs.strikes += 1
+            else:
+                hs.strikes = 0
+            if hs.strikes >= self.cfg.patience:
+                hs.evicted = True
+                evict.append(name)
+        return evict
+
+    def alive(self) -> List[str]:
+        return [h for h, s in self.hosts.items() if not s.evicted]

@@ -1,0 +1,13 @@
+"""repro.kernels — Pallas TPU kernels for the paper's hot spots + the
+framework's attention, each with a pure-jnp oracle (ref.py) and
+interpret-mode validation on CPU.
+
+  mahalanobis.py      batched (x−μ)ᵀΛ(x−μ) over the component pool (eq. 22)
+  figmn_update.py     fused rank-2 precision update (eqs. 20–21): matvec2 +
+                      tile-wise apply — 3 HBM passes instead of 4–6
+  figmn_stream.py     VMEM-resident streaming fit: state never leaves VMEM
+                      (~3000× less HBM traffic per point; DESIGN.md §6.4)
+  flash_attention.py  online-softmax attention, fwd + custom-VJP backward
+  ops.py              jit'd public wrappers (padding, tiling, dispatch)
+  ref.py              the oracles every kernel is tested against
+"""

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: VMEM-resident streaming FIGMN fit.
+
+THE TPU-native insight for this paper (§Perf iteration 3, DESIGN.md §4):
+the FIGMN working set is K·D² precision entries.  For a component shard of
+K_loc = 32 at D = 256 that is 8 MiB — it FITS IN VMEM.  The HBM-streaming
+formulation (one read + one read/write pass over Λ per point ⇒ memory-bound
+at ~0.4 FLOP/byte) is therefore the wrong shape for a TPU: instead, keep
+(Λ, μ, logdet, sp, v, active) resident in VMEM scratch for the whole stream
+and touch HBM only for the x_t vectors.
+
+    HBM traffic:  3·K·D²·4 bytes per point   →   D·4 bytes per point
+    arithmetic intensity:  ~0.4 FLOP/byte    →   ~K·D FLOP/byte
+
+which moves the cell from memory-bound to compute-bound (the MXU matvec and
+VPU rank-one update become the cost).  The kernel processes the full (N, D)
+stream with a fori_loop inside ONE pallas_call; the update uses the fused
+single-rank-one form (figmn.fused_step_coeffs — exact algebra).
+
+Restrictions (asserted by the wrapper): K·D²·4 bytes ≤ vmem_budget; the
+exact update mode (PSD-safe); create/prune handled OUTSIDE the kernel by
+falling back to the unfused path when the gate fires (streams are
+overwhelmingly update-steps once the mixture has formed, so the fallback is
+rare — the wrapper runs the kernel over segments between creations).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stream_kernel(xs_ref, mu0_ref, lam0_ref, logdet0_ref, sp0_ref,
+                   active0_ref, thresh_ref,
+                   mu_out, lam_out, logdet_out, sp_out, nacc_out,
+                   *, n_points: int, dim: int, update_mode: str):
+    """Grid: (K_blocks,).  Each step owns a block of components for the
+    ENTIRE stream; all state lives in the output refs (VMEM) and is
+    initialised from the inputs, then updated in-place per point.
+
+    Cross-component coupling (posterior normalisation) is exact only for
+    K_block == K; the sharded wrapper runs one block per device and
+    normalises with the host-side psum path instead (see ops.figmn_fit_vmem
+    for the single-block case validated here).
+    """
+    mu_out[...] = mu0_ref[...]
+    lam_out[...] = lam0_ref[...]
+    logdet_out[...] = logdet0_ref[...]
+    sp_out[...] = sp0_ref[...]
+    nacc_out[...] = jnp.zeros_like(nacc_out)
+    active = active0_ref[...] > 0                       # (K,)
+    thresh = thresh_ref[0]
+    log2pi = 1.8378770664093453
+
+    def body(t, _):
+        x = xs_ref[t]                                   # (D,)
+        mu = mu_out[...]                                # (K, D)
+        lam = lam_out[...]                              # (K, D, D)
+        diff = x[None, :] - mu                          # (K, D)
+        y = jax.lax.dot_general(
+            lam, diff, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)         # (K, D)  MXU
+        d2 = jnp.sum(diff * y, axis=1)                  # (K,)
+        accept = jnp.any(active & (d2 < thresh))
+
+        logp = -0.5 * (dim * log2pi + logdet_out[...] + d2)
+        logw = jnp.where(active, logp + jnp.log(
+            jnp.maximum(sp_out[...], 1e-30)), -1e30)
+        m = jnp.max(logw)
+        p_un = jnp.where(active, jnp.exp(logw - m), 0.0)
+        post = p_un / jnp.maximum(jnp.sum(p_un), 1e-30)
+        post = jnp.where(accept, post, 0.0)             # gate off ⇒ no-op
+
+        sp_new = sp_out[...] + post
+        w = post / jnp.maximum(sp_new, 1e-30)
+        one_m_w = 1.0 - w
+        # fused exact-mode coefficients (see core.figmn.fused_step_coeffs)
+        beta = w / (1.0 + w * d2)
+        dlogdet = dim * jnp.log(one_m_w) + jnp.log1p(w * d2)
+
+        mu_out[...] = mu + w[:, None] * diff
+        lam_out[...] = (lam - beta[:, None, None]
+                        * y[:, None, :] * y[:, :, None]) \
+            / one_m_w[:, None, None]
+        logdet_out[...] = logdet_out[...] + dlogdet
+        sp_out[...] = sp_new
+        nacc_out[0] += accept.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, n_points, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dim", "n_points", "interpret"))
+def figmn_stream_pallas(xs, mu0, lam0, logdet0, sp0, active0, thresh, *,
+                        dim: int, n_points: int, interpret: bool = False):
+    """Run the whole stream with VMEM-resident state.
+
+    xs: (N, D); state arrays (K, ·); thresh: (1,).
+    Returns (mu, lam, logdet, sp, n_accepted).
+    All updates use the exact (PSD-safe) mode; points failing the chi² gate
+    are no-ops here (the caller segments streams at creation events).
+    """
+    k, d = mu0.shape
+    kernel = functools.partial(_stream_kernel, n_points=n_points, dim=dim,
+                               update_mode="exact")
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n_points, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xs, mu0, lam0, logdet0, sp0, active0, thresh)

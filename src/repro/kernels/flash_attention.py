@@ -1,0 +1,323 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-tiled).
+
+Why it exists here: the roofline baselines put EVERY train/prefill cell in
+the memory-bound regime, dominated by the f32 (T × S) attention-logit
+tensors that XLA materialises in HBM between the QK matmul, masking,
+softmax and PV matmul.  Flash attention keeps the (Bq × Bk) logit tile in
+VMEM and carries the online-softmax (m, l, acc) across KV tiles, so HBM
+traffic drops from O(T·S) to O(T·d + S·d·T/Bq) — the classic >10×
+memory-term cut for long sequences (§Perf iteration on the train cells).
+
+Kernel shape: MHA with equal q/kv heads — the wrapper expands GQA KV heads
+to the local q heads BEFORE the kernel (cheap: per-device q heads ≤ kv
+heads after tensor parallelism at our configs).  Causal and sliding-window
+masks are computed from position vectors inside the tile; the window may be
+a traced scalar (per-layer SWA patterns).
+
+Grid: (B·H, n_q_blocks, n_kv_blocks); the kv axis is the sequential minor
+axis, accumulating into VMEM scratch; outputs are finalised on the last kv
+step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(qpos_ref, kpos_ref, win_ref, q_ref, k_ref, v_ref,
+                  o_ref, lse_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                  causal: bool, n_kv: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (Bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (Bk, d)
+    v = v_ref[0]                                        # (Bk, d)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # (Bq, Bk)
+
+    qpos = qpos_ref[0]                                  # (Bq,) i32
+    kpos = kpos_ref[0]                                  # (Bk,)
+    dpos = qpos[:, None] - kpos[None, :]
+    mask = kpos[None, :] >= 0                           # padded kv rows
+    if causal:
+        mask &= dpos >= 0
+    win = win_ref[0]
+    mask &= (win <= 0) | (dpos < win)
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])                # (Bq, Bk)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+        lse_ref[0] = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _flash_core(h, causal, bq, bk, interpret, qf, kf, vf, q_pos, k_pos,
+                win_arr):
+    out, _ = _flash_fwd_flat(qf, kf, vf, q_pos, k_pos, win_arr, h,
+                             causal=causal, bq=bq, bk=bk,
+                             interpret=interpret)
+    return out
+
+
+def _flash_core_fwd(h, causal, bq, bk, interpret, qf, kf, vf, q_pos, k_pos,
+                    win_arr):
+    out, lse = _flash_fwd_flat(qf, kf, vf, q_pos, k_pos, win_arr, h,
+                               causal=causal, bq=bq, bk=bk,
+                               interpret=interpret)
+    return out, (qf, kf, vf, q_pos, k_pos, win_arr, out, lse)
+
+
+def _flash_core_bwd(h, causal, bq, bk, interpret, res, g):
+    import numpy as _np
+    dq, dk, dv = _flash_bwd_flat(res, g, h, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    qf, kf, vf, q_pos, k_pos, win_arr = res[:6]
+    f0 = lambda x: _np.zeros(x.shape, jax.dtypes.float0)
+    return dq, dk, dv, f0(q_pos), f0(k_pos), f0(win_arr)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, q_pos, k_pos, window, *, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False):
+    """q: (B,T,H,d); k,v: (B,S,H,d) (same H — GQA expanded by caller);
+    q_pos: (B,T) i32; k_pos: (B,S) i32 (−1 ⇒ masked slot);
+    window: scalar (traced ok; ≤0 ⇒ full).  → (B,T,H,d).
+    Differentiable: custom VJP with recomputed-tile backward kernels."""
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    pad_t = (-t) % bq
+    pad_s = (-s) % bk
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_t)))
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_s)), constant_values=-1)
+    tp, sp = t + pad_t, s + pad_s
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, tp, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sp, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sp, d)
+    win_arr = jnp.asarray(window, jnp.int32).reshape(1)
+    out = _flash_core(h, causal, bq, bk, interpret, qf, kf, vf,
+                      q_pos, k_pos, win_arr)
+    out = out.reshape(b, h, tp, d).transpose(0, 2, 1, 3)
+    return out[:, :t]
+
+
+# =========================================================================
+# Backward kernels (custom VJP): recompute p per tile from the saved
+# logsumexp; dq accumulates over kv tiles, dk/dv over q tiles.
+# =========================================================================
+
+def _flash_bwd_dq_kernel(qpos_ref, kpos_ref, win_ref, q_ref, k_ref, v_ref,
+                         do_ref, lse_ref, delta_ref, dq_ref, dq_scr, *,
+                         scale: float, causal: bool, n_kv: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)                 # (Bq, d)
+    lse = lse_ref[0]                                   # (Bq,)
+    delta = delta_ref[0]                               # (Bq,) rowsum(dO·O)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    qpos, kpos = qpos_ref[0], kpos_ref[0]
+    dpos = qpos[:, None] - kpos[None, :]
+    mask = kpos[None, :] >= 0
+    if causal:
+        mask &= dpos >= 0
+    win = win_ref[0]
+    mask &= (win <= 0) | (dpos < win)
+    p = jnp.where(mask, jnp.exp(logits - lse[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    dq_scr[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(j == n_kv - 1)
+    def _fin():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(qpos_ref, kpos_ref, win_ref, q_ref, k_ref, v_ref,
+                          do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+                          dk_scr, dv_scr, *, scale: float, causal: bool,
+                          n_q: int):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    qpos, kpos = qpos_ref[0], kpos_ref[0]
+    dpos = qpos[:, None] - kpos[None, :]
+    mask = kpos[None, :] >= 0
+    if causal:
+        mask &= dpos >= 0
+    win = win_ref[0]
+    mask &= (win <= 0) | (dpos < win)
+    p = jnp.where(mask, jnp.exp(logits - lse[:, None]), 0.0)   # (Bq, Bk)
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                     # (Bk, d)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale             # (Bk, d)
+
+    @pl.when(i == n_q - 1)
+    def _fin():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _flash_fwd_flat(qf, kf, vf, q_pos, k_pos, win_arr, h, *, causal,
+                    bq, bk, interpret):
+    bh, tp, d = qf.shape
+    sp = kf.shape[1]
+    n_q, n_kv = tp // bq, sp // bk
+    kernel = functools.partial(_flash_kernel,
+                               scale=float(1.0 / (d ** 0.5)),
+                               causal=causal, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b_, i, j: (b_ // h, i)),
+            pl.BlockSpec((1, bk), lambda b_, i, j: (b_ // h, j)),
+            pl.BlockSpec((1,), lambda b_, i, j: (0,)),
+            pl.BlockSpec((1, bq, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b_, i, j: (b_, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, bq), lambda b_, i, j: (b_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, tp, d), qf.dtype),
+            jax.ShapeDtypeStruct((bh, tp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, k_pos, win_arr, qf, kf, vf)
+
+
+def _flash_bwd_flat(res, g, h, *, causal, bq, bk, interpret):
+    qf, kf, vf, q_pos, k_pos, win_arr, out, lse = res
+    do = g
+    bh, tp, d = qf.shape
+    sp = kf.shape[1]
+    n_q, n_kv = tp // bq, sp // bk
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                     # (bh, tp)
+    # dq: grid (bh, i, j)
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel,
+                          scale=float(1.0 / (d ** 0.5)),
+                          causal=causal, n_kv=n_kv),
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b_, i, j: (b_ // h, i)),
+            pl.BlockSpec((1, bk), lambda b_, i, j: (b_ // h, j)),
+            pl.BlockSpec((1,), lambda b_, i, j: (0,)),
+            pl.BlockSpec((1, bq, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, bq), lambda b_, i, j: (b_, i)),
+            pl.BlockSpec((1, bq), lambda b_, i, j: (b_, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b_, i, j: (b_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tp, d), qf.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q_pos, k_pos, win_arr, qf, kf, vf, do, lse, delta)
+    # dk/dv: grid (bh, j, i)
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel,
+                          scale=float(1.0 / (d ** 0.5)),
+                          causal=causal, n_q=n_q),
+        grid=(bh, n_kv, n_q),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b_, j, i: (b_ // h, i)),
+            pl.BlockSpec((1, bk), lambda b_, j, i: (b_ // h, j)),
+            pl.BlockSpec((1,), lambda b_, j, i: (0,)),
+            pl.BlockSpec((1, bq, d), lambda b_, j, i: (b_, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b_, j, i: (b_, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b_, j, i: (b_, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b_, j, i: (b_, i, 0)),
+            pl.BlockSpec((1, bq), lambda b_, j, i: (b_, i)),
+            pl.BlockSpec((1, bq), lambda b_, j, i: (b_, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda b_, j, i: (b_, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b_, j, i: (b_, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sp, d), kf.dtype),
+            jax.ShapeDtypeStruct((bh, sp, d), vf.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, d), jnp.float32),
+                        pltpu.VMEM((bk, d), jnp.float32)],
+        interpret=interpret,
+    )(q_pos, k_pos, win_arr, qf, kf, vf, do, lse, delta)
+    return dq, dk, dv

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and record memory / cost / collective analyses.
+
+THE two lines above must execute before any other import — jax locks the
+device count at first initialisation.  Do not move them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+  PYTHONPATH=src python -m repro.launch.dryrun --figmn   # paper-core cell
+
+Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+(read by benchmarks/roofline.py for §Roofline of EXPERIMENTS.md).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import (SHAPES, ShapeSpec, cache_max_len,
+                                  cell_applicable, input_specs)
+from repro.distributed import hlo_analysis
+from repro.distributed.sharding import mesh_rules
+from repro.launch import specs as specmod
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import optimizer as optim
+from repro.train import trainer
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+
+def _mem_dict(ma) -> Dict[str, float]:
+    if ma is None:
+        return {}
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+    return {f: float(getattr(ma, f, 0) or 0) for f in fields}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg: ModelConfig = None) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the analysis record."""
+    cfg = cfg or configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": int(np.prod(mesh.devices.shape)),
+    }
+    t0 = time.time()
+    with mesh_rules(mesh):
+        pspecs = transformer.param_pspecs(cfg)
+        params_abs = transformer.abstract_params(cfg)
+        param_sh = specmod.to_named(pspecs, mesh)
+        sp = input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            tcfg = trainer.TrainConfig()
+            step = trainer.make_train_step(cfg, tcfg)
+            opt_abs = jax.eval_shape(optim.init, params_abs)
+            opt_sh = optim.AdamWState(
+                step=NamedSharding(mesh, P()), m=param_sh, v=param_sh)
+            bspec = specmod.to_named(
+                specmod.batch_pspecs(cfg, sp["batch"], mesh), mesh)
+
+            def fn(params, opt, batch):
+                with mesh_rules(mesh):
+                    return step(params, opt, batch)
+
+            lowered = jax.jit(
+                fn, in_shardings=(param_sh, opt_sh, bspec),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, sp["batch"])
+        elif shape.kind == "prefill":
+            cache_abs = sp["cache"]
+            cache_sh = specmod.to_named(
+                specmod.cache_pspecs(cfg, cache_abs, mesh), mesh)
+            bspec = specmod.to_named(
+                specmod.batch_pspecs(cfg, sp["batch"], mesh), mesh)
+
+            def fn(params, batch, cache):
+                with mesh_rules(mesh):
+                    return transformer.prefill(params, cfg, batch, cache)
+
+            lowered = jax.jit(
+                fn, in_shardings=(param_sh, bspec, cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),
+            ).lower(params_abs, sp["batch"], cache_abs)
+        else:                                        # decode / serve_step
+            cache_abs = sp["cache"]
+            cache_sh = specmod.to_named(
+                specmod.cache_pspecs(cfg, cache_abs, mesh), mesh)
+            dp = specmod._dp(mesh, shape.global_batch)
+            tok_sh = NamedSharding(mesh, P(dp, None))
+
+            if "positions3" in sp:
+                def fn(params, token, cache, positions3):
+                    with mesh_rules(mesh):
+                        return transformer.decode_step(
+                            params, cfg, token, cache, positions3=positions3)
+
+                p3_sh = NamedSharding(mesh, P(None, dp, None))
+                lowered = jax.jit(
+                    fn, in_shardings=(param_sh, tok_sh, cache_sh, p3_sh),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(2,),
+                ).lower(params_abs, sp["token"], cache_abs,
+                        sp["positions3"])
+            else:
+                def fn(params, token, cache):
+                    with mesh_rules(mesh):
+                        return transformer.decode_step(params, cfg, token,
+                                                       cache)
+
+                lowered = jax.jit(
+                    fn, in_shardings=(param_sh, tok_sh, cache_sh),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(2,),
+                ).lower(params_abs, sp["token"], cache_abs)
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+        record["memory"] = _mem_dict(compiled.memory_analysis())
+        ca = compiled.cost_analysis() or {}
+        record["xla_cost"] = {k: float(v) for k, v in ca.items()
+                              if k in ("flops", "bytes accessed")}
+        txt = compiled.as_text()
+        record["hlo"] = hlo_analysis.analyze(txt)
+        record["n_params"] = int(sum(
+            np.prod(l.shape) for l in jax.tree.leaves(params_abs)))
+        record["n_active_params"] = cfg.n_active_params()
+        record["seq_len"] = shape.seq_len
+        record["global_batch"] = shape.global_batch
+        record["kind"] = shape.kind
+    return record
+
+
+def lower_figmn(multi_pod: bool, dim: int = 256, kmax: int = 512
+                ) -> Dict[str, Any]:
+    """The paper-core cell: component-sharded FIGMN fit step on the mesh."""
+    from repro.core import figmn, sharded
+    from repro.core.types import FIGMNConfig, FIGMNState
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": "figmn-core", "shape": f"d{dim}_k{kmax}",
+              "mesh": "x".join(str(s) for s in mesh.devices.shape),
+              "n_devices": int(np.prod(mesh.devices.shape))}
+    cfg = FIGMNConfig(kmax=kmax, dim=dim, beta=0.1, delta=1.0,
+                      sigma_ini=np.ones((dim,), np.float32))
+    state_abs = jax.eval_shape(lambda: figmn.init_state(cfg))
+    spec = sharded.state_pspec("model")
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                            is_leaf=lambda x: isinstance(x, P))
+    n_stream = 1024
+    xs = jax.ShapeDtypeStruct((n_stream, dim), jnp.float32)
+
+    def fit(state, xs):
+        return sharded.fit_sharded(cfg, state, xs, mesh, "model")
+
+    t0 = time.time()
+    lowered = jax.jit(fit, in_shardings=(state_sh, NamedSharding(mesh, P())),
+                      out_shardings=state_sh,
+                      donate_argnums=(0,)).lower(state_abs, xs)
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+    record["memory"] = _mem_dict(compiled.memory_analysis())
+    record["hlo"] = hlo_analysis.analyze(compiled.as_text())
+    record["kind"] = "figmn_fit"
+    record["seq_len"] = n_stream
+    record["global_batch"] = 1
+    record["n_params"] = kmax * dim * dim
+    record["n_active_params"] = kmax * dim * dim
+    return record
+
+
+def save_record(rec: Dict[str, Any], out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec.get('mesh', 'skip')}.json"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--figmn", action="store_true")
+    ap.add_argument("--multi-pod", choices=("no", "yes", "both"),
+                    default="no")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    pods = {"no": (False,), "yes": (True,), "both": (False, True)}[
+        args.multi_pod]
+    jobs = []
+    if args.figmn:
+        for mp in pods:
+            jobs.append(("figmn", None, mp))
+    elif args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in SHAPES:
+                for mp in pods:
+                    jobs.append((arch, shape, mp))
+    else:
+        for mp in pods:
+            jobs.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for arch, shape, mp in jobs:
+        tag = f"{arch}/{shape or '-'}/{'2pod' if mp else '1pod'}"
+        try:
+            rec = lower_figmn(mp) if arch == "figmn" \
+                else lower_cell(arch, shape, mp)
+            path = save_record(rec, args.out)
+            if "skipped" in rec:
+                print(f"[SKIP] {tag}: {rec['skipped']}")
+            else:
+                mem = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+                print(f"[OK]   {tag}: compile={rec['compile_s']}s "
+                      f"args/dev={mem:.2f}GiB "
+                      f"flops/dev={rec['hlo']['flops']:.3g} "
+                      f"coll/dev={rec['hlo']['coll_bytes_total']:.3g}B "
+                      f"→ {os.path.basename(path)}")
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

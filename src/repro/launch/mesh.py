@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods of 256 chips (16×16 ICI torus); multi-pod
+adds a leading `pod` axis over the slower inter-pod links.  Constructed as
+a FUNCTION so importing this module never touches jax device state (the
+dry-run must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh for tests / small runs (e.g. (1, 1) on CPU)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def host_device_mesh(model_parallel: int = 1) -> Mesh:
+    """Whatever this host has, as (data, model)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return make_mesh((n // model_parallel, model_parallel),
+                     ("data", "model"))

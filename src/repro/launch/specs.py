@@ -1,0 +1,125 @@
+"""Sharding specs for batches, caches and step functions (dry-run + train).
+
+Parameters get their specs from ``transformer.param_pspecs`` (logical axes).
+Batch/cache trees are sharded here by path-name rules:
+
+  batch tokens/targets (B, S)        → (dp, None)
+  positions3 (3, B, S)               → (None, dp, None)
+  pixel/frame embeds (B, S', D)      → (dp, None, None)
+  kv caches (L, B, S, KV, hd)        → (None, dp, None, model?, None)
+  MLA latent (L, B, S, r)            → (None, dp, None, None)
+  mamba conv/state (L, B, ..., di,·) → (None, dp, ..., model?)
+  mLSTM states (G, M, B, H, ...)     → (None, None, dp, ...)
+  idx (B,)                           → (dp,)
+
+where dp = ("pod", "data") and `model?` applies only when divisible
+(the GQA kv<tp replication fallback).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _dp(mesh: Mesh, dim: int = 0) -> Tuple[str, ...]:
+    """Data-parallel axes; if ``dim`` is given, only as many axes as the
+    dim size divides (batch=1 long-context decode ⇒ fully replicated)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if dim <= 0:
+        return axes
+    while axes:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size == 0:
+            return axes
+        axes = axes[1:]
+    return ()
+
+
+def _maybe(mesh: Mesh, axis: str, dim: int):
+    if axis in mesh.shape and dim % mesh.shape[axis] == 0:
+        return axis
+    return None
+
+
+def batch_pspecs(cfg: ModelConfig, batch: Dict[str, Any], mesh: Mesh
+                 ) -> Dict[str, P]:
+    out = {}
+    for k, v in batch.items():
+        if k == "positions3":
+            dp = _dp(mesh, v.shape[1])
+            out[k] = P(None, dp, None)
+        elif v.ndim >= 2:
+            dp = _dp(mesh, v.shape[0])
+            out[k] = P(dp, *([None] * (v.ndim - 1)))
+        else:
+            out[k] = P(_dp(mesh, v.shape[0]))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh) -> Any:
+
+    def spec_for(path: str, leaf) -> P:
+        nd = leaf.ndim
+        last = path.split("/")[-1]
+        if last == "idx":
+            return P(_dp(mesh, leaf.shape[0]))
+        if path.startswith("states/m"):      # mLSTM (G, M, B, ...)
+            dp = _dp(mesh, leaf.shape[2])
+            return P(None, None, dp, *([None] * (nd - 3)))
+        if path.startswith("states/s"):      # sLSTM (G, B, D)
+            dp = _dp(mesh, leaf.shape[1])
+            return P(None, dp, *([None] * (nd - 2)))
+        if last in ("k", "v"):               # (L, B, S, KV, hd)
+            if nd == 5:
+                kv_ax = _maybe(mesh, "model", leaf.shape[3])
+                # GQA kv < tp: shard the SEQUENCE axis over `model` instead
+                # of replicating the cache (decode attention over an
+                # S-sharded cache costs one tiny logits all-gather; a
+                # replicated 32k cache costs HBM we don't have).
+                seq_ax = None if kv_ax else _maybe(mesh, "model",
+                                                   leaf.shape[2])
+                return P(None, _dp(mesh, leaf.shape[1]), seq_ax, kv_ax,
+                         None)
+            return P(*([None] * nd))
+        if last in ("ckv", "krope"):         # (L, B, S, r) — MLA latent
+            return P(None, _dp(mesh, leaf.shape[1]),
+                     _maybe(mesh, "model", leaf.shape[2]), None)
+        if last == "pos":                    # (L, B, S) — match k/v S axis
+            kv_sharded = cfg.n_kv_heads % max(
+                mesh.shape.get("model", 1), 1) == 0 and cfg.family != "mla"
+            seq_ax = None if kv_sharded else _maybe(mesh, "model",
+                                                    leaf.shape[2])
+            return P(None, _dp(mesh, leaf.shape[1]), seq_ax)
+        if last == "enc_positions":          # (B, S_enc)
+            return P(_dp(mesh, leaf.shape[0]), None)
+        if path.startswith("mamba"):
+            dp = _dp(mesh, leaf.shape[1])
+            if path.endswith("/0"):          # conv state (L, B, K-1, di)
+                return P(None, dp, None,
+                         _maybe(mesh, "model", leaf.shape[3]))
+            if path.endswith("/1"):          # ssm state (L, B, di, N)
+                return P(None, dp,
+                         _maybe(mesh, "model", leaf.shape[2]), None)
+            return P(*([None] * nd))
+        if nd >= 2:
+            return P(None, _dp(mesh, leaf.shape[1]), *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        specs.append(spec_for(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

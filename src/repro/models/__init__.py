@@ -1,0 +1,1 @@
+"""repro.models — config-driven model zoo for the 10 assigned architectures."""

@@ -1,0 +1,98 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Keys/values are generated from a low-rank compressed latent c_kv (kv_lora
+dims) plus a small shared RoPE key (qk_rope dims); the decode cache stores
+only (c_kv ‖ k_rope) per token — (kv_lora + rope) floats instead of
+2·H·head_dim — the architecture's whole point at 32k+ contexts.
+
+Prefill uses the *materialized* form (k, v expanded; big MXU matmuls).
+Decode uses the *absorbed* form: q is folded through W_uk once
+(H·nope·kv_lora FLOPs) so attention scores are taken directly against the
+compressed cache, and the attention context is folded through W_uv — per
+token per layer this is O(H·T·(kv_lora+rope)) instead of
+O(T·kv_lora·H·nope) for naive re-expansion of the whole cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+
+
+def mla_params_shapes(cfg) -> Dict[str, tuple]:
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": (d, ql), "q_norm": (ql,),
+        "w_uq": (ql, h, nope + rope),
+        "w_dkv": (d, kvl), "kv_norm": (kvl,),
+        "w_uk": (kvl, h, nope),
+        "w_uv": (kvl, h, vh),
+        "w_kr": (d, rope),
+        "w_o": (h, vh, d),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    cq = layers.rms_norm(jnp.einsum("btd,dq->btq", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("btq,qhe->bthe", cq, p["w_uq"])
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = layers.apply_rope(q[..., cfg.qk_nope_dim:], positions,
+                               cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def compress_kv(p, x, cfg, positions) -> Tuple[Array, Array]:
+    """→ (c_kv (B,T,kvl), k_rope (B,T,rope)) — exactly what the cache holds."""
+    ckv = layers.rms_norm(jnp.einsum("btd,dq->btq", x, p["w_dkv"]),
+                          p["kv_norm"])
+    k_rope = jnp.einsum("btd,dr->btr", x, p["w_kr"])
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions,
+                               cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_attention_full(p, x, cfg, positions, ckv, k_rope, k_pos,
+                       k_valid=None) -> Array:
+    """Materialized path (train/prefill).  ckv/k_rope cover the k-side."""
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    k_nope = jnp.einsum("btq,qhe->bthe", ckv, p["w_uk"])
+    v = jnp.einsum("btq,qhe->bthe", ckv, p["w_uv"])
+    b, s = ckv.shape[:2]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, s, cfg.n_heads, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    attn = layers.attention(q, k, v, positions, k_pos, causal=True,
+                            k_valid=k_valid)
+    return jnp.einsum("bthv,hvd->btd", attn, p["w_o"])
+
+
+def mla_attention_absorbed(p, x, cfg, positions, ckv_cache, krope_cache,
+                           k_pos, k_valid) -> Array:
+    """Absorbed decode path.  x: (B,1,D); caches: (B,S,·)."""
+    q_nope, q_rope = _project_q(p, x, cfg, positions)     # (B,1,H,·)
+    # fold q through W_uk: q̃ (B,1,H,kvl)
+    q_lat = jnp.einsum("bthn,qhn->bthq", q_nope, p["w_uk"])
+    scores = jnp.einsum("bthq,bsq->bhts", q_lat.astype(jnp.float32),
+                        ckv_cache.astype(jnp.float32)) \
+        + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                     krope_cache.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(
+        cfg.qk_nope_dim + cfg.qk_rope_dim, jnp.float32))
+    scores = scores * scale
+    mask = (k_pos[:, None, :] <= positions[:, :, None])   # (B,1,S) causal
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bsq->bthq", probs,
+                     ckv_cache.astype(jnp.float32))       # (B,1,H,kvl)
+    attn = jnp.einsum("bthq,qhv->bthv", ctx.astype(x.dtype), p["w_uv"])
+    return jnp.einsum("bthv,hvd->btd", attn, p["w_o"])

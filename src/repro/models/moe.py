@@ -1,0 +1,224 @@
+"""Mixture-of-Experts FFN with expert parallelism over the `model` mesh axis.
+
+Three execution paths, chosen by token count and mesh:
+
+* ``alltoall`` (training / prefill): tokens are additionally split over the
+  `model` axis (sequence sharding), each device routes its local tokens into
+  a capacity-bounded (E, C, D) dispatch buffer via a sort-based scatter (no
+  (tokens × E × C) one-hot einsum — that tensor is ~200× the activations at
+  our shapes), then one ``all_to_all`` exchanges the expert↔token dims so
+  each device runs only its E/m local experts, and a second ``all_to_all``
+  brings results home.  This is the GShard/DeepSpeed-EP pattern expressed as
+  jax collectives inside shard_map.
+
+* ``psum`` (decode): token counts are tiny (one per sequence), so dispatch
+  buffers and a2a latency dominate.  Instead every device computes its local
+  experts' contribution for all (replicated) tokens, masked by the routing,
+  and one ``psum`` over `model` combines.  FLOPs are wasted on unrouted
+  (token, expert) pairs, but decode is weight-streaming-bound, not
+  FLOPs-bound, so this is the faster schedule.
+
+* ``dense`` (single-device smoke tests): plain masked einsum over all
+  experts.
+
+Experts are padded to a multiple of the `model` axis size (router logits of
+padding experts pinned to −inf) so any expert count maps onto any mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+Array = jax.Array
+
+
+def pad_experts(n_experts: int, model_parallel: int) -> int:
+    return -(-n_experts // max(model_parallel, 1)) * max(model_parallel, 1)
+
+
+# ---------------------------------------------------------------------------
+# Routing (local, sort-based dispatch)
+# ---------------------------------------------------------------------------
+
+def route(x: Array, w_router: Array, n_real: int, top_k: int
+          ) -> Tuple[Array, Array]:
+    """x: (N, D) → (gates (N, k) f32, expert ids (N, k) i32)."""
+    logits = jnp.einsum("nd,de->ne", x, w_router,
+                        preferred_element_type=jnp.float32)
+    e_pad = w_router.shape[1]
+    if n_real < e_pad:
+        mask = jnp.arange(e_pad) < n_real
+        logits = jnp.where(mask[None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def dispatch_indices(eidx: Array, n_experts: int, capacity: int):
+    """Sort-based positions: for each (token, k) slot, its position within
+    its expert's capacity buffer.  Returns (dest (N*k,), keep (N*k,), order).
+    Dropped tokens (beyond capacity) get dest == E*C (an overflow row)."""
+    flat_e = eidx.reshape(-1)
+    nk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    seg_start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(nk, dtype=jnp.int32) - seg_start[sorted_e].astype(jnp.int32)
+    keep_sorted = pos < capacity
+    dest_sorted = jnp.where(keep_sorted,
+                            sorted_e * capacity + pos, n_experts * capacity)
+    inv = jnp.argsort(order, stable=True)
+    return dest_sorted[inv], keep_sorted[inv], order
+
+
+def _expert_ffn(buf: Array, w_gate: Array, w_up: Array, w_down: Array,
+                act: str) -> Array:
+    """buf: (E_l, C', D); weights (E_l, D, F) / (E_l, F, D)."""
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    if act == "gelu":
+        h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(buf.dtype) * u
+    else:
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Local (per-device) dispatch → compute → combine, used by both shard paths
+# ---------------------------------------------------------------------------
+
+def _dispatch_local(x2: Array, gates: Array, eidx: Array, e_pad: int,
+                    capacity: int) -> Tuple[Array, Array, Array]:
+    n, d = x2.shape
+    k = eidx.shape[1]
+    dest, keep, _ = dispatch_indices(eidx, e_pad, capacity)
+    src_tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    buf = jnp.zeros((e_pad * capacity + 1, d), x2.dtype)
+    buf = buf.at[dest].set(x2[src_tok], mode="drop")
+    return buf[:-1].reshape(e_pad, capacity, d), dest, keep
+
+
+def _combine_local(out_buf: Array, gates: Array, dest: Array, keep: Array,
+                   n: int, d: int) -> Array:
+    k = gates.shape[1]
+    flat = out_buf.reshape(-1, d)
+    flat = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], axis=0)
+    y = flat[jnp.minimum(dest, flat.shape[0] - 1)]
+    live = (keep & (dest < flat.shape[0] - 1))[:, None]
+    y = y * live.astype(y.dtype)
+    y = y.reshape(n, k, d) * gates[..., None].astype(y.dtype)
+    return jnp.sum(y, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Public paths
+# ---------------------------------------------------------------------------
+
+def moe_dense(p: Dict[str, Array], x: Array, n_real: int, top_k: int,
+              act: str = "silu") -> Array:
+    """All-experts masked einsum — smoke tests / 1 device.  x: (B,T,D)."""
+    b, t, d = x.shape
+    x2 = x.reshape(-1, d)
+    gates, eidx = route(x2, p["w_router"], n_real, top_k)
+    e_pad = p["w_router"].shape[1]
+    onehot = jax.nn.one_hot(eidx, e_pad, dtype=jnp.float32)      # (N,k,E)
+    comb = jnp.einsum("nk,nke->ne", gates, onehot).astype(x.dtype)
+    h = _expert_ffn(jnp.broadcast_to(x2[None], (e_pad, x2.shape[0], d)),
+                    p["w_gate"], p["w_up"], p["w_down"], act)    # (E,N,D)
+    y = jnp.einsum("ne,end->nd", comb, h)
+    return y.reshape(b, t, d)
+
+
+def moe_alltoall_local(p_local: Dict[str, Array], x_local: Array,
+                       n_real: int, top_k: int, capacity_factor: float,
+                       act: str, axis: str = "model") -> Array:
+    """shard_map body.  x_local: (B_l, T_l, D) — tokens already split over
+    data AND model axes.  p_local experts: (E/m, D, F); router replicated."""
+    m = jax.lax.axis_size(axis)
+    b, t, d = x_local.shape
+    n = b * t
+    e_pad = p_local["w_router"].shape[1]
+    x2 = x_local.reshape(n, d)
+    gates, eidx = route(x2, p_local["w_router"], n_real, top_k)
+    capacity = max(int(capacity_factor * n * top_k / e_pad), 1)
+    buf, dest, keep = _dispatch_local(x2, gates, eidx, e_pad, capacity)
+    # (E, C, D) → (E/m, m·C, D): expert dim scattered, token dim gathered.
+    buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1,
+                             tiled=True)
+    out = _expert_ffn(buf, p_local["w_gate"], p_local["w_up"],
+                      p_local["w_down"], act)
+    out = jax.lax.all_to_all(out, axis, split_axis=1, concat_axis=0,
+                             tiled=True)
+    y = _combine_local(out, gates, dest, keep, n, d)
+    return y.reshape(b, t, d)
+
+
+def moe_psum_local(p_local: Dict[str, Array], x_local: Array,
+                   n_real: int, top_k: int, act: str,
+                   axis: str = "model") -> Array:
+    """shard_map decode body.  x_local: (B_l, T, D) replicated over `axis`;
+    every device computes its local experts densely and psums."""
+    m = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    b, t, d = x_local.shape
+    e_pad = p_local["w_router"].shape[1]
+    e_local = p_local["w_gate"].shape[0]
+    x2 = x_local.reshape(-1, d)
+    gates, eidx = route(x2, p_local["w_router"], n_real, top_k)
+    # combine weight for each LOCAL expert: (N, E_l)
+    local_ids = me * e_local + jnp.arange(e_local)
+    onehot = (eidx[..., None] == local_ids[None, None, :])
+    comb = jnp.einsum("nk,nke->ne", gates,
+                      onehot.astype(jnp.float32)).astype(x_local.dtype)
+    h = _expert_ffn(jnp.broadcast_to(x2[None], (e_local, x2.shape[0], d)),
+                    p_local["w_gate"], p_local["w_up"], p_local["w_down"],
+                    act)                                          # (E_l,N,D)
+    y = jnp.einsum("ne,end->nd", comb, h)
+    y = jax.lax.psum(y, axis)
+    return y.reshape(b, t, d)
+
+
+def moe_ffn(p: Dict[str, Array], x: Array, *, n_real: int, top_k: int,
+            capacity_factor: float, act: str, decode: bool) -> Array:
+    """Dispatching wrapper: picks dense / alltoall / psum by mesh & shape.
+
+    Expert weights in ``p`` are globally shaped (E_pad, D, F); sharding of
+    the expert axis over `model` comes from the parameter specs, and the
+    shard_map in_specs below slice them accordingly.
+    """
+    mesh = shd.active_mesh()
+    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
+        return moe_dense(p, x, n_real, top_k, act)
+    m = mesh.shape["model"]
+    b, t, d = x.shape
+    expert_specs = {
+        "w_router": P(), "w_gate": P("model"), "w_up": P("model"),
+        "w_down": P("model"),
+    }
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not decode and t % m == 0 and t // m >= 1:
+        fn = jax.shard_map(
+            functools.partial(moe_alltoall_local, n_real=n_real,
+                              top_k=top_k, capacity_factor=capacity_factor,
+                              act=act),
+            mesh=mesh,
+            in_specs=(expert_specs, P(data_axes, "model")),
+            out_specs=P(data_axes, "model"),
+            check_vma=False)
+        return fn(p, x)
+    fn = jax.shard_map(
+        functools.partial(moe_psum_local, n_real=n_real, top_k=top_k,
+                          act=act),
+        mesh=mesh,
+        in_specs=(expert_specs, P(data_axes)),
+        out_specs=P(data_axes),
+        check_vma=False)
+    return fn(p, x)

@@ -1,0 +1,134 @@
+"""Selective state-space (Mamba-1 style) block — the SSM branch of Hymba.
+
+Diagonal selective SSM:   h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t,
+                          y_t = C_tᵀ h_t + D_skip x_t
+with input-dependent Δ, B, C and a depthwise causal conv front-end.
+
+TPU mapping: the recurrence is a *chunked scan* — an outer ``lax.scan`` over
+sequence chunks carries the (B, d_inner, N) state, an inner associative scan
+parallelises within the chunk, and the (B, Tc, d_inner, N) intermediate is
+consumed inside the chunk (only y leaves), keeping transient VMEM/HBM
+pressure to one chunk.  ``jax.checkpoint`` on the chunk body bounds backward
+memory the same way.
+
+Decode is the O(1)-per-token recurrent step on carried (conv_state, h).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+CHUNK = 32
+
+
+def _ssm_chunk(h0: Array, a: Array, b: Array, c: Array) -> Tuple[Array, Array]:
+    """One chunk of the diagonal recurrence.
+
+    h0: (B, C, N);  a, b: (B, Tc, C, N) decay / input;  c: (B, Tc, N).
+    Returns (h_last, y) with y: (B, Tc, C).
+    """
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b2 + a2 * b1
+
+    aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+    h = bb + aa * h0[:, None]                       # (B, Tc, C, N)
+    y = jnp.einsum("btcn,btn->btc", h, c)
+    return h[:, -1], y
+
+
+def ssm_scan(a: Array, b: Array, c: Array, h0: Array,
+             chunk: int = CHUNK) -> Tuple[Array, Array]:
+    """Full-sequence scan.  a, b: (B, T, C, N); c: (B, T, N); h0: (B, C, N).
+
+    Returns (y: (B, T, C), h_final).
+    """
+    B, T, Ch, N = a.shape
+    if T % chunk:
+        pad = chunk - T % chunk
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    Tp = a.shape[1]
+    a = a.reshape(B, Tp // chunk, chunk, Ch, N).swapaxes(0, 1)
+    b = b.reshape(B, Tp // chunk, chunk, Ch, N).swapaxes(0, 1)
+    c = c.reshape(B, Tp // chunk, chunk, N).swapaxes(0, 1)
+
+    body = jax.checkpoint(lambda h, abc: _ssm_chunk(h, *abc))
+    h_final, ys = jax.lax.scan(lambda h, abc: body(h, abc), h0, (a, b, c))
+    y = ys.swapaxes(0, 1).reshape(B, Tp, Ch)[:, :T]
+    return y, h_final
+
+
+def causal_conv1d(x: Array, w: Array, state: Optional[Array] = None
+                  ) -> Tuple[Array, Array]:
+    """Depthwise causal conv.  x: (B, T, C); w: (C, K).
+
+    state: (B, K-1, C) carried context for streaming; returns (y, new_state).
+    """
+    B, T, C = x.shape
+    K = w.shape[1]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)        # (B, T+K-1, C)
+    y = jnp.zeros((B, T, C), jnp.float32)
+    for i in range(K):                              # K is tiny (4)
+        y = y + xx[:, i:i + T].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return y.astype(x.dtype), xx[:, -(K - 1):] if K > 1 else state
+
+
+def mamba_params_shapes(d_model: int, d_inner: int, n_state: int,
+                        conv_k: int, dt_rank: int) -> Dict[str, tuple]:
+    return {
+        "w_in": (d_model, 2 * d_inner),
+        "w_conv": (d_inner, conv_k),
+        "w_xproj": (d_inner, dt_rank + 2 * n_state),
+        "w_dt": (dt_rank, d_inner),
+        "b_dt": (d_inner,),
+        "a_log": (d_inner, n_state),
+        "d_skip": (d_inner,),
+        "w_out": (d_inner, d_model),
+    }
+
+
+def mamba_forward(p: Dict[str, Array], x: Array,
+                  state: Optional[Tuple[Array, Array]] = None,
+                  dt_rank: int = 0, n_state: int = 16
+                  ) -> Tuple[Array, Tuple[Array, Array]]:
+    """x: (B, T, D) → (y (B, T, D), (conv_state, h_state)).
+
+    state = (conv_state (B, K-1, di), h (B, di, N)); None = zeros (training).
+    """
+    B, T, _ = x.shape
+    di = p["w_out"].shape[0]
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)               # (B, T, di) each
+    conv_state = state[0] if state is not None else None
+    xi, conv_state = causal_conv1d(xi, p["w_conv"], conv_state)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("btc,ce->bte", xi, p["w_xproj"])
+    dt_in, Bt, Ct = jnp.split(
+        proj, [dt_rank, dt_rank + n_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rc->btc", dt_in, p["w_dt"]).astype(jnp.float32)
+        + p["b_dt"].astype(jnp.float32))            # (B, T, di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))    # (di, N)
+    a = jnp.exp(dt[..., None] * A[None, None])      # (B, T, di, N)
+    b = (dt * xi.astype(jnp.float32))[..., None] \
+        * Bt.astype(jnp.float32)[:, :, None, :]     # (B, T, di, N)
+
+    h0 = state[1] if state is not None \
+        else jnp.zeros((B, di, n_state), jnp.float32)
+    y, h = ssm_scan(a, b, Ct.astype(jnp.float32), h0)
+    y = y + xi.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("btc,cd->btd", y, p["w_out"])
+    return out, (conv_state, h)

@@ -1,0 +1,271 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, sequential) — for the xlstm-1.3b architecture.
+
+mLSTM recurrence per head (states C: (dk, dv), n: (dk,), m: scalar):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    f'  = exp(f̃_t + m_{t-1} − m_t),  i' = exp(ĩ_t − m_t)
+    C_t = f' C_{t-1} + i' k_t v_tᵀ,   n_t = f' n_{t-1} + i' k_t
+    y_t = (C_tᵀ q_t) / max(|n_tᵀ q_t|, exp(−m_t))
+
+Training runs the *chunkwise* form: an outer lax.scan over chunks carries
+(C, n, m); within a chunk the contributions are computed in parallel with an
+(L×L) masked gate matrix in log space (exact, stabilized by the running max
+— the same trick the official CUDA kernels implement).  Decode is the O(1)
+per-token step.  All state math in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MLSTM_CHUNK = 64
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_chunk(carry, qkvif):
+    """One chunk.  carry: C (B,H,dk,dv), n (B,H,dk), m (B,H).
+
+    q,k: (B,L,H,dk); v: (B,L,H,dv); i_g,f_g: (B,L,H) raw gate pre-acts.
+    Exact chunkwise-parallel evaluation of the recurrence above.
+    """
+    C0, n0, m0 = carry
+    q, k, v, i_g, f_g = qkvif
+    orig_dtype = v.dtype
+    B, L, H, dk = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32) * scale
+    v = v.astype(jnp.float32)
+    i_g = i_g.astype(jnp.float32)
+    f_g = jax.nn.log_sigmoid(f_g.astype(jnp.float32))   # log f ∈ (−inf, 0)
+
+    F = jnp.cumsum(f_g, axis=1)                          # (B,L,H) Σ log f
+    # pairwise log decay D[t,τ] = F_t − F_τ + ĩ_τ  (τ ≤ t)
+    Dmat = F[:, :, None] - F[:, None, :] + i_g[:, None, :, :]   # (B,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dmat = jnp.where(tri[None, :, :, None], Dmat, _NEG)
+    m_intra = jnp.max(Dmat, axis=2)                      # (B,L,H)
+    m_inter = m0[:, None] + F                            # (B,L,H)
+    m_t = jnp.maximum(m_inter, m_intra)
+
+    # §Perf iteration (xlstm): the (B,L,L,H) pairwise tensors dominate the
+    # memory term (they scale ∝ chunk — measured: growing the chunk does NOT
+    # help).  With bf16 model inputs, keep them bf16 with f32 einsum
+    # accumulation: ~2× less pairwise traffic; the stabilised weights
+    # (|w_pair| ≤ 1) tolerate bf16.  f32 inputs keep the exact f32 path
+    # (used by the step-vs-chunk equivalence tests).
+    pair_dt = jnp.bfloat16 if orig_dtype == jnp.bfloat16 else jnp.float32
+    w_pair = jnp.exp(Dmat - m_t[:, :, None]).astype(pair_dt)
+    w_carry = jnp.exp(m_inter - m_t)                     # (B,L,H)
+
+    qk = jnp.einsum("blhd,bthd->blth", q, k,
+                    preferred_element_type=pair_dt)       # (B,L,L,H)
+    y_num = jnp.einsum("blth,blth,bthv->blhv", qk, w_pair,
+                       v.astype(pair_dt),
+                       preferred_element_type=jnp.float32) \
+        + w_carry[..., None] * jnp.einsum("bhdv,blhd->blhv", C0, q)
+    n_t = jnp.einsum("blth,bthd->blhd", w_pair,
+                     k.astype(pair_dt),
+                     preferred_element_type=jnp.float32) \
+        + w_carry[..., None] * n0[:, None]
+    denom = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", n_t, q)),
+                        jnp.exp(-m_t))
+    y = y_num / denom[..., None]                         # (B,L,H,dv)
+
+    # carry out (stabilized at m_out)
+    m_out = m_t[:, -1]
+    w_last = jnp.exp(Dmat[:, -1] - m_out[:, None])       # decay τ→L (B,L,H)
+    wc_last = jnp.exp(m_inter[:, -1] - m_out)            # (B,H)
+    C_new = wc_last[..., None, None] * C0 \
+        + jnp.einsum("blh,blhd,blhv->bhdv", w_last, k, v)
+    n_new = wc_last[..., None] * n0 \
+        + jnp.einsum("blh,blhd->bhd", w_last, k)
+    return (C_new, n_new, m_out), y
+
+
+def mlstm_scan(q, k, v, i_g, f_g, state=None, chunk: int = MLSTM_CHUNK):
+    """q,k: (B,T,H,dk); v: (B,T,H,dv); gates: (B,T,H).  → y (B,T,H,dv)."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = (jnp.zeros((B, H, dk, dv), jnp.float32),
+                 jnp.zeros((B, H, dk), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    pad = (-T) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_g = jnp.pad(i_g, ((0, 0), (0, pad), (0, 0)), constant_values=_NEG)
+        f_g = jnp.pad(f_g, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+    Tp = q.shape[1]
+    rs = lambda a: a.reshape(B, Tp // chunk, chunk, *a.shape[2:]).swapaxes(0, 1)
+    body = jax.checkpoint(mlstm_chunk)
+    state, ys = jax.lax.scan(body, state,
+                             (rs(q), rs(k), rs(v), rs(i_g), rs(f_g)))
+    y = ys.swapaxes(0, 1).reshape(B, Tp, H, dv)[:, :T]
+    return y, state
+
+
+def mlstm_step(q, k, v, i_g, f_g, state):
+    """Single decode step.  q,k: (B,H,dk); v: (B,H,dv); gates (B,H)."""
+    C0, n0, m0 = state
+    dk = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32) * scale
+    v = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_g.astype(jnp.float32))
+    i_g = i_g.astype(jnp.float32)
+    m_t = jnp.maximum(logf + m0, i_g)
+    fp = jnp.exp(logf + m0 - m_t)
+    ip = jnp.exp(i_g - m_t)
+    C = fp[..., None, None] * C0 + ip[..., None, None] \
+        * k[..., :, None] * v[..., None, :]
+    n = fp[..., None] * n0 + ip[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_t))
+    y = jnp.einsum("bhdv,bhd->bhv", C, q) / denom[..., None]
+    return y, (C, n, m_t)
+
+
+def mlstm_params_shapes(d_model: int, d_inner: int, n_heads: int
+                        ) -> Dict[str, tuple]:
+    dh = d_inner // n_heads
+    return {
+        "w_up": (d_model, 2 * d_inner),
+        "w_conv": (d_inner, 4),
+        "w_q": (d_inner, n_heads, dh),
+        "w_k": (d_inner, n_heads, dh),
+        "w_v": (d_inner, n_heads, dh),
+        "w_gates": (d_model, 2 * n_heads),
+        "b_gates": (2 * n_heads,),
+        "w_down": (n_heads, dh, d_model),
+    }
+
+
+def mlstm_forward(p: Dict[str, Array], x: Array, state=None, decode=False,
+                  chunk: int = MLSTM_CHUNK):
+    """Full mLSTM block.  x: (B, T, D) → (y, new_state).
+
+    state = (conv_state (B,3,di), (C, n, m)).
+    """
+    from repro.models import ssm as _ssm
+    B, T, D = x.shape
+    H = p["w_q"].shape[1]
+    up = jnp.einsum("btd,de->bte", x, p["w_up"])
+    u, z = jnp.split(up, 2, axis=-1)                     # (B,T,di)
+    conv_state = state[0] if state is not None else None
+    uc, conv_state = _ssm.causal_conv1d(u, p["w_conv"], conv_state)
+    uc = jax.nn.silu(uc.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("btc,chd->bthd", uc, p["w_q"])
+    k = jnp.einsum("btc,chd->bthd", uc, p["w_k"])
+    v = jnp.einsum("btc,chd->bthd", u, p["w_v"])
+    # NOTE (§Perf, refuted): constraining q/k/v's head-dim onto `model`
+    # (heads=4 < TP=16) was measured to RAISE collective bytes 29% — the
+    # pairwise-einsum psums outweigh the removed activation all-gathers.
+    # Left unconstrained; GSPMD's gathers are the cheaper schedule here.
+    gates = jnp.einsum("btd,dg->btg", x, p["w_gates"]) \
+        + p["b_gates"].astype(x.dtype)
+    i_g, f_g = jnp.split(gates, 2, axis=-1)              # (B,T,H)
+    inner = state[1] if state is not None else None
+    if decode:
+        y, inner = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                              i_g[:, 0], f_g[:, 0], inner)
+        y = y[:, None]                                   # (B,1,H,dv)
+    else:
+        y, inner = mlstm_scan(q, k, v, i_g, f_g, inner, chunk=chunk)
+    y = y.astype(x.dtype) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype).reshape(B, T, H, -1)
+    out = jnp.einsum("bthv,hvd->btd", y, p["w_down"])
+    return out, (conv_state, inner)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_params_shapes(d_model: int, n_heads: int) -> Dict[str, tuple]:
+    dh = d_model // n_heads
+    return {
+        "w_zifo": (d_model, 4 * d_model),
+        "r_zifo": (4, n_heads, dh, dh),
+        "b_zifo": (4 * d_model,),
+        "w_out": (d_model, d_model),
+    }
+
+
+def slstm_step(p, x_t, state, n_heads: int):
+    """x_t: (B, D); state = (h, c, n, m) each (B, D) f32."""
+    h, c, n, m = state
+    B, D = x_t.shape
+    dh = D // n_heads
+    zifo = jnp.einsum("bd,de->be", x_t, p["w_zifo"]).astype(jnp.float32) \
+        + p["b_zifo"].astype(jnp.float32)
+    hh = h.reshape(B, n_heads, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh,
+                     p["r_zifo"].astype(jnp.float32))    # (4,B,H,dh)
+    rec = rec.reshape(4, B, D)
+    z_, i_, f_, o_ = jnp.split(zifo, 4, axis=-1)
+    z_ = jnp.tanh(z_ + rec[0])
+    i_ = i_ + rec[1]
+    f_ = f_ + rec[2]
+    o_ = jax.nn.sigmoid(o_ + rec[3])
+    logf = jax.nn.log_sigmoid(f_)
+    m_t = jnp.maximum(logf + m, i_)
+    fp = jnp.exp(logf + m - m_t)
+    ip = jnp.exp(i_ - m_t)
+    c_t = fp * c + ip * z_
+    n_t = jnp.maximum(fp * n + ip, 1e-6)
+    h_t = o_ * (c_t / n_t)
+    return (h_t, c_t, n_t, m_t)
+
+
+SLSTM_CHUNK = 256
+
+
+def slstm_forward(p: Dict[str, Array], x: Array, state=None,
+                  n_heads: int = 4, chunk: int = SLSTM_CHUNK):
+    """x: (B, T, D) → (y, state).  Sequential scan (sLSTM is inherently so).
+
+    §Perf iteration (xlstm): a flat scan over T makes reverse-mode save the
+    four f32 (B, D) states for EVERY step (~17 GB/device at 4k/16 — the
+    measured dominant traffic).  Chunking the scan and checkpointing each
+    chunk saves only the per-chunk carries and recomputes inside the chunk
+    on backward: T/chunk × (B,D) saves instead of T ×.
+    """
+    B, T, D = x.shape
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = (z, z, z, jnp.full((B, D), -1e30, jnp.float32))
+
+    def step(s, x_t):
+        s = slstm_step(p, x_t, s, n_heads)
+        return s, s[0].astype(x.dtype)
+
+    @jax.checkpoint
+    def chunk_body(s, xc):
+        return jax.lax.scan(step, s, xc)
+
+    n_full, rem = divmod(T, chunk)
+    xt = x.swapaxes(0, 1)                                # (T, B, D)
+    parts = []
+    if n_full:
+        xs = xt[:n_full * chunk].reshape(n_full, chunk, B, D)
+        state, hs = jax.lax.scan(chunk_body, state, xs)
+        parts.append(hs.reshape(n_full * chunk, B, D))
+    if rem:
+        # remainder processed unpadded — padded zero-steps would otherwise
+        # keep evolving the recurrent state
+        state, hs_r = chunk_body(state, xt[n_full * chunk:])
+        parts.append(hs_r)
+    y = jnp.concatenate(parts, axis=0).swapaxes(0, 1)    # (B, T, D)
+    return jnp.einsum("btd,de->bte", y, p["w_out"]), state

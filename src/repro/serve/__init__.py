@@ -1,0 +1,1 @@
+"""repro.serve — batched serving: prefill/decode steps + request engine."""

@@ -1,0 +1,131 @@
+"""Batched serving engine (continuous-batching-lite).
+
+A fixed pool of B decode slots shares one stacked KV cache.  Requests are
+admitted into free slots (their prompt prefilled into the slot's cache
+region), every engine tick advances ALL active slots by one token (one
+``decode_step`` call — the batched serve_step the dry-run lowers), finished
+slots (EOS or max_tokens) are freed for the queue.
+
+Slot-wise prefill uses a per-slot prefill + cache scatter; at production
+scale prefill and decode run on disjoint replicas (disaggregated serving) —
+here both share the model to keep the example runnable on CPU.
+
+Optionally an FIGMN head (repro.core.head) scores pooled decoder states for
+OOD/novelty per request — the paper's density model as a serving feature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_tokens: int = 16
+    eos_id: int = -1
+    out_tokens: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, n_slots: int,
+                 max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = transformer.init_cache(cfg, n_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self.last_token = np.zeros((n_slots, 1), np.int32)
+        self._decode = jax.jit(
+            lambda p, t, c: transformer.decode_step(p, cfg, t, c))
+        # single-slot prefill jitted per prompt length bucket
+        self._prefill_cache: Dict[int, Callable] = {}
+
+    def submit(self, req: Request) -> None:
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _prefill_fn(self, s: int):
+        if s not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(params, tokens, cache):
+                return transformer.prefill(params, cfg, {"tokens": tokens},
+                                           cache)
+            self._prefill_cache[s] = jax.jit(fn)
+        return self._prefill_cache[s]
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # per-slot prefill on a fresh single-row cache, then scatter
+            # into the shared stacked cache at this slot.
+            row_cache = transformer.init_cache(self.cfg, 1, self.max_len)
+            fn = self._prefill_fn(len(req.prompt))
+            logits, row_cache = fn(self.params,
+                                   jnp.asarray(req.prompt)[None], row_cache)
+            self.cache = jax.tree.map(
+                lambda full, row: _scatter_slot(full, row, slot),
+                self.cache, row_cache)
+            # shared scalar idx: keep the max (slots track pos via cache
+            # "pos" arrays; idx is per-engine monotone — see note below)
+            tok = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(tok)
+            self.last_token[slot, 0] = tok
+            self.slot_req[slot] = req
+
+    def tick(self) -> int:
+        """One engine step: admit + decode all active slots.  Returns the
+        number of active slots stepped."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.last_token), self.cache)
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot in active:
+            req = self.slot_req[slot]
+            tok = int(next_tok[slot])
+            req.out_tokens.append(tok)
+            self.last_token[slot, 0] = tok
+            if tok == req.eos_id or len(req.out_tokens) >= req.max_tokens:
+                req.done = True
+                self.slot_req[slot] = None
+        return len(active)
+
+    def run(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.tick()
+
+
+def _scatter_slot(full, row, slot: int):
+    """Write a single-row cache pytree into batch position ``slot``.
+
+    Handles leading-layer-stacked arrays ((L, B, ...) vs (L, 1, ...)),
+    plain batched arrays ((B, ...) vs (1, ...)) and scalars (idx)."""
+    if full.ndim == 0:
+        return jnp.maximum(full, row)           # shared monotone idx
+    if full.ndim == row.ndim and row.shape[0] == 1 \
+            and full.shape[0] != 1 and full.shape[1:] == row.shape[1:]:
+        return full.at[slot].set(row[0])
+    if full.ndim >= 2 and row.shape[0] == full.shape[0] \
+            and row.shape[1] == 1:
+        return full.at[:, slot].set(row[:, 0])
+    raise ValueError(f"unexpected cache leaf shapes {full.shape} vs "
+                     f"{row.shape}")

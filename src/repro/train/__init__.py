@@ -1,0 +1,1 @@
+"""repro.train — optimizer, schedules, train-step factory."""

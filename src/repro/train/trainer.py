@@ -1,0 +1,125 @@
+"""Train-step factory: grads (+ optional microbatch accumulation, optional
+int8-compressed cross-pod gradient sync) → AdamW → metrics.
+
+The returned step function is pjit-ready: caller supplies in/out shardings
+from ``transformer.param_pspecs`` and jits with donation of (params, opt)
+so the update is in-place in HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import compression
+from repro.distributed.sharding import active_mesh, constrain
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import optimizer as optim
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: optim.AdamWConfig = optim.AdamWConfig()
+    microbatches: int = 1           # gradient accumulation over the batch
+    grad_sync: str = "gspmd"        # "gspmd" | "compressed_pod"
+
+
+def _grads(cfg: ModelConfig, params, batch):
+    return jax.value_and_grad(
+        lambda p: transformer.loss_fn(p, cfg, batch))(params)
+
+
+def _accumulated_grads(cfg: ModelConfig, params, batch, n_micro: int):
+    """Split the (already device-sharded) batch into n_micro slices along
+    batch dim and accumulate grads with a lax.scan — bounds live activation
+    memory to one microbatch."""
+    if n_micro <= 1:
+        return _grads(cfg, params, batch)
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    # positions3 has shape (3, B, S) — batch axis 1.
+    def reshape_entry(k, x):
+        if k == "positions3":
+            return jnp.moveaxis(
+                x.reshape(3, n_micro, x.shape[1] // n_micro, x.shape[2]),
+                1, 0)
+        return reshape(x)
+
+    micro = {k: reshape_entry(k, v) for k, v in batch.items()}
+
+    def body(acc, mb):
+        loss, g = _grads(cfg, params, mb)
+        acc_loss, acc_g = acc
+        return (acc_loss + loss,
+                jax.tree.map(jnp.add, acc_g, g)), None
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, g), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero_g),
+                                micro)
+    inv = 1.0 / n_micro
+    return loss * inv, jax.tree.map(lambda x: x * inv, g)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig
+                    ) -> Callable[..., Tuple[Any, Any, Dict[str, Array]]]:
+    """Returns step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    grad_sync="compressed_pod": gradients are computed per pod (batch's pod
+    shard) and summed across pods with an int8 + per-leaf-scale quantised
+    psum (error feedback handled by the caller keeping residuals — see
+    compression.compressed_psum) — 4× less inter-pod traffic on the slowest
+    links of the machine.  Within a pod GSPMD reduce-scatters as usual.
+    """
+
+    def step(params, opt_state, batch):
+        mesh = active_mesh()
+        if tcfg.grad_sync == "compressed_pod" and mesh is not None \
+                and "pod" in mesh.shape and mesh.shape["pod"] > 1:
+            loss, grads = compression.pod_grads_compressed(
+                cfg, params, batch, tcfg.microbatches, _accumulated_grads)
+        else:
+            loss, grads = _accumulated_grads(cfg, params, batch,
+                                             tcfg.microbatches)
+        new_params, new_opt, metrics = optim.apply(
+            tcfg.opt, params, opt_state, grads)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh):
+    """Jitted step with param/opt shardings + in-place donation."""
+    from jax.sharding import NamedSharding
+    from repro.distributed.sharding import mesh_rules
+
+    with mesh_rules(mesh):
+        pspecs = transformer.param_pspecs(cfg)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    param_sh = jax.tree.map(ns, pspecs, is_leaf=lambda x: isinstance(x, P))
+    opt_sh = optim.AdamWState(step=ns(P()), m=param_sh, v=param_sh)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bspec = ns(P(data_axes))
+    step = make_train_step(cfg, tcfg)
+
+    def traced(params, opt_state, batch):
+        with mesh_rules(mesh):
+            return step(params, opt_state, batch)
+
+    return jax.jit(
+        traced,
+        in_shardings=(param_sh, opt_sh, bspec),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )

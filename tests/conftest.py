@@ -1,0 +1,28 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run is the only 512-device
+# context, and it configures XLA_FLAGS itself in a separate process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Hundreds of distinct jit programs accumulate across this suite (10
+    architectures × step kinds × hypothesis-generated shapes); on a small
+    host the native buffers/callback registries eventually abort the
+    process.  Dropping the compilation cache between modules keeps the
+    process healthy without affecting any test's semantics."""
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,137 @@
+"""The paper's central validation (§4): the precision-form Fast IGMN and the
+covariance-form IGMN produce the SAME results.
+
+We assert it at three levels: single-update algebra, full-stream trajectory
+(creation decisions, means, covariances, determinants), and supervised
+inference (eq. 15 vs eq. 27).
+"""
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import figmn, igmn_ref, inference
+from repro.core.types import FIGMNConfig
+
+
+def _blob_stream(seed=0, n_per=120, d=5, k=3, spread=8.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, spread, (k, d))
+    x = np.concatenate([rng.normal(c, 1.0, (n_per, d)) for c in centers])
+    rng.shuffle(x)
+    return jnp.asarray(x, jnp.float32)
+
+
+def _cfg(x, mode="paper", **kw):
+    d = x.shape[1]
+    sigma = figmn.sigma_from_data(x, 1.0)
+    defaults = dict(kmax=16, dim=d, beta=0.1, delta=1.0, vmin=10.0,
+                    spmin=2.0, sigma_ini=sigma, update_mode=mode)
+    defaults.update(kw)
+    return FIGMNConfig(**defaults)
+
+
+@pytest.mark.parametrize("mode", ["paper", "exact"])
+def test_single_update_equivalence(mode):
+    """One accept-update from identical states must match exactly."""
+    x = _blob_stream()
+    cfg = _cfg(x, mode)
+    sf = figmn.init_state(cfg)
+    sr = igmn_ref.init_state(cfg)
+    # create on x0, update on x1 (same blob ⇒ accept)
+    for i in range(6):
+        sf = figmn.learn_one(cfg, sf, x[i])
+        sr = igmn_ref.learn_one(cfg, sr, x[i])
+    m = np.asarray(sf.active)
+    assert (np.asarray(sr.active) == m).all()
+    np.testing.assert_allclose(np.asarray(sf.mu)[m], np.asarray(sr.mu)[m],
+                               atol=1e-5)
+    cov_f = np.asarray(jnp.linalg.inv(sf.lam))[m]
+    np.testing.assert_allclose(cov_f, np.asarray(sr.cov)[m],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_full_trajectory_equivalence_paper_mode():
+    x = _blob_stream()
+    cfg = _cfg(x, "paper")
+    sf = figmn.fit(cfg, figmn.init_state(cfg), x)
+    sr = igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)
+    assert int(sf.n_created) == int(sr.n_created)
+    m = np.asarray(sf.active)
+    assert (np.asarray(sr.active) == m).all()
+    np.testing.assert_allclose(np.asarray(sf.mu)[m], np.asarray(sr.mu)[m],
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.inv(sf.lam))[m],
+                               np.asarray(sr.cov)[m], rtol=2e-3, atol=2e-3)
+    _, logdet_ref = jnp.linalg.slogdet(sr.cov)
+    np.testing.assert_allclose(np.asarray(sf.logdet)[m],
+                               np.asarray(logdet_ref)[m], atol=1e-4)
+    # multiplicative |C| (the paper-faithful track) agrees with log track
+    np.testing.assert_allclose(np.asarray(jnp.log(jnp.abs(sf.det)))[m],
+                               np.asarray(sf.logdet)[m], atol=1e-3)
+
+
+def test_inference_equivalence():
+    """eq. 27 (precision blocks) == eq. 15 (covariance blocks)."""
+    x = _blob_stream()
+    cfg = _cfg(x, "paper")
+    sf = figmn.fit(cfg, figmn.init_state(cfg), x)
+    sr = igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)
+    q = x[:32, :4]
+    pf = inference.predict_batch(cfg, sf, q, [4])
+    pr = inference.predict_ref_batch(cfg, sr, q, [4])
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(pr),
+                               rtol=1e-3, atol=1e-3)
+    # and the reconstruction is actually informative
+    mae = float(jnp.mean(jnp.abs(pf[:, 0] - x[:32, 4])))
+    base = float(jnp.mean(jnp.abs(x[:32, 4] - jnp.mean(x[:, 4]))))
+    assert mae < base
+
+
+def test_float64_strict_equivalence():
+    """f64 run in a subprocess (x64 must not leak into this process)."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import figmn, igmn_ref
+from repro.core.types import FIGMNConfig
+rng = np.random.default_rng(0)
+centers = rng.normal(0, 8, (3, 5))
+x = np.concatenate([rng.normal(c, 1.0, (100, 5)) for c in centers])
+rng.shuffle(x)
+x = jnp.asarray(x, jnp.float64)
+sigma = figmn.sigma_from_data(x, 1.0)
+cfg = FIGMNConfig(kmax=16, dim=5, beta=0.1, delta=1.0, vmin=10.0, spmin=2.0,
+                  sigma_ini=sigma, dtype_str="float64")
+sf = figmn.fit(cfg, figmn.init_state(cfg), x)
+sr = igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)
+m = np.asarray(sf.active)
+assert int(sf.n_created) == int(sr.n_created)
+np.testing.assert_allclose(np.asarray(sf.mu)[m], np.asarray(sr.mu)[m],
+                           atol=1e-10)
+np.testing.assert_allclose(np.asarray(jnp.linalg.inv(sf.lam))[m],
+                           np.asarray(sr.cov)[m], rtol=1e-8, atol=1e-8)
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300,
+                         env={**__import__("os").environ,
+                              "PYTHONPATH": "src"})
+    assert "OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_pallas_backend_equivalence():
+    """backend='pallas' (interpret) reproduces the jnp trajectory."""
+    x = _blob_stream(n_per=60)
+    cfg_j = _cfg(x, "paper", kmax=8)
+    cfg_p = dataclasses.replace(cfg_j, backend="pallas")
+    sj = figmn.fit(cfg_j, figmn.init_state(cfg_j), x)
+    sp = figmn.fit(cfg_p, figmn.init_state(cfg_p), x)
+    assert int(sj.n_created) == int(sp.n_created)
+    np.testing.assert_allclose(np.asarray(sj.lam), np.asarray(sp.lam),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) for the FIGMN's invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import figmn, igmn_ref
+from repro.core.types import FIGMNConfig
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+def _mk_cfg(d, mode, kmax=8, beta=0.1):
+    return FIGMNConfig(kmax=kmax, dim=d, beta=beta, delta=1.0, vmin=1e9,
+                       spmin=0.0, sigma_ini=np.ones((d,), np.float32),
+                       update_mode=mode)
+
+
+def _stream(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1.5, (n, d)), jnp.float32)
+
+
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 8),
+       n=st.integers(5, 60))
+@settings(**_settings)
+def test_exact_mode_preserves_psd(seed, d, n):
+    """Beyond-paper exact mode: Λ stays positive-definite for ANY stream —
+    the printed eq. 11 does not have this property (documented)."""
+    cfg = _mk_cfg(d, "exact")
+    s = figmn.fit(cfg, figmn.init_state(cfg), _stream(seed, n, d))
+    lam = np.asarray(s.lam)
+    act = np.asarray(s.active)
+    for k in range(cfg.kmax):
+        if act[k]:
+            eig = np.linalg.eigvalsh(lam[k])
+            assert eig.min() > 0, (k, eig.min())
+
+
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 6),
+       n=st.integers(5, 40))
+@settings(**_settings)
+def test_logdet_tracks_true_determinant(seed, d, n):
+    """Incrementally-maintained log|C| equals slogdet of the materialised
+    C = Λ⁻¹ (exact mode; both quantities rank-one-maintained per paper)."""
+    cfg = _mk_cfg(d, "exact")
+    s = figmn.fit(cfg, figmn.init_state(cfg), _stream(seed, n, d))
+    act = np.asarray(s.active)
+    cov = np.asarray(jnp.linalg.inv(s.lam))
+    for k in range(cfg.kmax):
+        if act[k]:
+            _, ld = np.linalg.slogdet(cov[k])
+            assert abs(float(s.logdet[k]) - ld) < 5e-3 * max(1, abs(ld))
+
+
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 6))
+@settings(**_settings)
+def test_posteriors_sum_to_one(seed, d):
+    cfg = _mk_cfg(d, "paper")
+    s = figmn.fit(cfg, figmn.init_state(cfg), _stream(seed, 20, d))
+    x = _stream(seed + 1, 1, d)[0]
+    d2 = figmn.mahalanobis_sq(s, x)
+    post = figmn.posteriors(cfg, s, d2)
+    np.testing.assert_allclose(float(jnp.sum(post)), 1.0, atol=1e-5)
+    assert float(jnp.min(post)) >= 0.0
+    # inactive slots carry exactly zero posterior
+    assert float(jnp.max(jnp.where(s.active, 0.0, post))) == 0.0
+
+
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 6),
+       n=st.integers(3, 40))
+@settings(**_settings)
+def test_sp_mass_conservation(seed, d, n):
+    """Each learned point adds exactly 1 to Σsp (posteriors sum to 1 on
+    update, creation initialises sp=1) — eq. 5 + Algorithm 3, pruning off.
+
+    Holds exactly while the pool never overflows (recycling a slot drops
+    that slot's accumulated mass — the documented fixed-capacity policy),
+    so the pool is sized to the stream length here."""
+    cfg = _mk_cfg(d, "paper", kmax=64)
+    s = figmn.fit(cfg, figmn.init_state(cfg), _stream(seed, n, d),
+                  do_prune=False)
+    total_sp = float(jnp.sum(jnp.where(s.active, s.sp, 0.0)))
+    np.testing.assert_allclose(total_sp, n, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 10_000), d=st.integers(2, 5),
+       mode=st.sampled_from(["paper", "exact"]))
+@settings(**_settings)
+def test_forms_agree_stepwise(seed, d, mode):
+    """Precision form == covariance form after every single step."""
+    cfg = _mk_cfg(d, mode)
+    xs = _stream(seed, 15, d)
+    sf = figmn.init_state(cfg)
+    sr = igmn_ref.init_state(cfg)
+    for i in range(xs.shape[0]):
+        sf = figmn.learn_one(cfg, sf, xs[i], do_prune=False)
+        sr = igmn_ref.learn_one(cfg, sr, xs[i], do_prune=False)
+        assert (np.asarray(sf.active) == np.asarray(sr.active)).all()
+        m = np.asarray(sf.active)
+        if m.any():
+            np.testing.assert_allclose(np.asarray(sf.mu)[m],
+                                       np.asarray(sr.mu)[m], atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_settings)
+def test_prune_removes_only_weak_old_components(seed):
+    d = 3
+    cfg = dataclasses.replace(_mk_cfg(d, "paper"), vmin=5.0, spmin=3.0)
+    s = figmn.fit(cfg, figmn.init_state(cfg), _stream(seed, 30, d),
+                  do_prune=False)
+    pruned = figmn.prune(cfg, s)
+    removed = np.asarray(s.active) & ~np.asarray(pruned.active)
+    v, sp = np.asarray(s.v), np.asarray(s.sp)
+    for k in np.where(removed)[0]:
+        assert v[k] > cfg.vmin and sp[k] < cfg.spmin
+    kept = np.asarray(pruned.active)
+    for k in np.where(kept)[0]:
+        assert not (v[k] > cfg.vmin and sp[k] < cfg.spmin)

@@ -1,0 +1,80 @@
+"""Fault tolerance: FIGMN anomaly detector, straggler monitor, gradient
+compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import compression
+from repro.ft.anomaly import AnomalyDetector
+from repro.ft.straggler import StragglerConfig, StragglerMonitor
+
+
+def test_anomaly_detector_flags_divergence():
+    det = AnomalyDetector(dim=3, warmup=15)
+    rng = np.random.default_rng(0)
+    alarms = []
+    for step in range(60):
+        stats = {"loss": 2.0 * np.exp(-step / 50) * rng.lognormal(0, 0.05),
+                 "grad_norm": 1.0 * rng.lognormal(0, 0.1),
+                 "step_time": 0.1 * rng.lognormal(0, 0.05)}
+        if step == 50:                      # loss explosion
+            stats["loss"] = 500.0
+            stats["grad_norm"] = 1e4
+        v = det.update(stats)
+        if v["anomalous"]:
+            alarms.append(step)
+    assert 50 in alarms, alarms
+    # normal drift must not alarm
+    assert all(a == 50 for a in alarms), alarms
+
+
+def test_anomaly_detector_follows_drift():
+    """Loss scale shifts slowly by 10× — no alarms (the incremental GMM
+    adapts; a fixed-threshold detector would fire)."""
+    det = AnomalyDetector(dim=3, warmup=15)
+    rng = np.random.default_rng(1)
+    alarms = 0
+    for step in range(200):
+        scale = 10 ** (step / 200)
+        stats = {"loss": scale * rng.lognormal(0, 0.05),
+                 "grad_norm": rng.lognormal(0, 0.08),
+                 "step_time": 0.1 * rng.lognormal(0, 0.05)}
+        alarms += bool(det.update(stats)["anomalous"])
+    assert alarms == 0, alarms
+
+
+def test_straggler_eviction():
+    mon = StragglerMonitor([f"h{i}" for i in range(8)],
+                           StragglerConfig(slow_factor=1.5, patience=3))
+    evicted = []
+    for step in range(10):
+        for i in range(8):
+            t = 0.1 if i != 3 else 0.5      # h3 is 5× slow
+            mon.report(f"h{i}", t)
+        evicted += mon.check()
+    assert evicted == ["h3"]
+    assert "h3" not in mon.alive()
+    assert len(mon.alive()) == 7
+
+
+def test_straggler_recovers_from_transient_blip():
+    mon = StragglerMonitor(["a", "b", "c", "d"],
+                           StragglerConfig(slow_factor=1.5, patience=3,
+                                           ewma=1.0))
+    evicted = []
+    for step in range(10):
+        for h in "abcd":
+            t = 0.5 if (h == "b" and step == 4) else 0.1   # one blip
+            mon.report(h, t)
+        evicted += mon.check()
+    assert evicted == []
+
+
+def test_int8_quantisation_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (128,)), jnp.float32)
+    q, scale = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, scale)
+    err = float(jnp.max(jnp.abs(back - x)))
+    assert err <= float(scale) * 0.5 + 1e-7      # half-ULP of the grid
+    assert q.dtype == jnp.int8

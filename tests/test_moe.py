@@ -1,0 +1,123 @@
+"""MoE routing/dispatch unit tests + sharded-vs-dense parity (subprocess)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe
+
+
+def test_route_normalised_gates():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (32, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (16, 8)), jnp.float32)
+    gates, idx = moe.route(x, w, n_real=8, top_k=2)
+    np.testing.assert_allclose(np.asarray(jnp.sum(gates, -1)), 1.0,
+                               rtol=1e-5)
+    assert int(jnp.max(idx)) < 8
+
+
+def test_route_masks_padding_experts():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (64, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (16, 12)), jnp.float32)
+    _, idx = moe.route(x, w, n_real=10, top_k=3)     # 2 padding experts
+    assert int(jnp.max(idx)) < 10
+
+
+def test_dispatch_positions_and_capacity():
+    eidx = jnp.asarray([[0], [0], [1], [0], [1], [0]], jnp.int32)  # N=6,k=1
+    dest, keep, order = moe.dispatch_indices(eidx, n_experts=2, capacity=2)
+    dest = np.asarray(dest)
+    keep = np.asarray(keep)
+    # expert 0 receives tokens 0,1 then drops 3,5; expert 1 takes 2,4
+    assert keep.tolist() == [True, True, True, False, True, False]
+    assert dest[0] == 0 and dest[1] == 1          # expert0 slots
+    assert dest[2] == 2 and dest[4] == 3          # expert1 slots
+    overflow = 2 * 2
+    assert dest[3] == overflow and dest[5] == overflow
+
+
+def test_moe_dense_combines_topk():
+    """Dense fallback equals manual per-token expert mixture."""
+    rng = np.random.default_rng(2)
+    b, t, d, f, e, k = 2, 4, 8, 16, 4, 2
+    p = {
+        "w_router": jnp.asarray(rng.normal(0, 1, (d, e)), jnp.float32),
+        "w_gate": jnp.asarray(rng.normal(0, 0.3, (e, d, f)), jnp.float32),
+        "w_up": jnp.asarray(rng.normal(0, 0.3, (e, d, f)), jnp.float32),
+        "w_down": jnp.asarray(rng.normal(0, 0.3, (e, f, d)), jnp.float32),
+    }
+    x = jnp.asarray(rng.normal(0, 1, (b, t, d)), jnp.float32)
+    got = moe.moe_dense(p, x, n_real=e, top_k=k)
+
+    x2 = np.asarray(x.reshape(-1, d))
+    gates, idx = moe.route(x.reshape(-1, d), p["w_router"], e, k)
+    want = np.zeros_like(x2)
+    for n in range(x2.shape[0]):
+        for j in range(k):
+            ei = int(idx[n, j])
+            g = np.asarray(x2[n] @ np.asarray(p["w_gate"][ei]))
+            u = np.asarray(x2[n] @ np.asarray(p["w_up"][ei]))
+            h = (g / (1 + np.exp(-g))) * u
+            want[n] += float(gates[n, j]) * (h @ np.asarray(p["w_down"][ei]))
+    np.testing.assert_allclose(np.asarray(got).reshape(-1, d), want,
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("path", ["alltoall", "psum"])
+def test_sharded_moe_matches_dense(path):
+    """shard_map EP paths == dense reference, on 4 fake devices."""
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np, functools
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models import moe
+
+rng = np.random.default_rng(0)
+b, t, d, f, e, k = 4, 8, 16, 32, 4, 2
+p = dict(
+    w_router=jnp.asarray(rng.normal(0, 1, (d, e)), jnp.float32),
+    w_gate=jnp.asarray(rng.normal(0, 0.3, (e, d, f)), jnp.float32),
+    w_up=jnp.asarray(rng.normal(0, 0.3, (e, d, f)), jnp.float32),
+    w_down=jnp.asarray(rng.normal(0, 0.3, (e, f, d)), jnp.float32),
+)
+x = jnp.asarray(rng.normal(0, 1, (b, t, d)), jnp.float32)
+want = moe.moe_dense(p, x, n_real=e, top_k=k)
+
+mesh = jax.make_mesh((1, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+if "{path}" == "alltoall":
+    fn = jax.shard_map(
+        functools.partial(moe.moe_alltoall_local, n_real=e, top_k=k,
+                          capacity_factor=8.0, act="silu"),
+        mesh=mesh, in_specs=({{"w_router": P(), "w_gate": P("model"),
+                              "w_up": P("model"), "w_down": P("model")}},
+                             P("data", "model")),
+        out_specs=P("data", "model"), check_vma=False)
+else:
+    fn = jax.shard_map(
+        functools.partial(moe.moe_psum_local, n_real=e, top_k=k,
+                          act="silu"),
+        mesh=mesh, in_specs=({{"w_router": P(), "w_gate": P("model"),
+                              "w_up": P("model"), "w_down": P("model")}},
+                             P("data")),
+        out_specs=P("data"), check_vma=False)
+got = jax.jit(fn)(p, x)
+# generous capacity ⇒ no drops ⇒ exact match
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=2e-4, atol=2e-4)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "OK" in out.stdout, (out.stdout[-500:], out.stderr[-3000:])

@@ -1,0 +1,81 @@
+"""Numerical foundations: the chi² gate approximation against scipy's exact
+quantile, and conditional-mean inference round-trip properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import figmn, inference
+from repro.core.types import FIGMNConfig, chi2_quantile
+
+scipy_stats = pytest.importorskip("scipy.stats")
+
+
+@pytest.mark.parametrize("dof", [2, 3, 5, 9, 34, 100, 784, 3072])
+@pytest.mark.parametrize("p", [0.5, 0.9, 0.95, 0.999])
+def test_wilson_hilferty_vs_exact(dof, p):
+    """The novelty gate uses Wilson–Hilferty; the paper treats the threshold
+    as a heuristic, but it should track the exact quantile closely."""
+    approx = float(chi2_quantile(dof, p))
+    exact = float(scipy_stats.chi2.ppf(p, dof))
+    # WH is weakest at tiny dof in the extreme tail (dof=2, p=0.999 ≈ 2.3%
+    # off) — immaterial for the heuristic novelty gate; tight elsewhere.
+    tol = 0.05 if dof < 5 else 0.02
+    assert abs(approx - exact) / exact < tol, (dof, p, approx, exact)
+
+
+def test_beta_zero_gate_is_infinite():
+    """β = 0 (the paper's Table 2/3 protocol) must never create a second
+    component: the gate is +inf."""
+    assert np.isinf(float(chi2_quantile(10, 1.0)))
+
+
+def _fitted(seed=0, d=5):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6, (3, d))
+    x = np.concatenate([rng.normal(c, 0.6, (80, d)) for c in centers])
+    rng.shuffle(x)
+    x = jnp.asarray(x, jnp.float32)
+    cfg = FIGMNConfig(kmax=16, dim=d, beta=0.1, delta=1.0, vmin=1e9,
+                      spmin=0.0, update_mode="exact",
+                      sigma_ini=figmn.sigma_from_data(x, 1.0))
+    return cfg, figmn.fit(cfg, figmn.init_state(cfg), x), x
+
+
+def test_inference_reconstructs_training_points():
+    """Predicting a training point's last dim from the rest lands near it
+    (tight, well-separated clusters ⇒ the conditional mean is sharp)."""
+    cfg, state, x = _fitted()
+    pred = inference.predict_batch(cfg, state, x[:64, :-1], [cfg.dim - 1])
+    mae = float(jnp.mean(jnp.abs(pred[:, 0] - x[:64, -1])))
+    assert mae < 0.6, mae
+
+
+def test_inference_multi_output_consistency():
+    """Predicting dims {3,4} jointly == predicting the same dims when they
+    are the only unknowns — block decomposition must be self-consistent."""
+    cfg, state, x = _fitted()
+    q = x[:32, :3]
+    joint = inference.predict_batch(cfg, state, q, [3, 4])
+    assert joint.shape == (32, 2)
+    assert bool(jnp.isfinite(joint).all())
+    # o=1 calls on each dim of the SAME conditional are not expected to be
+    # identical to the joint (different conditioning sets); but the joint
+    # prediction of a dim must match the o=1 prediction with the same
+    # conditioning set {0,1,2} ∪ {other unknown marginalised}: verify via
+    # the covariance-form oracle instead.
+    from repro.core import igmn_ref, inference as inf
+    sr = igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)
+    ref = inf.predict_ref_batch(cfg, sr, q, [3, 4])
+    np.testing.assert_allclose(np.asarray(joint), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_log_likelihood_integrates_density_direction():
+    """Higher near component means than far away, monotone in distance."""
+    cfg, state, x = _fitted()
+    act = np.where(np.asarray(state.active))[0]
+    mu0 = state.mu[act[np.argmax(np.asarray(state.sp)[act])]]
+    lls = [float(figmn.log_likelihood(cfg, state,
+                                      mu0 + jnp.full((cfg.dim,), off)))
+           for off in (0.0, 0.5, 2.0, 8.0)]
+    assert lls[0] > lls[1] > lls[2] > lls[3], lls

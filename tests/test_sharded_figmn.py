@@ -1,0 +1,118 @@
+"""Distributed FIGMN: component-parallel shard_map execution must reproduce
+the single-device trajectory; DP merge must preserve mixture moments."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn, merge
+from repro.core.types import FIGMNConfig
+
+
+def test_component_sharded_equals_reference():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import figmn, sharded
+from repro.core.types import FIGMNConfig
+rng = np.random.default_rng(0)
+centers = rng.normal(0, 8, (3, 5))
+X = np.concatenate([rng.normal(c, 1.0, (100, 5)) for c in centers])
+rng.shuffle(X)
+X = jnp.asarray(X, jnp.float32)
+sigma = figmn.sigma_from_data(X, 1.0)
+cfg = FIGMNConfig(kmax=16, dim=5, beta=0.1, delta=1.0, vmin=10.0, spmin=2.0,
+                  sigma_ini=sigma)
+s_ref = figmn.fit(cfg, figmn.init_state(cfg), X)
+mesh = jax.make_mesh((4,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+s0 = sharded.init_sharded(cfg, mesh, "model")
+s_sh = sharded.fit_sharded(cfg, s0, X, mesh, "model")
+assert int(s_sh.n_created) == int(s_ref.n_created)
+m = np.asarray(s_ref.active)
+assert (np.asarray(s_sh.active) == m).all()
+np.testing.assert_allclose(np.asarray(s_sh.mu)[m], np.asarray(s_ref.mu)[m],
+                           atol=1e-5)
+np.testing.assert_allclose(np.asarray(s_sh.lam)[m],
+                           np.asarray(s_ref.lam)[m], rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "OK" in out.stdout, out.stderr[-3000:]
+
+
+def _fit(x, kmax=8, seed_sigma=1.0):
+    cfg = FIGMNConfig(kmax=kmax, dim=x.shape[1], beta=0.1, delta=1.0,
+                      vmin=1e9, spmin=0.0,
+                      sigma_ini=figmn.sigma_from_data(x, seed_sigma))
+    return cfg, figmn.fit(cfg, figmn.init_state(cfg), x)
+
+
+def test_union_merge_preserves_sp_mass():
+    import dataclasses
+    rng = np.random.default_rng(0)
+    xa = jnp.asarray(rng.normal(0, 1, (40, 3)), jnp.float32)
+    xb = jnp.asarray(rng.normal(5, 1, (40, 3)), jnp.float32)
+    cfg, sa = _fit(xa)
+    _, sb = _fit(xb)
+    # capacity ≥ union size ⇒ EXACT mass preservation (union is exact)
+    big = dataclasses.replace(cfg, kmax=2 * cfg.kmax)
+    merged = merge.union(big, [sa, sb])
+    total = float(jnp.sum(jnp.where(merged.active, merged.sp, 0)))
+    want = float(jnp.sum(jnp.where(sa.active, sa.sp, 0))
+                 + jnp.sum(jnp.where(sb.active, sb.sp, 0)))
+    np.testing.assert_allclose(total, want, rtol=1e-5)
+    # truncating merge drops only the weakest slots
+    small = merge.union(cfg, [sa, sb])
+    tot_small = float(jnp.sum(jnp.where(small.active, small.sp, 0)))
+    assert tot_small <= want + 1e-4
+    kept = np.sort(np.asarray(merged.sp)[np.asarray(merged.active)])
+    dropped_max = kept[:max(len(kept) - cfg.kmax, 0)].sum()
+    np.testing.assert_allclose(want - tot_small, dropped_max, rtol=1e-4)
+
+
+def test_moment_match_pair_preserves_moments():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 2, (60, 3)), jnp.float32)
+    cfg, s = _fit(x, kmax=8)
+    act = np.where(np.asarray(s.active))[0]
+    if len(act) < 2:
+        return
+    ia, ib = int(act[0]), int(act[1])
+    sp = np.asarray(s.sp)
+    mu = np.asarray(s.mu)
+    w_tot = sp[ia] + sp[ib]
+    mean_want = (sp[ia] * mu[ia] + sp[ib] * mu[ib]) / w_tot
+    merged = merge.moment_match_pair(cfg, s, jnp.asarray(ia),
+                                     jnp.asarray(ib))
+    np.testing.assert_allclose(np.asarray(merged.mu[ia]), mean_want,
+                               rtol=1e-4, atol=1e-5)
+    assert not bool(merged.active[ib])
+    np.testing.assert_allclose(float(merged.sp[ia]), w_tot, rtol=1e-5)
+    # precision of the merged slot is the inverse of the moment-matched cov
+    cov = np.linalg.inv(np.asarray(merged.lam[ia]))
+    eig = np.linalg.eigvalsh(cov)
+    assert eig.min() > 0
+
+
+def test_closest_pair_picks_overlapping_components():
+    cfg = FIGMNConfig(kmax=4, dim=2, beta=0.1, delta=1.0,
+                      sigma_ini=np.ones(2, np.float32))
+    s = figmn.init_state(cfg)
+    # manually activate three components: two overlapping, one far
+    mus = np.array([[0, 0], [0.1, 0.1], [50, 50], [0, 0]], np.float32)
+    s = s.__class__(mu=jnp.asarray(mus), lam=s.lam, logdet=s.logdet,
+                    det=s.det, sp=jnp.asarray([1., 1., 1., 0.]),
+                    v=s.v, active=jnp.asarray([True, True, True, False]),
+                    n_created=jnp.asarray(3))
+    ia, ib = merge.closest_pair(s)
+    assert {int(ia), int(ib)} == {0, 1}

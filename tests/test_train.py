@@ -1,0 +1,93 @@
+"""Training substrate: optimizer math, schedules, microbatch accumulation,
+loss actually decreasing on learnable synthetic data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.tokens import SyntheticTokens, TokenPipelineConfig
+from repro.models import transformer as tr
+from repro.train import optimizer as optim
+from repro.train import trainer
+
+
+def test_schedule_shape():
+    cfg = optim.AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100,
+                            lr_min_ratio=0.1)
+    lrs = [float(optim.schedule(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1e-3) < 1e-9          # peak at end of warmup
+    assert lrs[100] <= 1e-4 + 1e-9             # decayed to min ratio
+    assert all(b <= a + 1e-12 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_adamw_against_manual_reference():
+    cfg = optim.AdamWConfig(lr_peak=1e-2, warmup_steps=0, total_steps=100,
+                            weight_decay=0.0, clip_norm=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.1, 0.2])}
+    st = optim.init(p)
+    p2, st2, _ = optim.apply(cfg, p, st, g)
+    # first step of Adam ⇒ update = lr(step=1) * bias-corrected moment ratio
+    lr1 = float(optim.schedule(cfg, jnp.asarray(1)))
+    m = 0.1 * np.array([0.1, 0.2])
+    v = 0.05 * np.array([0.01, 0.04])
+    mhat = m / 0.1
+    vhat = v / 0.05
+    want = np.array([1.0, -2.0]) - lr1 * mhat / (np.sqrt(vhat) + cfg.eps)
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+    assert int(st2.step) == 1
+
+
+def test_grad_clipping():
+    cfg = optim.AdamWConfig(clip_norm=1.0, warmup_steps=0, total_steps=1,
+                            weight_decay=0.0)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = optim.apply(cfg, p, optim.init(p), g)
+    assert float(metrics["grad_norm"]) > 100
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = configs.get_smoke("yi-6b")
+    key = jax.random.PRNGKey(0)
+    params = tr.init_params(cfg, key)
+    toks = jax.random.randint(key, (8, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    l1, g1 = trainer._accumulated_grads(cfg, params, batch, 1)
+    l4, g4 = trainer._accumulated_grads(cfg, params, batch, 4)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=3e-5)
+
+
+def test_loss_decreases_on_learnable_stream():
+    """End-to-end: tiny model + synthetic Markov tokens → loss drops."""
+    cfg = configs.get_smoke("yi-6b")
+    pipe = SyntheticTokens(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0))
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = trainer.TrainConfig(opt=optim.AdamWConfig(
+        lr_peak=5e-3, warmup_steps=5, total_steps=60, weight_decay=0.01))
+    step = jax.jit(trainer.make_train_step(cfg, tcfg))
+    opt = optim.init(params)
+    losses = []
+    for i in range(60):
+        b = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first * 0.85, (first, last)
+
+
+def test_data_pipeline_determinism():
+    kw = dict(vocab_size=101, seq_len=16, global_batch=4, seed=7)
+    a = SyntheticTokens(TokenPipelineConfig(**kw)).batch(13)
+    b = SyntheticTokens(TokenPipelineConfig(**kw)).batch(13)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticTokens(TokenPipelineConfig(**kw)).batch(14)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(a["targets"][:, :-1], a["tokens"][:, 1:])
