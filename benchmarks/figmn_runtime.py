@@ -1,0 +1,87 @@
+"""Streaming-runtime throughput: points/sec across (D, K, chunk) sweeps.
+
+Measures the full production loop (repro.stream.StreamRuntime: chunked
+ingestion + telemetry, lifecycle at its configured cadence) rather than the
+bare learner — this is the number the serving fleet sizes against.  Results
+go to BENCH_stream.json: one row per (D, K, chunk) with points/sec and the
+per-chunk latency, so later PRs (sharded replicas, async serving) have a
+single-replica baseline to beat.
+
+Run:  PYTHONPATH=src python -m benchmarks.figmn_runtime
+      (or via ``python -m benchmarks.run figmn_runtime``)
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.stream import LifecycleConfig, RuntimeConfig, StreamRuntime
+
+# (D, K) sweep — paper-scale tabular up to telemetry/embedding widths.
+SWEEP = [(8, 16), (32, 16), (64, 32)]
+CHUNKS = [128, 512]
+N_POINTS = 2048
+N_QUICK = 512
+
+
+def _stream(n: int, d: int, k: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6.0, (k, d))
+    x = centers[rng.integers(0, k, n)] + rng.normal(0, 1.0, (n, d))
+    return x.astype(np.float32)
+
+
+def run(out_path: str = "BENCH_stream.json", quick: bool = False
+        ) -> List[Dict]:
+    n = N_QUICK if quick else N_POINTS
+    rows = []
+    for d, k in SWEEP:
+        x = _stream(n, d, max(k // 4, 2))
+        sigma = figmn.sigma_from_data(jnp.asarray(x), 1.0)
+        cfg = FIGMNConfig(kmax=k, dim=d, beta=0.1, delta=1.0, vmin=50.0,
+                          spmin=1.0, update_mode="exact", sigma_ini=sigma)
+        for chunk in CHUNKS:
+            rc = RuntimeConfig(chunk=chunk,
+                               lifecycle=LifecycleConfig(k_budget=k,
+                                                         every=8))
+            # warm run compiles every chunk shape; timed run measures steady
+            # state (what a long-lived serving replica sees)
+            StreamRuntime(cfg, rc).ingest(x)
+            rt = StreamRuntime(cfg, rc)
+            t0 = time.perf_counter()
+            summary = rt.ingest(x)
+            dt = time.perf_counter() - t0
+            row = {
+                "d": d, "k": k, "chunk": chunk, "n": n,
+                "points_per_s": n / dt,
+                "wall_s": dt,
+                "active_k": summary["active_k"],
+                "mean_chunk_latency_ms": 1e3 * dt / max(len(
+                    rt.telemetry.history), 1),
+            }
+            rows.append(row)
+            print(f"D={d:4d} K={k:3d} chunk={chunk:4d}: "
+                  f"{row['points_per_s']:9.0f} pts/s "
+                  f"({row['mean_chunk_latency_ms']:.1f} ms/chunk, "
+                  f"K_active={row['active_k']})")
+    with open(out_path, "w") as f:
+        json.dump({"benchmark": "figmn_stream_runtime",
+                   "backend": jax.default_backend(),
+                   "rows": rows}, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ CSV convention: ``name,us_per_call,derived``.
   figmn_scaling   — the O(D³)→O(D²) complexity claim (scaling exponents)
   figmn_timing    — paper Tables 2–3 (train/infer time, both variants)
   figmn_accuracy  — paper Table 4 (quality parity, AUC/acc)
+  figmn_runtime   — streaming-runtime points/sec across (D, K, chunk)
+                    sweeps → BENCH_stream.json
   kernels         — Pallas kernel wall-times (interpret mode: correctness
                     path; TPU timing comes from the roofline, not CPU)
   lm_bench        — reduced-config LM substrate step times
@@ -47,6 +49,9 @@ def main() -> None:
     if on("figmn_accuracy"):
         from benchmarks import figmn_accuracy
         _section("figmn_accuracy", figmn_accuracy.main)
+    if on("figmn_runtime"):
+        from benchmarks import figmn_runtime
+        _section("figmn_runtime", figmn_runtime.main)
     if on("lm_bench"):
         from benchmarks import lm_bench
         _section("lm_bench", lm_bench.main)

@@ -97,12 +97,11 @@ def batch_update(cfg: FIGMNConfig, state: FIGMNState, xs: Array,
     sol = jnp.linalg.solve(M, LU)                          # (K, r, D)
     lam_new = lam_a - jnp.einsum(
         "krd,kr,kre->kde", LU, w_diag, sol)
-    sign, ld_m = jnp.linalg.slogdet(M)
+    _, ld_m = jnp.linalg.slogdet(M)
     logdet_new = state.logdet + cfg.dim * jnp.log(alpha) + ld_m
-    det_new = state.det * alpha ** cfg.dim * sign * jnp.exp(ld_m)
 
     return FIGMNState(
-        mu=mu_new, lam=lam_new, logdet=logdet_new, det=det_new,
+        mu=mu_new, lam=lam_new, logdet=logdet_new,
         sp=sp_new,
         v=state.v + state.active.astype(cfg.dtype) * B,
         active=state.active, n_created=state.n_created)

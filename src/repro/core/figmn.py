@@ -57,7 +57,6 @@ def init_state(cfg: FIGMNConfig) -> FIGMNState:
         mu=jnp.zeros((k, d), dt),
         lam=lam0,
         logdet=logdet0,
-        det=jnp.exp(logdet0),
         sp=jnp.zeros((k,), dt),
         v=jnp.zeros((k,), dt),
         active=jnp.zeros((k,), bool),
@@ -76,12 +75,8 @@ def mahalanobis_sq(state: FIGMNState, x: Array) -> Array:
 
 
 def _log_density(cfg: FIGMNConfig, state: FIGMNState, d2: Array) -> Array:
-    """log p(x|j) (eq. 2) from precomputed d² — uses log|C|."""
-    if cfg.faithful_det:
-        logdet = jnp.log(state.det)
-    else:
-        logdet = state.logdet
-    return -0.5 * (cfg.dim * _LOG_2PI + logdet + d2)
+    """log p(x|j) (eq. 2) from precomputed d² — uses the canonical log|C|."""
+    return -0.5 * (cfg.dim * _LOG_2PI + state.logdet + d2)
 
 
 def posteriors(cfg: FIGMNConfig, state: FIGMNState, d2: Array) -> Array:
@@ -111,16 +106,17 @@ def log_likelihood(cfg: FIGMNConfig, state: FIGMNState, x: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 def precision_rank2_update(
-    lam: Array, logdet: Array, det: Array,
+    lam: Array, logdet: Array,
     e_star: Array, dmu: Array, w: Array, dim: int,
-) -> Tuple[Array, Array, Array]:
-    """Apply eqs. 20–21 (precision) and 25–26 (determinant) for all K slots.
+) -> Tuple[Array, Array]:
+    """Apply eqs. 20–21 (precision) and 25–26 (determinant, log form) for all
+    K slots.
 
     lam:    (K, D, D)   Λ(t-1)
     e_star: (K, D)      x - μ(t)
     dmu:    (K, D)      ω e  = μ(t) - μ(t-1)
     w:      (K,)        ω_j = p(j|x)/sp_j   (0 for no-op slots)
-    Returns (Λ(t), log|C(t)|, |C(t)|).  O(K·D²).
+    Returns (Λ(t), log|C(t)|).  O(K·D²).
     """
     one_m_w = 1.0 - w                                   # (K,)
     # --- first rank-one update (add  ω e*e*ᵀ  to  (1-ω)C) -----------------
@@ -141,14 +137,13 @@ def precision_rank2_update(
     # baseline (whose slogdet also yields log|det|) instead of NaN-ing.
     logdet_new = logdet + dim * jnp.log(one_m_w) \
         + jnp.log(jnp.abs(denom1)) + jnp.log(jnp.abs(1.0 - t))
-    det_new = det * one_m_w ** dim * denom1 * (1.0 - t)
-    return lam_new, logdet_new, det_new
+    return lam_new, logdet_new
 
 
 def precision_rank1_update_exact(
-    lam: Array, logdet: Array, det: Array,
+    lam: Array, logdet: Array,
     e: Array, w: Array, dim: int,
-) -> Tuple[Array, Array, Array]:
+) -> Tuple[Array, Array]:
     """Beyond-paper 'exact' mode: C(t) = (1-ω)C + ω(1-ω)eeᵀ.
 
     This is the *exact* sp-weighted moment recursion (the printed eq. 11
@@ -168,8 +163,7 @@ def precision_rank1_update_exact(
     lam_new = (lam - coef[:, None, None] * jnp.einsum("kd,ke->kde", y, y)) \
         / one_m_w[:, None, None]
     logdet_new = logdet + dim * jnp.log(one_m_w) + jnp.log1p(w * s)
-    det_new = det * one_m_w ** dim * denom
-    return lam_new, logdet_new, det_new
+    return lam_new, logdet_new
 
 
 def fused_step_coeffs(d2: Array, w: Array, dim: int, update_mode: str
@@ -184,22 +178,20 @@ def fused_step_coeffs(d2: Array, w: Array, dim: int, update_mode: str
         Λ(t) = (Λ(t-1) − β · y yᵀ) / (1-ω)      (exact mode)
     with scalar β(d², ω) — ONE HBM read (matvec, shared with the distance)
     plus ONE read+write (apply) per point instead of four passes over the
-    (K, D, D) tensor.  Returns (β, Δlogdet, |C| factor — signed, so the
-    paper-faithful multiplicative determinant track stays exact).
+    (K, D, D) tensor.  Returns (β, Δlog|C|).
     """
     one_m_w = 1.0 - w
     if update_mode == "exact":
-        denom = 1.0 + w * d2
-        beta = w / denom
+        beta = w / (1.0 + w * d2)
         dlogdet = dim * jnp.log(one_m_w) + jnp.log1p(w * d2)
-        return beta, dlogdet, one_m_w ** dim * denom
+        return beta, dlogdet
     denom1 = 1.0 + w * one_m_w * d2
     alpha = 1.0 / one_m_w - w * d2 / denom1            # Λ̄e = α·y
     t = w * w * alpha * d2                             # ΔμᵀΛ̄Δμ
     beta = -(w / denom1) + (w * alpha) ** 2 / (1.0 - t)
     dlogdet = dim * jnp.log(one_m_w) + jnp.log(jnp.abs(denom1)) \
         + jnp.log(jnp.abs(1.0 - t))
-    return beta, dlogdet, one_m_w ** dim * denom1 * (1.0 - t)
+    return beta, dlogdet
 
 
 # ---------------------------------------------------------------------------
@@ -223,8 +215,7 @@ def _update(cfg: FIGMNConfig, state: FIGMNState, x: Array,
     mu_new = state.mu + dmu                             # eq. 9
     e_star = x[None, :] - mu_new                        # eq. 10
     if y is not None and cfg.backend != "pallas":
-        beta, dlogdet, dfac = fused_step_coeffs(d2, w, cfg.dim,
-                                                cfg.update_mode)
+        beta, dlogdet = fused_step_coeffs(d2, w, cfg.dim, cfg.update_mode)
         one_m_w = 1.0 - w
         yy = jnp.einsum("kd,ke->kde", y, y)
         if cfg.update_mode == "exact":
@@ -234,26 +225,24 @@ def _update(cfg: FIGMNConfig, state: FIGMNState, x: Array,
             lam_new = state.lam / one_m_w[:, None, None] \
                 + beta[:, None, None] * yy
         logdet_new = state.logdet + dlogdet
-        det_new = state.det * dfac
     elif cfg.backend == "pallas":
         from repro.kernels import ops as _kops
         if y is not None:
-            lam_new, logdet_new, det_new = _kops.fused_apply(
-                state.lam, state.logdet, state.det, y, d2, w, cfg.dim,
-                cfg.update_mode)
+            lam_new, logdet_new = _kops.fused_apply(
+                state.lam, state.logdet, y, d2, w, cfg.dim, cfg.update_mode)
         elif cfg.update_mode == "exact":
-            lam_new, logdet_new, det_new = _kops.precision_rank1_update_exact(
-                state.lam, state.logdet, state.det, e, w, cfg.dim)
+            lam_new, logdet_new = _kops.precision_rank1_update_exact(
+                state.lam, state.logdet, e, w, cfg.dim)
         else:
-            lam_new, logdet_new, det_new = _kops.precision_rank2_update(
-                state.lam, state.logdet, state.det, e_star, dmu, w, cfg.dim)
+            lam_new, logdet_new = _kops.precision_rank2_update(
+                state.lam, state.logdet, e_star, dmu, w, cfg.dim)
     elif cfg.update_mode == "exact":
-        lam_new, logdet_new, det_new = precision_rank1_update_exact(
-            state.lam, state.logdet, state.det, e, w, cfg.dim)
+        lam_new, logdet_new = precision_rank1_update_exact(
+            state.lam, state.logdet, e, w, cfg.dim)
     else:
-        lam_new, logdet_new, det_new = precision_rank2_update(
-            state.lam, state.logdet, state.det, e_star, dmu, w, cfg.dim)
-    return FIGMNState(mu=mu_new, lam=lam_new, logdet=logdet_new, det=det_new,
+        lam_new, logdet_new = precision_rank2_update(
+            state.lam, state.logdet, e_star, dmu, w, cfg.dim)
+    return FIGMNState(mu=mu_new, lam=lam_new, logdet=logdet_new,
                       sp=sp_new, v=v_new, active=state.active,
                       n_created=state.n_created)
 
@@ -280,7 +269,6 @@ def _create(cfg: FIGMNConfig, state: FIGMNState, x: Array,
         mu=mu_new,
         lam=lam_new,
         logdet=state.logdet * (1 - onehot) + logdet0 * onehot,
-        det=state.det * (1 - onehot) + jnp.exp(logdet0) * onehot,
         sp=state.sp * (1 - onehot) + onehot,            # sp = 1
         v=state.v * (1 - onehot) + onehot,              # v = 1
         active=state.active | (onehot > 0),
@@ -296,7 +284,7 @@ def prune(cfg: FIGMNConfig, state: FIGMNState) -> FIGMNState:
     """
     remove = state.active & (state.v > cfg.vmin) & (state.sp < cfg.spmin)
     return FIGMNState(mu=state.mu, lam=state.lam, logdet=state.logdet,
-                      det=state.det, sp=state.sp, v=state.v,
+                      sp=state.sp, v=state.v,
                       active=state.active & ~remove, n_created=state.n_created)
 
 

@@ -32,7 +32,7 @@ def _top_k_by_sp(state: FIGMNState, kmax: int) -> FIGMNState:
     take = lambda a: jnp.take(a, idx, axis=0)
     return FIGMNState(
         mu=take(state.mu), lam=take(state.lam), logdet=take(state.logdet),
-        det=take(state.det), sp=take(state.sp), v=take(state.v),
+        sp=take(state.sp), v=take(state.v),
         active=take(state.active), n_created=state.n_created)
 
 
@@ -46,7 +46,7 @@ def union(cfg: FIGMNConfig, states: Sequence[FIGMNState]) -> FIGMNState:
     cat = lambda f: jnp.concatenate([f(s) for s in states], axis=0)
     big = FIGMNState(
         mu=cat(lambda s: s.mu), lam=cat(lambda s: s.lam),
-        logdet=cat(lambda s: s.logdet), det=cat(lambda s: s.det),
+        logdet=cat(lambda s: s.logdet),
         sp=cat(lambda s: s.sp), v=cat(lambda s: s.v),
         active=cat(lambda s: s.active),
         n_created=sum(s.n_created for s in states))
@@ -74,7 +74,6 @@ def moment_match_pair(cfg: FIGMNConfig, state: FIGMNState,
         mu=upd(state.mu, mu),
         lam=state.lam * (1 - ka[:, None, None]) + lam[None] * ka[:, None, None],
         logdet=state.logdet * (1 - ka) + logdet * ka,
-        det=state.det * (1 - ka) + jnp.exp(logdet) * ka,
         sp=state.sp * (1 - ka) * (1 - kb) + sp * ka,
         v=jnp.maximum(state.v, state.v[ib] * ka),
         active=state.active & ~(kb > 0),

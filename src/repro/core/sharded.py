@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import figmn
 from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
 
@@ -33,7 +34,7 @@ _BIG = jnp.int32(2 ** 30)
 def state_pspec(axis: str) -> FIGMNState:
     """PartitionSpec pytree: shard every per-component array on its K axis."""
     return FIGMNState(
-        mu=P(axis), lam=P(axis), logdet=P(axis), det=P(axis),
+        mu=P(axis), lam=P(axis), logdet=P(axis),
         sp=P(axis), v=P(axis), active=P(axis), n_created=P())
 
 
@@ -72,12 +73,12 @@ def _update_global(cfg: FIGMNConfig, state: FIGMNState, x: Array, d2: Array,
     mu_new = state.mu + dmu
     e_star = x[None, :] - mu_new
     if cfg.update_mode == "exact":
-        lam_new, logdet_new, det_new = figmn.precision_rank1_update_exact(
-            state.lam, state.logdet, state.det, e, w, cfg.dim)
+        lam_new, logdet_new = figmn.precision_rank1_update_exact(
+            state.lam, state.logdet, e, w, cfg.dim)
     else:
-        lam_new, logdet_new, det_new = figmn.precision_rank2_update(
-            state.lam, state.logdet, state.det, e_star, dmu, w, cfg.dim)
-    return FIGMNState(mu=mu_new, lam=lam_new, logdet=logdet_new, det=det_new,
+        lam_new, logdet_new = figmn.precision_rank2_update(
+            state.lam, state.logdet, e_star, dmu, w, cfg.dim)
+    return FIGMNState(mu=mu_new, lam=lam_new, logdet=logdet_new,
                       sp=sp_new, v=v_new, active=state.active,
                       n_created=state.n_created)
 
@@ -98,7 +99,7 @@ def _create_global(cfg: FIGMNConfig, state: FIGMNState, x: Array, d2: Array,
     sp_masked = jnp.where(state.active, state.sp, jnp.inf)
     local_weak = jnp.argmin(sp_masked)
     # encode (sp, global_idx) so pmin breaks ties deterministically
-    enc = sp_masked[local_weak] * (k_local * jax.lax.axis_size(axis)) \
+    enc = sp_masked[local_weak] * (k_local * compat.axis_size(axis)) \
         + (me * k_local + local_weak).astype(cfg.dtype)
     gweak_enc = jax.lax.pmin(enc, axis)
     my_weak_enc = enc
@@ -120,7 +121,6 @@ def _create_global(cfg: FIGMNConfig, state: FIGMNState, x: Array, d2: Array,
         mu=state.mu * (1 - sel) + x[None, :] * sel,
         lam=state.lam * (1 - sel[..., None]) + lam0[None] * sel[..., None],
         logdet=state.logdet * (1 - onehot) + logdet0 * onehot,
-        det=state.det * (1 - onehot) + jnp.exp(logdet0) * onehot,
         sp=state.sp * (1 - onehot) + onehot,
         v=state.v * (1 - onehot) + onehot,
         active=state.active | (onehot > 0),
@@ -165,7 +165,6 @@ def fit_sharded(cfg: FIGMNConfig, state: FIGMNState, xs: Array, mesh: Mesh,
         state, _ = jax.lax.scan(step, state, xs.astype(cfg.dtype))
         return state
 
-    fn = jax.shard_map(local_fit, mesh=mesh,
-                       in_specs=(specs, P()), out_specs=specs,
-                       check_vma=False)
+    fn = compat.shard_map(local_fit, mesh=mesh,
+                          in_specs=(specs, P()), out_specs=specs)
     return jax.jit(fn)(state, xs)

@@ -22,8 +22,7 @@ Array = jax.Array
 @partial(jax.tree_util.register_dataclass,
          data_fields=["sigma_ini"],
          meta_fields=["kmax", "dim", "beta", "delta", "vmin", "spmin",
-                      "dtype_str", "faithful_det", "update_mode", "backend",
-                      "fused"])
+                      "dtype_str", "update_mode", "backend", "fused"])
 @dataclasses.dataclass(frozen=True)
 class FIGMNConfig:
     """Static configuration (hyper-parameters from §2 of the paper).
@@ -34,9 +33,6 @@ class FIGMNConfig:
            a second component).
     delta: scaling factor for the initial standard deviation (eq. 13).
     vmin/spmin: pruning thresholds (§2.3).
-    faithful_det: if True, track |C| multiplicatively exactly as printed in
-           the paper (eqs. 25–26).  If False (default), track log|C| — an
-           exact reformulation that is stable for D ≳ 100 in float32.
     update_mode: "paper" — eq. 11 verbatim (two rank-one updates, eqs. 20-21
            / 25-26).  NOTE: the printed eq. 11 deviates from the exact
            weighted-moment recursion by -ω²eeᵀ and is not PSD-preserving
@@ -53,7 +49,6 @@ class FIGMNConfig:
     vmin: float = 5.0
     spmin: float = 3.0
     dtype_str: str = "float32"
-    faithful_det: bool = False
     update_mode: str = "paper"
     # "jnp" (XLA-fused) or "pallas" (explicit VMEM-tiled kernels; interpret
     # mode on CPU).  Both are validated against each other in tests.
@@ -71,7 +66,7 @@ class FIGMNConfig:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["mu", "lam", "logdet", "det", "sp", "v", "active",
+         data_fields=["mu", "lam", "logdet", "sp", "v", "active",
                       "n_created"],
          meta_fields=[])
 @dataclasses.dataclass
@@ -80,8 +75,9 @@ class FIGMNState:
 
     mu:      (K, D)    component means
     lam:     (K, D, D) precision matrices  Λ = C⁻¹
-    logdet:  (K,)      log |C|   (kept even in faithful mode, for tests)
-    det:     (K,)      |C| tracked multiplicatively (paper-faithful path)
+    logdet:  (K,)      log |C| maintained via the determinant lemma
+                       (eqs. 25–26 in log space); the CANONICAL determinant
+                       track — |C| itself is derived lazily (see ``det``)
     sp:      (K,)      posterior-probability accumulators
     v:       (K,)      component ages
     active:  (K,)      slot occupancy mask
@@ -90,11 +86,21 @@ class FIGMNState:
     mu: Array
     lam: Array
     logdet: Array
-    det: Array
     sp: Array
     v: Array
     active: Array
     n_created: Array
+
+    @property
+    def det(self) -> Array:
+        """|C| derived from the canonical log|C| track.
+
+        Not a stored field: the multiplicative track of the printed
+        eqs. 25–26 is algebraically identical to exp(Σ Δlog|C|) but
+        underflows for D ≳ 100 in float32 and could silently drift from
+        the log track; deriving it makes divergence impossible.
+        """
+        return jnp.exp(self.logdet)
 
     @property
     def n_active(self) -> Array:

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 Array = jax.Array
 
 
@@ -55,7 +57,7 @@ def compressed_psum(x: Array, axis: str) -> Array:
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale_max),
                  -127, 127).astype(jnp.int8)
     total = jax.lax.psum(q.astype(jnp.int32), axis)
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     return (total.astype(jnp.float32) * scale_max / n).astype(x.dtype)
 
 
@@ -78,10 +80,9 @@ def pod_grads_compressed(cfg, params, batch, n_micro: int,
         loss = jax.lax.pmean(loss, "pod")
         return loss, grads
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         per_pod, mesh=mesh,
         in_specs=(P(), P("pod")),
         out_specs=(P(), P()),
-        check_vma=False,
         auto=frozenset(axes_rest))
     return fn(params, batch)

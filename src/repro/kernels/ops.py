@@ -66,11 +66,11 @@ def mahalanobis_sq(diff: jax.Array, lam: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("dim", "interpret"))
-def precision_rank2_update(lam: jax.Array, logdet: jax.Array, det: jax.Array,
+def precision_rank2_update(lam: jax.Array, logdet: jax.Array,
                            e_star: jax.Array, dmu: jax.Array, w: jax.Array,
                            dim: int,
                            interpret: bool | None = None
-                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                           ) -> Tuple[jax.Array, jax.Array]:
     """Drop-in Pallas replacement for core.figmn.precision_rank2_update.
 
     Same math (eqs. 20–21 / 25–26) restructured into two single-pass kernels
@@ -105,17 +105,15 @@ def precision_rank2_update(lam: jax.Array, logdet: jax.Array, det: jax.Array,
     logdet_new = logdet + dim * jnp.log(one_m_w).astype(logdet.dtype) \
         + jnp.log(jnp.abs(denom1)).astype(logdet.dtype) \
         + jnp.log(jnp.abs(1.0 - t)).astype(logdet.dtype)
-    det_new = det * one_m_w.astype(det.dtype) ** dim \
-        * denom1.astype(det.dtype) * (1.0 - t).astype(det.dtype)
-    return lam_new.astype(in_dtype), logdet_new, det_new
+    return lam_new.astype(in_dtype), logdet_new
 
 
 @functools.partial(jax.jit, static_argnames=("dim", "interpret"))
 def precision_rank1_update_exact(lam: jax.Array, logdet: jax.Array,
-                                 det: jax.Array, e: jax.Array, w: jax.Array,
+                                 e: jax.Array, w: jax.Array,
                                  dim: int,
                                  interpret: bool | None = None
-                                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                                 ) -> Tuple[jax.Array, jax.Array]:
     """Pallas path for the beyond-paper exact single-rank-one update."""
     if interpret is None:
         interpret = _interpret_default()
@@ -139,8 +137,7 @@ def precision_rank1_update_exact(lam: jax.Array, logdet: jax.Array,
         block_r=bd, block_c=bd, interpret=interpret)[:, :d, :d]
     logdet_new = logdet + dim * jnp.log(one_m_w).astype(logdet.dtype) \
         + jnp.log1p(w32 * s).astype(logdet.dtype)
-    det_new = det * one_m_w.astype(det.dtype) ** dim * denom.astype(det.dtype)
-    return lam_new.astype(in_dtype), logdet_new, det_new
+    return lam_new.astype(in_dtype), logdet_new
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -162,7 +159,7 @@ def matvec(lam: jax.Array, diff: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("dim", "update_mode",
                                              "interpret"))
-def fused_apply(lam: jax.Array, logdet: jax.Array, det: jax.Array,
+def fused_apply(lam: jax.Array, logdet: jax.Array,
                 y: jax.Array, d2: jax.Array, w: jax.Array, dim: int,
                 update_mode: str = "paper",
                 interpret: bool | None = None):
@@ -176,8 +173,8 @@ def fused_apply(lam: jax.Array, logdet: jax.Array, det: jax.Array,
     dpad = _pad_dim(d)
     bd = _pick_block(dpad)
     w32 = w.astype(jnp.float32)
-    beta, dlogdet, dfac = fused_step_coeffs(d2.astype(jnp.float32), w32,
-                                            dim, update_mode)
+    beta, dlogdet = fused_step_coeffs(d2.astype(jnp.float32), w32,
+                                      dim, update_mode)
     one_m_w = 1.0 - w32
     if update_mode == "exact":
         inv1mw = 1.0 / one_m_w
@@ -191,5 +188,4 @@ def fused_apply(lam: jax.Array, logdet: jax.Array, det: jax.Array,
         inv1mw, c1, jnp.zeros_like(c1),
         block_r=bd, block_c=bd, interpret=interpret)[:, :d, :d]
     return (lam_new.astype(in_dtype),
-            logdet + dlogdet.astype(logdet.dtype),
-            det * dfac.astype(det.dtype))
+            logdet + dlogdet.astype(logdet.dtype))

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.configs.shapes import (SHAPES, ShapeSpec, cache_max_len,
                                   cell_applicable, input_specs)
 from repro.distributed import hlo_analysis
@@ -145,7 +145,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         record["compile_s"] = round(time.time() - t1, 1)
         record["memory"] = _mem_dict(compiled.memory_analysis())
-        ca = compiled.cost_analysis() or {}
+        ca = compat.cost_analysis(compiled)
         record["xla_cost"] = {k: float(v) for k, v in ca.items()
                               if k in ("flops", "bytes accessed")}
         txt = compiled.as_text()

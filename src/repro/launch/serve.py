@@ -3,8 +3,10 @@
 Loads (or random-inits) a model, spins the ServeEngine over a synthetic
 request stream, reports throughput/latency percentiles, and runs the FIGMN
 OOD monitor over prompt embeddings (the paper's algorithm on the serving
-path).  At production scale the same engine runs per model replica with the
-dry-run's decode shardings.
+path) as a ``repro.stream.StreamRuntime`` — the same always-on runtime
+(chunked ingestion, lifecycle budget, drift detection) that production
+replicas keep running over live request features.  At production scale the
+same engine runs per model replica with the dry-run's decode shardings.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
@@ -25,6 +27,8 @@ from repro.core import figmn
 from repro.core.types import FIGMNConfig
 from repro.models import transformer as tr
 from repro.serve.engine import Request, ServeEngine
+from repro.stream import (DriftConfig, LifecycleConfig, RuntimeConfig,
+                          StreamRuntime)
 
 
 def main() -> None:
@@ -79,17 +83,26 @@ def main() -> None:
     print(f"latency p50={ls[len(ls) // 2] * 1e3:.0f}ms "
           f"p95={ls[int(len(ls) * 0.95) - 1] * 1e3:.0f}ms")
 
-    # FIGMN OOD monitor over prompt-embedding means (first 16 dims)
+    # FIGMN OOD monitor over prompt-embedding means (first 16 dims), run as
+    # the streaming runtime a live replica would keep open: chunked ingest,
+    # a fixed component budget, and drift detection over request features.
     emb = np.asarray(params["embed"], np.float32)
     feats = np.stack([emb[r.prompt].mean(0)[:16] for r in reqs])
     fcfg = FIGMNConfig(kmax=8, dim=16, beta=0.1, delta=1.0, vmin=1e9,
                        spmin=0.0, update_mode="exact",
                        sigma_ini=figmn.sigma_from_data(
                            jnp.asarray(feats), 1.0))
-    st = figmn.fit(fcfg, figmn.init_state(fcfg), jnp.asarray(feats))
-    scores = figmn.score_batch(fcfg, st, jnp.asarray(feats))
+    monitor = StreamRuntime(fcfg, RuntimeConfig(
+        chunk=max(args.requests // 4, 4),
+        lifecycle=LifecycleConfig(k_budget=8, every=4),
+        drift=DriftConfig(window=8, threshold=8.0, response="inflate")))
+    summary = monitor.ingest(feats)
+    scores = monitor.score(feats)
     print(f"FIGMN OOD monitor active: in-dist logp median "
-          f"{float(jnp.median(scores)):.1f} over {len(reqs)} requests")
+          f"{float(jnp.median(scores)):.1f} over {len(reqs)} requests "
+          f"({summary['points_per_s']:.0f} feats/s, "
+          f"K={summary['active_k']}, "
+          f"drift alarms={summary['drift_alarms']})")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.distributed.sharding import constrain
 
 Array = jax.Array
@@ -238,11 +239,11 @@ def attention_trainpath(q: Array, k: Array, v: Array, q_pos: Array,
                                causal=True, interpret=interp)
     qs = resolve_spec(("batch", None, "heads", None), q.shape)
     ps = resolve_spec(("batch", None), q_pos.shape)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         functools.partial(flash_attention, causal=True, interpret=interp),
         mesh=mesh,
         in_specs=(qs, qs, qs, ps, ps, P()),
-        out_specs=qs, check_vma=False)
+        out_specs=qs)
     return fn(q, k, v, q_pos, k_pos, win)
 
 

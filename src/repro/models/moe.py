@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.distributed import sharding as shd
 
 Array = jax.Array
@@ -142,7 +143,7 @@ def moe_alltoall_local(p_local: Dict[str, Array], x_local: Array,
                        act: str, axis: str = "model") -> Array:
     """shard_map body.  x_local: (B_l, T_l, D) — tokens already split over
     data AND model axes.  p_local experts: (E/m, D, F); router replicated."""
-    m = jax.lax.axis_size(axis)
+    m = compat.axis_size(axis)
     b, t, d = x_local.shape
     n = b * t
     e_pad = p_local["w_router"].shape[1]
@@ -166,7 +167,7 @@ def moe_psum_local(p_local: Dict[str, Array], x_local: Array,
                    axis: str = "model") -> Array:
     """shard_map decode body.  x_local: (B_l, T, D) replicated over `axis`;
     every device computes its local experts densely and psums."""
-    m = jax.lax.axis_size(axis)
+    m = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
     b, t, d = x_local.shape
     e_pad = p_local["w_router"].shape[1]
@@ -205,20 +206,18 @@ def moe_ffn(p: Dict[str, Array], x: Array, *, n_real: int, top_k: int,
     }
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     if not decode and t % m == 0 and t // m >= 1:
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             functools.partial(moe_alltoall_local, n_real=n_real,
                               top_k=top_k, capacity_factor=capacity_factor,
                               act=act),
             mesh=mesh,
             in_specs=(expert_specs, P(data_axes, "model")),
-            out_specs=P(data_axes, "model"),
-            check_vma=False)
+            out_specs=P(data_axes, "model"))
         return fn(p, x)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         functools.partial(moe_psum_local, n_real=n_real, top_k=top_k,
                           act=act),
         mesh=mesh,
         in_specs=(expert_specs, P(data_axes)),
-        out_specs=P(data_axes),
-        check_vma=False)
+        out_specs=P(data_axes))
     return fn(p, x)

@@ -1,0 +1,30 @@
+"""repro.stream — the production streaming runtime for the Fast IGMN.
+
+The paper (Pinto & Engel 2015) defines a single-pass O(NKD²) learner; this
+package supplies everything around it that an unbounded, non-stationary
+production stream needs:
+
+  ingest.py     micro-batch chunking + double-buffered H2D + path dispatch
+  lifecycle.py  component-pool management under a fixed K budget
+  drift.py      novelty-gate + log-likelihood-CUSUM drift detection
+  telemetry.py  per-chunk metrics, feeding repro.ft.anomaly
+  runtime.py    the StreamRuntime orchestrator (checkpoint-backed resume)
+
+Design lineage: the lifecycle/drift split follows Pinto & Engel's follow-up
+("Scalable and Incremental Learning of Gaussian Mixture Models", 2017) and
+Gepperth & Pfülb ("Gradient-based training of GMMs for High-Dimensional
+Streaming Data", 2019): the per-point update stays the paper's fast rank-one
+algebra, while everything that changes the pool's SHAPE (spawn/prune/merge)
+runs off the hot path at a fixed cadence so jitted shapes stay static.
+"""
+from repro.stream.drift import DriftConfig, DriftDetector
+from repro.stream.ingest import DoubleBufferedLoader, select_path
+from repro.stream.lifecycle import FailureBuffer, LifecycleConfig
+from repro.stream.runtime import RuntimeConfig, StreamRuntime
+from repro.stream.telemetry import ChunkMetrics, Telemetry
+
+__all__ = [
+    "ChunkMetrics", "DoubleBufferedLoader", "DriftConfig", "DriftDetector",
+    "FailureBuffer", "LifecycleConfig", "RuntimeConfig", "StreamRuntime",
+    "Telemetry", "select_path",
+]

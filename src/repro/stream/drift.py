@@ -1,0 +1,150 @@
+"""Drift detection for non-stationary streams.
+
+Two signals, both derived from ONE shared frozen-parameter pass per chunk
+(ingest.chunk_stats — the gate and the log-density reuse the same d²):
+
+  * the FIGMN novelty gate itself (§2.1): the fraction of a chunk's points
+    that fail the chi² gate — a distribution shift shows up first as a
+    burst of novelty,
+  * a CUSUM over the per-chunk mean log-likelihood: slow covariate drift
+    depresses log p(x) long before it triggers the gate.  The one-sided
+    CUSUM  g ← max(0, g + (μ_ref − ll − κσ_ref)/σ_ref)  accumulates
+    standardised evidence that the stream no longer matches the learned
+    density and alarms at g > h (Page 1954; the standard streaming choice —
+    cf. Gepperth & Pfülb 2019's discussion of GMM drift adaptation).
+
+Responses (applied by the runtime, severity chosen by config):
+
+  "none"        detect only,
+  "inflate"     multiply every covariance by ``inflate`` (Λ /= c,
+                log|C| += D·log c): keeps means but widens the gates so the
+                learner re-adapts quickly — the cheap response,
+  "reset_weak"  deactivate the weakest ``reset_frac`` of live components,
+                freeing budget for the new regime while keeping the strong
+                survivors,
+  "fork"        checkpoint the pre-drift mixture (the runtime saves it
+                before responding), then reset_weak — the old regime stays
+                recoverable for later replay/serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import FIGMNConfig, FIGMNState
+
+RESPONSES = ("none", "inflate", "reset_weak", "fork")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    window: int = 8          # chunks in the rolling reference window
+    threshold: float = 8.0   # CUSUM alarm level h (std units)
+    slack: float = 0.5       # CUSUM allowance κ (std units)
+    min_chunks: int = 4      # warm-up before alarms may fire
+    novelty_weight: float = 4.0   # gate-failure-rate contribution to g
+    response: str = "reset_weak"
+    reset_frac: float = 0.5
+    inflate: float = 4.0
+
+    def __post_init__(self):
+        if self.response not in RESPONSES:
+            raise ValueError(f"response must be one of {RESPONSES}")
+
+
+class DriftDetector:
+    """Windowed log-likelihood CUSUM + novelty-rate drift detector."""
+
+    def __init__(self, cfg: DriftConfig):
+        self.cfg = cfg
+        self._ref: list = []       # rolling per-chunk mean-ll reference
+        self._ref_nov: list = []   # rolling novelty-rate reference
+        self._g = 0.0
+        self.alarms = 0
+
+    @property
+    def score(self) -> float:
+        return self._g
+
+    def update(self, mean_ll: float, novelty_rate: float,
+               weight: float = 1.0) -> Tuple[float, bool]:
+        """Feed one chunk's stats; returns (score, alarm).
+
+        weight: fraction of a nominal chunk this record covers — a runt
+        tail chunk of B points carries B/chunk worth of evidence (its mean
+        ll has √(chunk/B)× the noise), so its increment is scaled down
+        rather than letting two noisy points fake a regime change.
+
+        On alarm the CUSUM resets and the reference window restarts from
+        the post-drift regime (the learner is about to re-adapt, so the old
+        baseline is void either way).
+        """
+        c = self.cfg
+        weight = min(max(weight, 0.0), 1.0)
+        if len(self._ref) >= c.min_chunks:
+            mu = float(np.mean(self._ref))
+            sd = float(np.std(self._ref)) or 1.0
+            self._g = max(0.0, self._g
+                          + ((mu - mean_ll) / sd - c.slack) * weight)
+            # only EXCESS novelty counts: during early learning the gate
+            # fires constantly (that's Algorithm 3 working, not drift), so
+            # the baseline rate is subtracted before it feeds the score
+            base_nov = float(np.mean(self._ref_nov)) if self._ref_nov else 0.0
+            self._g += c.novelty_weight * weight \
+                * max(0.0, novelty_rate - base_nov)
+            if self._g > c.threshold:
+                self.alarms += 1
+                self._g = 0.0
+                self._ref = []
+                self._ref_nov = []
+                return c.threshold, True
+        self._ref.append(mean_ll)
+        self._ref_nov.append(novelty_rate)
+        if len(self._ref) > c.window:
+            self._ref = self._ref[-c.window:]
+            self._ref_nov = self._ref_nov[-c.window:]
+        return self._g, False
+
+
+# ---------------------------------------------------------------------------
+# Responses (pure functions on state)
+# ---------------------------------------------------------------------------
+
+def inflate_covariances(cfg: FIGMNConfig, state: FIGMNState,
+                        factor: float) -> FIGMNState:
+    """C ← factor·C for every active slot: Λ /= factor, log|C| += D·log f."""
+    f = jnp.asarray(factor, cfg.dtype)
+    sel = state.active
+    lam = jnp.where(sel[:, None, None], state.lam / f, state.lam)
+    logdet = jnp.where(sel, state.logdet + cfg.dim * jnp.log(f),
+                       state.logdet)
+    return dataclasses.replace(state, lam=lam, logdet=logdet)
+
+
+def reset_weakest(cfg: FIGMNConfig, state: FIGMNState,
+                  frac: float) -> FIGMNState:
+    """Deactivate the lowest-sp ``frac`` of live components (≥1, < all)."""
+    act = np.asarray(state.active)
+    live = int(act.sum())
+    n_reset = min(max(int(round(live * frac)), 1), max(live - 1, 0))
+    if n_reset == 0:
+        return state
+    sp = np.where(act, np.asarray(state.sp), np.inf)
+    idx = np.argsort(sp)[:n_reset]
+    keep = act.copy()
+    keep[idx] = False
+    return dataclasses.replace(state, active=jnp.asarray(keep))
+
+
+def respond(cfg: FIGMNConfig, dcfg: DriftConfig, state: FIGMNState
+            ) -> FIGMNState:
+    """Apply the configured drift response ("fork" checkpointing is the
+    runtime's job — here it degrades to reset_weak)."""
+    if dcfg.response == "inflate":
+        return inflate_covariances(cfg, state, dcfg.inflate)
+    if dcfg.response in ("reset_weak", "fork"):
+        return reset_weakest(cfg, state, dcfg.reset_frac)
+    return state

@@ -1,0 +1,160 @@
+"""Micro-batch ingestion: chunking, double-buffered H2D, path dispatch.
+
+Implements the stream side of Algorithm 1: the learner itself is strictly
+sequential in the data (that IS the IGMN), so the only ingestion freedoms
+are (a) when host→device transfers happen and (b) which compiled body
+consumes a chunk.  Two bodies exist:
+
+  "scan"  — per-chunk ``lax.scan`` over ``core.figmn.learn_one`` (the
+            reference O(KD²) path, eqs. 3–10/20–26; handles creation and
+            pruning inline, so chunked ingestion is bit-identical to one
+            ``core.figmn.fit`` call over the concatenated stream),
+  "vmem"  — the VMEM-resident Pallas kernel ``kernels.figmn_stream``: the
+            whole (K, D, D) working set stays in VMEM scratch for the whole
+            chunk and HBM is touched only for the x_t vectors (DESIGN
+            lineage in the kernel's module docstring).  Creation events are
+            no-ops inside the kernel; gate-failing points are surfaced to
+            the caller for the lifecycle spawn buffer.
+
+``select_path`` picks between them with a VMEM-budget heuristic: the vmem
+kernel is only profitable (and only correct to launch) when the working set
+K·D²·4B fits the budget, the update mode is the PSD-safe "exact" one, and
+we are actually on a TPU (in interpret mode the kernel is a correctness
+path, not a fast path).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
+from repro.kernels import figmn_stream
+
+#: Conservative per-core VMEM available to the resident kernel (bytes).
+DEFAULT_VMEM_BUDGET = 12 * 2 ** 20
+
+
+def select_path(cfg: FIGMNConfig, *, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                requested: str = "auto") -> str:
+    """Choose the per-chunk dispatch path ("scan" | "vmem").
+
+    requested: "scan"/"vmem" force a path; "auto" applies the heuristic.
+    """
+    if requested in ("scan", "vmem"):
+        return requested
+    if requested != "auto":
+        raise ValueError(f"unknown path {requested!r}")
+    working_set = cfg.kmax * cfg.dim * cfg.dim * 4
+    if (cfg.update_mode == "exact"
+            and working_set <= vmem_budget
+            and jax.default_backend() == "tpu"):
+        return "vmem"
+    return "scan"
+
+
+class DoubleBufferedLoader:
+    """Chunked host→device feed with one chunk of transfer lookahead.
+
+    ``jax.device_put`` is asynchronous: issuing the put for chunk i+1 before
+    the consumer blocks on chunk i overlaps the H2D copy with the device
+    compute on the current chunk — the classic double buffer, with XLA's
+    transfer engine as the second buffer.
+    """
+
+    def __init__(self, xs, chunk: int, dtype=jnp.float32):
+        self._np = np.asarray(xs)
+        if self._np.ndim != 2:
+            raise ValueError(f"expected (N, D) stream, got {self._np.shape}")
+        self.chunk = int(chunk)
+        self.dtype = dtype
+
+    def __len__(self) -> int:
+        return -(-self._np.shape[0] // self.chunk) if self._np.size else 0
+
+    def _put(self, a: int, b: int) -> Array:
+        return jax.device_put(jnp.asarray(self._np[a:b], self.dtype))
+
+    def __iter__(self) -> Iterator[Tuple[Array, np.ndarray]]:
+        """Yields (device_chunk, host_chunk) pairs in stream order."""
+        n = self._np.shape[0]
+        bounds = [(i, min(i + self.chunk, n))
+                  for i in range(0, n, self.chunk)]
+        if not bounds:
+            return
+        nxt = self._put(*bounds[0])
+        for j, (a, b) in enumerate(bounds):
+            cur = nxt
+            if j + 1 < len(bounds):
+                nxt = self._put(*bounds[j + 1])   # overlap with consumer
+            yield cur, self._np[a:b]
+
+
+def fit_chunk_scan(cfg: FIGMNConfig, state: FIGMNState, xc: Array,
+                   do_prune: bool) -> FIGMNState:
+    """Reference path: lax.scan of learn_one — identical math to figmn.fit."""
+    return figmn.fit(cfg, state, xc, do_prune=do_prune)
+
+
+def fit_chunk_vmem(cfg: FIGMNConfig, state: FIGMNState, xc: Array
+                   ) -> Tuple[FIGMNState, int]:
+    """VMEM-resident path: whole chunk in one pallas_call.
+
+    Creation events are no-ops inside the kernel (gate-failing points leave
+    the state untouched); the caller collects them via ``gate_failures`` for
+    the lifecycle spawn buffer.  Returns (state', n_accepted).
+    """
+    n = int(xc.shape[0])
+    thresh = jnp.asarray(
+        [float(chi2_quantile(cfg.dim, 1.0 - cfg.beta))], jnp.float32)
+    mu, lam, logdet, sp, nacc = figmn_stream.figmn_stream_pallas(
+        xc.astype(jnp.float32), state.mu.astype(jnp.float32),
+        state.lam.astype(jnp.float32), state.logdet.astype(jnp.float32),
+        state.sp.astype(jnp.float32), state.active.astype(jnp.int32),
+        thresh, dim=cfg.dim, n_points=n,
+        interpret=jax.default_backend() != "tpu")
+    dt = cfg.dtype
+    new = FIGMNState(
+        mu=mu.astype(dt), lam=lam.astype(dt), logdet=logdet.astype(dt),
+        sp=sp.astype(dt),
+        # eq. 4: every active component ages once per point
+        v=state.v + n * state.active.astype(dt),
+        active=state.active, n_created=state.n_created)
+    return new, int(nacc[0])
+
+
+_LOG_2PI = 1.8378770664093453
+
+
+@jax.jit
+def chunk_stats(state: FIGMNState, xc: Array, thresh: Array
+                ) -> Tuple[Array, Array]:
+    """(fails (B,) bool, mean mixture log-likelihood ()) vs frozen params.
+
+    ONE batched pass over Λ yields d² (B, K), which feeds BOTH the chi²
+    gate (→ lifecycle spawn buffer / novelty rate) and the mixture
+    log-density (→ drift CUSUM): enabling drift detection costs a single
+    extra Λ read per chunk, not one per statistic.  Same math as
+    figmn.mahalanobis_sq + figmn.log_likelihood.
+    """
+    diff = xc[:, None, :] - state.mu[None, :, :]          # (B, K, D)
+    y = jnp.einsum("kde,bke->bkd", state.lam, diff)
+    d2 = jnp.einsum("bkd,bkd->bk", diff, y)
+    fails = ~jnp.any(state.active[None, :] & (d2 < thresh), axis=1)
+    dim = xc.shape[1]
+    logp = -0.5 * (dim * _LOG_2PI + state.logdet[None, :] + d2)
+    logprior = jnp.log(state.sp / jnp.maximum(jnp.sum(state.sp), 1e-30)
+                       + 1e-30)
+    logjoint = jnp.where(state.active[None, :], logp + logprior[None, :],
+                         -jnp.inf)
+    ll = jax.scipy.special.logsumexp(logjoint, axis=1)
+    return fails, jnp.mean(ll)
+
+
+learn_one_jit = jax.jit(figmn.learn_one, static_argnames=("do_prune",))
+
+score_batch_jit = jax.jit(figmn.score_batch)

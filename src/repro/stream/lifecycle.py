@@ -1,0 +1,109 @@
+"""Component-pool lifecycle under a fixed K budget (off the hot path).
+
+§2.3 of the paper gives the spawn/prune rules; what it does not give is a
+schedule.  Running shape-changing work per point would force retraces and
+serialise the stream, so — following the scalable follow-up (Pinto & Engel
+2017, where the component budget is the central knob) — all lifecycle work
+runs every ``lifecycle_every`` chunks on host-side Python, leaving the
+jitted per-chunk bodies shape-static:
+
+  spawn  — replay points from the gate-failure buffer through learn_one
+           (Algorithm 3 creates a component iff the point still fails the
+           gate — points explained by components spawned earlier in the
+           same pass update instead of duplicating),
+  prune  — §2.3 age/mass rule (figmn.prune),
+  merge  — while the pool exceeds ``k_budget``: moment-match the two most
+           similar components (core.merge.closest_pair /
+           moment_match_pair) — O(D³) but rare, so the amortised per-point
+           cost stays O(KD²).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn, merge
+from repro.core.types import FIGMNConfig, FIGMNState
+from repro.stream import ingest
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecycleConfig:
+    """Policy knobs for pool management.
+
+    k_budget: max live components after a lifecycle pass (0 ⇒ cfg.kmax).
+    every:    chunks between passes.
+    spawn_max: buffered gate-failure points replayed per pass.
+    buffer_cap: gate-failure ring-buffer capacity (host memory).
+    prune/merge_down: enable the §2.3 prune rule / budget merging.
+    """
+    k_budget: int = 0
+    every: int = 8
+    spawn_max: int = 4
+    buffer_cap: int = 256
+    prune: bool = True
+    merge_down: bool = True
+
+
+@dataclasses.dataclass
+class LifecycleReport:
+    spawned: int = 0
+    pruned: int = 0
+    merged: int = 0
+    active_k: int = 0
+
+
+class FailureBuffer:
+    """Host-side ring buffer of gate-failing points (spawn candidates)."""
+
+    def __init__(self, cap: int, dim: int):
+        self.cap = int(cap)
+        self.dim = int(dim)
+        self._items: List[np.ndarray] = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def push(self, xs: np.ndarray) -> None:
+        if self.cap <= 0:                        # no lifecycle ⇒ no buffer
+            return
+        for x in np.atleast_2d(np.asarray(xs, np.float32)):
+            self._items.append(x)
+        if len(self._items) > self.cap:          # drop oldest
+            self._items = self._items[-self.cap:]
+
+    def drain(self, k: Optional[int] = None) -> np.ndarray:
+        k = len(self._items) if k is None else min(k, len(self._items))
+        out, self._items = self._items[:k], self._items[k:]
+        return np.asarray(out, np.float32).reshape(k, self.dim)
+
+
+def run_pass(cfg: FIGMNConfig, lcfg: LifecycleConfig, state: FIGMNState,
+             buffer: Optional[FailureBuffer] = None
+             ) -> Tuple[FIGMNState, LifecycleReport]:
+    """One lifecycle pass: prune → spawn → merge-to-budget."""
+    rep = LifecycleReport()
+    k_budget = lcfg.k_budget or cfg.kmax
+
+    if lcfg.prune and cfg.spmin > 0:
+        before = int(state.n_active)
+        state = figmn.prune(cfg, state)
+        rep.pruned = before - int(state.n_active)
+
+    if buffer is not None and len(buffer):
+        for x in buffer.drain(lcfg.spawn_max):
+            state = ingest.learn_one_jit(cfg, state, jnp.asarray(x),
+                                         do_prune=False)
+            rep.spawned += 1
+
+    if lcfg.merge_down:
+        while int(state.n_active) > k_budget:
+            ia, ib = merge.closest_pair(state)
+            state = merge.moment_match_pair(cfg, state, ia, ib)
+            rep.merged += 1
+
+    rep.active_k = int(state.n_active)
+    return state, rep

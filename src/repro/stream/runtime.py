@@ -1,0 +1,213 @@
+"""StreamRuntime — the orchestrator that owns the full online loop.
+
+One object unifies what previously lived in four places (core.figmn one-shot
+fits, kernels.figmn_stream segments, ft.anomaly ad-hoc loops, example
+scripts): chunked ingestion (ingest.py), pool lifecycle (lifecycle.py),
+drift handling (drift.py) and telemetry (telemetry.py), with
+checkpoint-backed resume via checkpoint.manager.
+
+Invariant (tested): with lifecycle and drift disabled, ``ingest`` over any
+chunking equals ONE ``core.figmn.fit`` pass over the concatenated stream —
+chunking only re-slices the lax.scan, it never changes the math.  This is
+the contract that lets later scaling PRs (sharded replicas via core.merge,
+async serving) swap the per-chunk body without re-validating the learner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import figmn
+from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
+from repro.stream import drift as drift_mod
+from repro.stream import ingest, lifecycle, telemetry
+from repro.ft.anomaly import AnomalyDetector
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Orchestration knobs (the FIGMN hyper-parameters live in FIGMNConfig).
+
+    chunk:            micro-batch size (points per dispatch).
+    path:             "auto" | "scan" | "vmem" (see ingest.select_path).
+    lifecycle:        pool-management policy; None disables (creation and
+                      §2.3 pruning then happen inline in the scan body,
+                      matching one-shot figmn.fit exactly).
+    drift:            drift policy; None disables detection entirely.
+    checkpoint_dir:   enables checkpoint/resume; None disables.
+    checkpoint_every: chunks between periodic saves (0 ⇒ only final/fork).
+    vmem_budget:      bytes assumed available for the VMEM-resident kernel.
+    telemetry_anomaly: learn a FIGMN over the runtime's own telemetry
+                      (ft.anomaly) and flag anomalous chunks.
+    """
+    chunk: int = 256
+    path: str = "auto"
+    lifecycle: Optional[lifecycle.LifecycleConfig] = None
+    drift: Optional[drift_mod.DriftConfig] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    keep_n: int = 3
+    vmem_budget: int = ingest.DEFAULT_VMEM_BUDGET
+    telemetry_anomaly: bool = False
+    telemetry_capacity: int = 4096
+
+
+class StreamRuntime:
+    """Owns mixture state + ingestion loop for one unbounded stream."""
+
+    def __init__(self, cfg: FIGMNConfig,
+                 rcfg: RuntimeConfig = RuntimeConfig()):
+        self.cfg = cfg
+        self.rcfg = rcfg
+        self.state: FIGMNState = figmn.init_state(cfg)
+        self.chunk_idx = 0
+        self.path = ingest.select_path(cfg, vmem_budget=rcfg.vmem_budget,
+                                       requested=rcfg.path)
+        self.buffer = lifecycle.FailureBuffer(
+            rcfg.lifecycle.buffer_cap if rcfg.lifecycle else 0, cfg.dim)
+        self.detector = (drift_mod.DriftDetector(rcfg.drift)
+                         if rcfg.drift else None)
+        self.telemetry = telemetry.Telemetry(
+            capacity=rcfg.telemetry_capacity,
+            anomaly=AnomalyDetector(dim=3, warmup=16)
+            if rcfg.telemetry_anomaly else None)
+        self.ckpt = (CheckpointManager(rcfg.checkpoint_dir,
+                                       keep_n=rcfg.keep_n)
+                     if rcfg.checkpoint_dir else None)
+        self._thresh = jnp.asarray(
+            [float(chi2_quantile(cfg.dim, 1.0 - cfg.beta))], jnp.float32)
+
+    # ------------------------------------------------------------------
+    # ingestion
+    # ------------------------------------------------------------------
+
+    def ingest(self, xs) -> Dict[str, object]:
+        """Feed an (N, D) stream segment; returns the telemetry summary.
+
+        Callable repeatedly — state, telemetry, drift baselines and the
+        lifecycle clock all carry across calls (an unbounded stream is just
+        many ``ingest`` calls).
+        """
+        rc = self.rcfg
+        loader = ingest.DoubleBufferedLoader(xs, rc.chunk, self.cfg.dtype)
+        for xc_dev, xc_host in loader:
+            self._ingest_chunk(xc_dev, xc_host)
+        if rc.lifecycle is not None:
+            self._run_lifecycle(final=True)
+        if self.ckpt is not None:
+            self.checkpoint()
+        return self.telemetry.summary()
+
+    def _ingest_chunk(self, xc: Array, xc_host: np.ndarray) -> None:
+        rc, cfg = self.rcfg, self.cfg
+        need_stats = self.detector is not None or rc.telemetry_anomaly
+        t0 = time.perf_counter()
+        n_created0 = int(self.state.n_created)
+        formed = bool(jnp.any(self.state.active))
+        path = self.path
+        if path == "vmem" and not formed:
+            path = "scan"            # kernel cannot create the first slot
+
+        # Prequential stats: the chunk is scored against the PRE-update
+        # mixture ("does the incoming data match what we learned so far").
+        # Post-update stats are useless for drift — the single-pass learner
+        # adapts within the very chunk that drifted.
+        mean_ll = float("nan")
+        novelty_rate = 0.0
+        if (need_stats or path == "vmem") and formed:
+            fails_dev, mean_ll_dev = ingest.chunk_stats(
+                self.state, xc, self._thresh[0])
+            fails = np.asarray(fails_dev)
+            novelty_rate = float(fails.mean())
+            if need_stats:
+                mean_ll = float(mean_ll_dev)
+
+        if path == "vmem":
+            self.state, _ = ingest.fit_chunk_vmem(cfg, self.state, xc)
+            if rc.lifecycle is not None and fails.any():
+                self.buffer.push(xc_host[fails])
+        else:
+            # inline creation/§2.3 pruning ⇔ identical to one-shot fit;
+            # with lifecycle enabled, pruning is deferred to the pool pass
+            do_prune = rc.lifecycle is None and cfg.spmin > 0
+            self.state = ingest.fit_chunk_scan(cfg, self.state, xc, do_prune)
+
+        drift_score, alarm = 0.0, False
+        if self.detector is not None and mean_ll == mean_ll:
+            drift_score, alarm = self.detector.update(
+                mean_ll, novelty_rate, weight=xc.shape[0] / rc.chunk)
+            if alarm:
+                self._respond_to_drift()
+
+        latency = time.perf_counter() - t0
+        self.telemetry.record(telemetry.ChunkMetrics(
+            idx=self.chunk_idx, n_points=int(xc.shape[0]),
+            active_k=int(self.state.n_active),
+            created=int(self.state.n_created) - n_created0,
+            mean_ll=mean_ll, novelty_rate=novelty_rate,
+            drift_score=float(drift_score), drift_alarm=alarm,
+            path=path, latency_s=latency))
+        self.chunk_idx += 1
+
+        if (rc.lifecycle is not None and rc.lifecycle.every > 0
+                and self.chunk_idx % rc.lifecycle.every == 0):
+            self._run_lifecycle()
+        if (self.ckpt is not None and rc.checkpoint_every > 0
+                and self.chunk_idx % rc.checkpoint_every == 0):
+            self.checkpoint()
+
+    # ------------------------------------------------------------------
+    # lifecycle / drift plumbing
+    # ------------------------------------------------------------------
+
+    def _run_lifecycle(self, final: bool = False) -> None:
+        del final  # the pass is identical; the flag only documents intent
+        self.state, rep = lifecycle.run_pass(
+            self.cfg, self.rcfg.lifecycle, self.state, self.buffer)
+        self.telemetry.add_lifecycle(rep.pruned, rep.merged, rep.spawned)
+
+    def _respond_to_drift(self) -> None:
+        dcfg = self.rcfg.drift
+        if dcfg.response == "fork" and self.ckpt is not None:
+            # preserve the pre-drift mixture before mutating it
+            self.checkpoint()
+        self.state = drift_mod.respond(self.cfg, dcfg, self.state)
+
+    # ------------------------------------------------------------------
+    # scoring / checkpointing
+    # ------------------------------------------------------------------
+
+    def score(self, xs) -> Array:
+        """(N,) mixture log-densities under the current state (read-only)."""
+        return ingest.score_batch_jit(self.cfg, self.state,
+                                      jnp.asarray(xs, self.cfg.dtype))
+
+    def _payload(self) -> Dict[str, object]:
+        return {"figmn": self.state,
+                "runtime": {"chunk_idx":
+                            jnp.asarray(self.chunk_idx, jnp.int32)}}
+
+    def checkpoint(self) -> None:
+        if self.ckpt is None:
+            raise RuntimeError("no checkpoint_dir configured")
+        self.ckpt.save(self.chunk_idx, self._payload())
+        self.ckpt.wait()
+
+    def resume(self) -> bool:
+        """Restore the latest checkpoint; returns True if one existed."""
+        if self.ckpt is None:
+            raise RuntimeError("no checkpoint_dir configured")
+        step = self.ckpt.latest_step()
+        if step is None:
+            return False
+        template = {"figmn": figmn.init_state(self.cfg),
+                    "runtime": {"chunk_idx": jnp.zeros((), jnp.int32)}}
+        loaded = self.ckpt.restore(step, template)
+        self.state = loaded["figmn"]
+        self.chunk_idx = int(loaded["runtime"]["chunk_idx"])
+        return True

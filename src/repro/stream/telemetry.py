@@ -1,0 +1,108 @@
+"""Per-chunk runtime telemetry, feeding the fleet anomaly detector.
+
+Every ingested chunk produces one ChunkMetrics record: pool occupancy,
+create/prune/merge rates, drift score, dispatch path and wall-time.  The
+Telemetry sink keeps a bounded history, aggregates a summary (points/sec,
+totals), and can forward each record into ``repro.ft.anomaly`` — the
+paper's own algorithm watching the runtime that runs the paper's algorithm
+(the detector learns the joint density of [latency, active K, NLL] and
+flags chunks whose telemetry is jointly novel).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+from repro.ft.anomaly import AnomalyDetector
+
+
+@dataclasses.dataclass
+class ChunkMetrics:
+    idx: int
+    n_points: int
+    active_k: int
+    created: int = 0
+    pruned: int = 0
+    merged: int = 0
+    spawned: int = 0
+    mean_ll: float = float("nan")
+    novelty_rate: float = 0.0
+    drift_score: float = 0.0
+    drift_alarm: bool = False
+    path: str = "scan"
+    latency_s: float = 0.0
+
+    @property
+    def points_per_s(self) -> float:
+        return self.n_points / self.latency_s if self.latency_s > 0 else 0.0
+
+
+class Telemetry:
+    """Bounded metric history + aggregate counters + ft.anomaly bridge."""
+
+    #: totals kept as RUNNING counters (exact for unbounded streams);
+    #: ``history`` is a bounded window for inspection only.
+    _COUNTERS = ("created", "pruned", "merged", "spawned")
+
+    def __init__(self, capacity: int = 1024,
+                 anomaly: Optional[AnomalyDetector] = None):
+        self.capacity = int(capacity)
+        self.history: List[ChunkMetrics] = []
+        self.anomaly = anomaly
+        self.anomalies: List[int] = []
+        self.total_points = 0
+        self.total_time_s = 0.0
+        self.total_chunks = 0
+        self.totals: Dict[str, int] = {k: 0 for k in self._COUNTERS}
+        self.total_drift_alarms = 0
+
+    def record(self, m: ChunkMetrics) -> None:
+        self.history.append(m)
+        if len(self.history) > self.capacity:
+            self.history = self.history[-self.capacity:]
+        self.total_points += m.n_points
+        self.total_time_s += m.latency_s
+        self.total_chunks += 1
+        for k in self._COUNTERS:
+            self.totals[k] += getattr(m, k)
+        self.total_drift_alarms += bool(m.drift_alarm)
+        if self.anomaly is not None and m.latency_s > 0:
+            verdict = self.anomaly.update({
+                "chunk_latency": m.latency_s,
+                "active_k": float(max(m.active_k, 1)),
+                "nll": max(-m.mean_ll, 1e-6)
+                if m.mean_ll == m.mean_ll else 1e-6,
+            })
+            if verdict.get("anomalous"):
+                self.anomalies.append(m.idx)
+
+    def add_lifecycle(self, pruned: int, merged: int, spawned: int) -> None:
+        """Fold an off-chunk lifecycle pass into totals + the last record."""
+        self.totals["pruned"] += pruned
+        self.totals["merged"] += merged
+        self.totals["spawned"] += spawned
+        if self.history:
+            last = self.history[-1]
+            last.pruned += pruned
+            last.merged += merged
+            last.spawned += spawned
+
+    def summary(self) -> Dict[str, object]:
+        last = self.history[-1] if self.history else None
+        return {
+            "chunks": self.total_chunks,
+            "total_points": self.total_points,
+            "points_per_s": (self.total_points / self.total_time_s
+                             if self.total_time_s > 0 else 0.0),
+            "active_k": last.active_k if last else 0,
+            **dict(self.totals),
+            "drift_alarms": self.total_drift_alarms,
+            "telemetry_anomalies": list(self.anomalies),
+        }
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"summary": self.summary(),
+                       "chunks": [dataclasses.asdict(m)
+                                  for m in self.history]}, f, indent=1)

@@ -16,6 +16,12 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running sweeps (excluded from CI via -m 'not slow')")
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_between_modules():
     """Hundreds of distinct jit programs accumulate across this suite (10

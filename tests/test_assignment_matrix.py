@@ -77,9 +77,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.distributed import compression
-mesh = jax.make_mesh((4,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("pod",))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(0, 1, (4, 256)), jnp.float32)  # one row per pod
 
@@ -87,8 +87,8 @@ def f(x):
     # every device returns the identical reduced mean → replicated output
     return compression.compressed_psum(x[0], "pod")
 
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("pod"),),
-                          out_specs=P(), check_vma=False))(x)
+y = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(P("pod"),),
+                             out_specs=P()))(x)
 want = np.mean(np.asarray(x), axis=0)
 got = np.asarray(y)
 err = np.abs(got - want).max()
@@ -98,7 +98,10 @@ print("OK")
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin cpu: jax import in THIS process exports TPU_LIBRARY_PATH (libtpu
+    # is installed), and a child inheriting it without JAX_PLATFORMS
+    # stalls for minutes probing for TPU hardware
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=300, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))

@@ -78,9 +78,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.checkpoint import CheckpointManager
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 mgr = CheckpointManager({str(tmp_path)!r}, async_save=False)
 tmpl = {{"w": jnp.zeros((8, 8), jnp.float32)}}
 sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
@@ -92,7 +92,10 @@ print("OK")
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin cpu: jax import in THIS process exports TPU_LIBRARY_PATH (libtpu
+    # is installed), and a child inheriting it without JAX_PLATFORMS
+    # stalls for minutes probing for TPU hardware
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=300, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))

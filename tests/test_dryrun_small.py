@@ -11,7 +11,10 @@ import pytest
 def _run(code: str, timeout=900):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin cpu: jax import in THIS process exports TPU_LIBRARY_PATH (libtpu
+    # is installed), and a child inheriting it without JAX_PLATFORMS
+    # stalls for minutes probing for TPU hardware
+    env["JAX_PLATFORMS"] = "cpu"
     return subprocess.run([sys.executable, "-c", code], capture_output=True,
                           text=True, timeout=timeout,
                           cwd=os.path.join(os.path.dirname(__file__), ".."))

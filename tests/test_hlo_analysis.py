@@ -62,7 +62,8 @@ def test_xla_cost_analysis_undercounts_scans():
             def body(c, wl):
                 return c @ wl, None
             return jax.lax.scan(body, x, w)[0]
-        return jax.jit(g).lower(x, w).compile().cost_analysis()["flops"]
+        from repro import compat
+        return compat.cost_analysis(jax.jit(g).lower(x, w).compile())["flops"]
 
     assert f(4) == pytest.approx(f(16), rel=0.01)   # XLA: same (wrong)
 
@@ -73,9 +74,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.distributed import hlo_analysis
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
 w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
 f = jax.jit(lambda x, w: (x @ w).sum(),
@@ -91,7 +92,10 @@ print("OK")
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin cpu: jax import in THIS process exports TPU_LIBRARY_PATH (libtpu
+    # is installed), and a child inheriting it without JAX_PLATFORMS
+    # stalls for minutes probing for TPU hardware
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=300, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))

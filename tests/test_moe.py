@@ -77,6 +77,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np, functools
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.models import moe
 
 rng = np.random.default_rng(0)
@@ -90,24 +91,23 @@ p = dict(
 x = jnp.asarray(rng.normal(0, 1, (b, t, d)), jnp.float32)
 want = moe.moe_dense(p, x, n_real=e, top_k=k)
 
-mesh = jax.make_mesh((1, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((1, 4), ("data", "model"))
 if "{path}" == "alltoall":
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         functools.partial(moe.moe_alltoall_local, n_real=e, top_k=k,
                           capacity_factor=8.0, act="silu"),
         mesh=mesh, in_specs=({{"w_router": P(), "w_gate": P("model"),
                               "w_up": P("model"), "w_down": P("model")}},
                              P("data", "model")),
-        out_specs=P("data", "model"), check_vma=False)
+        out_specs=P("data", "model"))
 else:
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         functools.partial(moe.moe_psum_local, n_real=e, top_k=k,
                           act="silu"),
         mesh=mesh, in_specs=({{"w_router": P(), "w_gate": P("model"),
                               "w_up": P("model"), "w_down": P("model")}},
                              P("data")),
-        out_specs=P("data"), check_vma=False)
+        out_specs=P("data"))
 got = jax.jit(fn)(p, x)
 # generous capacity ⇒ no drops ⇒ exact match
 np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -116,7 +116,10 @@ print("OK")
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin cpu: jax import in THIS process exports TPU_LIBRARY_PATH (libtpu
+    # is installed), and a child inheriting it without JAX_PLATFORMS
+    # stalls for minutes probing for TPU hardware
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))

@@ -28,8 +28,8 @@ sigma = figmn.sigma_from_data(X, 1.0)
 cfg = FIGMNConfig(kmax=16, dim=5, beta=0.1, delta=1.0, vmin=10.0, spmin=2.0,
                   sigma_ini=sigma)
 s_ref = figmn.fit(cfg, figmn.init_state(cfg), X)
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro import compat
+mesh = compat.make_mesh((4,), ("model",))
 s0 = sharded.init_sharded(cfg, mesh, "model")
 s_sh = sharded.fit_sharded(cfg, s0, X, mesh, "model")
 assert int(s_sh.n_created) == int(s_ref.n_created)
@@ -43,7 +43,10 @@ print("OK")
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin cpu: jax import in THIS process exports TPU_LIBRARY_PATH (libtpu
+    # is installed), and a child inheriting it without JAX_PLATFORMS
+    # stalls for minutes probing for TPU hardware
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))
@@ -111,7 +114,7 @@ def test_closest_pair_picks_overlapping_components():
     # manually activate three components: two overlapping, one far
     mus = np.array([[0, 0], [0.1, 0.1], [50, 50], [0, 0]], np.float32)
     s = s.__class__(mu=jnp.asarray(mus), lam=s.lam, logdet=s.logdet,
-                    det=s.det, sp=jnp.asarray([1., 1., 1., 0.]),
+                    sp=jnp.asarray([1., 1., 1., 0.]),
                     v=s.v, active=jnp.asarray([True, True, True, False]),
                     n_created=jnp.asarray(3))
     ia, ib = merge.closest_pair(s)

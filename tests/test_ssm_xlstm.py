@@ -3,7 +3,10 @@ parallel forms must equal the step-by-step recurrences exactly."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models import ssm, xlstm
 

@@ -1,0 +1,163 @@
+"""StreamRuntime: chunked ingestion ≡ one-shot fit; lifecycle budget; drift
+detection on piecewise-stationary streams; checkpoint resume."""
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.data import gmm_streams
+from repro.stream import (DriftConfig, LifecycleConfig, RuntimeConfig,
+                          StreamRuntime, select_path)
+
+
+def _blob_stream(seed=0, n_per=120, d=5, k=3, spread=8.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, spread, (k, d))
+    x = np.concatenate([rng.normal(c, 1.0, (n_per, d)) for c in centers])
+    rng.shuffle(x)
+    return x.astype(np.float32)
+
+
+def _cfg(x, **kw):
+    defaults = dict(kmax=16, dim=x.shape[1], beta=0.1, delta=1.0, vmin=10.0,
+                    spmin=2.0,
+                    sigma_ini=figmn.sigma_from_data(jnp.asarray(x), 1.0))
+    defaults.update(kw)
+    return FIGMNConfig(**defaults)
+
+
+@pytest.mark.parametrize("chunk", [37, 64])  # non-divisor AND divisor tails
+def test_chunked_ingestion_equals_one_shot_fit(chunk):
+    """The acceptance-criterion invariant: lifecycle/drift disabled ⇒
+    StreamRuntime ingestion over any chunking == one core.figmn.fit pass."""
+    x = _blob_stream()
+    cfg = _cfg(x)
+    rt = StreamRuntime(cfg, RuntimeConfig(chunk=chunk, path="scan"))
+    rt.ingest(x)
+    ref = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    assert (np.asarray(rt.state.active) == np.asarray(ref.active)).all()
+    assert int(rt.state.n_created) == int(ref.n_created)
+    np.testing.assert_allclose(np.asarray(rt.state.mu),
+                               np.asarray(ref.mu), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rt.state.lam),
+                               np.asarray(ref.lam), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rt.state.sp),
+                               np.asarray(ref.sp), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rt.state.logdet),
+                               np.asarray(ref.logdet), atol=1e-5)
+
+
+def test_ingest_is_resumable_across_calls():
+    """Two ingest calls over halves == one call over the whole stream."""
+    x = _blob_stream(seed=3)
+    cfg = _cfg(x)
+    rt_a = StreamRuntime(cfg, RuntimeConfig(chunk=50))
+    rt_a.ingest(x)
+    rt_b = StreamRuntime(cfg, RuntimeConfig(chunk=50))
+    rt_b.ingest(x[:175])
+    rt_b.ingest(x[175:])
+    np.testing.assert_allclose(np.asarray(rt_a.state.mu),
+                               np.asarray(rt_b.state.mu), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rt_a.state.lam),
+                               np.asarray(rt_b.state.lam), atol=1e-4)
+
+
+def test_lifecycle_enforces_component_budget():
+    """With many true clusters and a tight budget, the pool must end every
+    lifecycle pass (and the run) within k_budget, and never exceed kmax."""
+    x, _ = gmm_streams.gaussian_classes(600, 6, 8, seed=1, sep=6.0)
+    cfg = _cfg(x, kmax=16, vmin=20.0, spmin=1.0)
+    lcfg = LifecycleConfig(k_budget=5, every=2, spawn_max=4)
+    rt = StreamRuntime(cfg, RuntimeConfig(chunk=60, lifecycle=lcfg))
+    rt.ingest(x)
+    assert int(rt.state.n_active) <= lcfg.k_budget
+    assert all(m.active_k <= cfg.kmax for m in rt.telemetry.history)
+    # merging actually happened (8 clusters cannot fit in 5 slots otherwise)
+    assert rt.telemetry.summary()["merged"] > 0
+
+
+def test_lifecycle_spawns_from_gate_failure_buffer():
+    """vmem path cannot create in-kernel: gate failures must be buffered
+    and spawned by the lifecycle pass."""
+    x = _blob_stream(seed=1, n_per=40, d=8)
+    cfg = _cfg(x, kmax=8, beta=0.05, vmin=1e9, spmin=0.0,
+               update_mode="exact")
+    rt = StreamRuntime(cfg, RuntimeConfig(
+        chunk=30, path="vmem",
+        lifecycle=LifecycleConfig(k_budget=8, every=2, spawn_max=8)))
+    rt.ingest(x)
+    assert rt.telemetry.summary()["spawned"] > 0
+    assert int(rt.state.n_active) >= 2
+    assert any(m.path == "vmem" for m in rt.telemetry.history)
+
+
+def test_drift_detection_on_piecewise_stationary_stream():
+    """Piecewise-stationary stream (data.gmm_streams segments with shifted
+    means): no alarms in segment 1, alarm shortly after the change point,
+    and the response frees capacity for re-adaptation."""
+    x1, _ = gmm_streams.gaussian_classes(480, 5, 3, seed=0, sep=3.0)
+    x2, _ = gmm_streams.gaussian_classes(480, 5, 3, seed=0, sep=3.0)
+    x2 = x2 + 25.0                      # regime change
+    cfg = _cfg(x1, kmax=16)
+    dcfg = DriftConfig(window=6, threshold=6.0, response="reset_weak")
+    rt = StreamRuntime(cfg, RuntimeConfig(chunk=32, drift=dcfg))
+    rt.ingest(x1)
+    assert rt.telemetry.summary()["drift_alarms"] == 0
+    rt.ingest(x2)
+    alarm_chunks = [m.idx for m in rt.telemetry.history if m.drift_alarm]
+    change_chunk = 480 // 32
+    assert alarm_chunks, "drift never detected"
+    assert change_chunk <= alarm_chunks[0] <= change_chunk + 3
+    # post-response the model re-adapts: the new regime scores reasonably
+    ll_new = float(jnp.mean(rt.score(x2[-100:])))
+    assert np.isfinite(ll_new) and ll_new > -30.0
+
+
+def test_checkpoint_resume_roundtrip(tmp_path):
+    x = _blob_stream(seed=2)
+    cfg = _cfg(x)
+    rc = RuntimeConfig(chunk=64, checkpoint_dir=str(tmp_path))
+    rt = StreamRuntime(cfg, rc)
+    rt.ingest(x)
+    fresh = StreamRuntime(cfg, rc)
+    assert fresh.resume()
+    assert fresh.chunk_idx == rt.chunk_idx
+    np.testing.assert_allclose(np.asarray(fresh.state.lam),
+                               np.asarray(rt.state.lam), atol=0)
+    np.testing.assert_allclose(np.asarray(fresh.state.mu),
+                               np.asarray(rt.state.mu), atol=0)
+    # ingestion continues from the restored state bit-identically
+    more = _blob_stream(seed=5, n_per=30)
+    rt.ingest(more)
+    fresh.ingest(more)
+    np.testing.assert_allclose(np.asarray(fresh.state.lam),
+                               np.asarray(rt.state.lam), atol=0)
+
+
+def test_select_path_heuristic():
+    x = _blob_stream()
+    small = _cfg(x, kmax=8, update_mode="exact")
+    assert select_path(small, requested="scan") == "scan"
+    assert select_path(small, requested="vmem") == "vmem"
+    # working set over budget ⇒ scan regardless of backend
+    big = dataclasses.replace(small, kmax=2048, dim=256)
+    assert select_path(big, vmem_budget=12 * 2 ** 20) == "scan"
+    # paper mode is not PSD-safe in-kernel ⇒ scan
+    paper = dataclasses.replace(small, update_mode="paper")
+    assert select_path(paper) == "scan"
+
+
+@pytest.mark.slow
+def test_runtime_benchmark_smoke(tmp_path):
+    """benchmarks/figmn_runtime.py emits BENCH_stream.json with ≥3 (D, K)
+    configs (slow: full sweep; excluded from the CI fast subset)."""
+    from benchmarks import figmn_runtime
+    out = os.path.join(str(tmp_path), "BENCH_stream.json")
+    rows = figmn_runtime.run(out_path=out, quick=True)
+    assert os.path.exists(out)
+    assert len({(r["d"], r["k"]) for r in rows}) >= 3
+    assert all(r["points_per_s"] > 0 for r in rows)
