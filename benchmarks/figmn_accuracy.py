@@ -73,8 +73,8 @@ def run(datasets=EVAL_SETS) -> List[Dict]:
     return rows
 
 
-def main():
-    for r in run():
+def main(smoke: bool = False):
+    for r in run(datasets=("iris",) if smoke else EVAL_SETS):
         print(f"figmn_accuracy/{r['dataset']},0,"
               f"figmn_auc={r['figmn_auc']:.3f};igmn_auc={r['igmn_auc']:.3f};"
               f"figmn_acc={r['figmn_acc']:.3f};igmn_acc={r['igmn_acc']:.3f}")

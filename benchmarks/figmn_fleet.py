@@ -1,0 +1,122 @@
+"""Fleet throughput + fidelity: replica count × chunk size sweeps.
+
+Measures the full fleet loop (repro.fleet.FleetCoordinator: routing, N
+StreamRuntime replicas, periodic star consolidation, snapshot publish) and
+reports two numbers per cell:
+
+  points_per_s      — whole-fleet wall-clock throughput.  In this 1-device
+                      container the replicas step sequentially, so this is
+                      the coordination-overhead floor; ``rate_sum`` (the
+                      sum of per-replica rates, what N concurrent hosts
+                      would deliver) is also recorded.
+  ll_gap            — held-out mean log-likelihood of the consolidated
+                      global mixture MINUS a single-stream ``figmn.fit``
+                      over the same points: the cost of sharding + merge
+                      (assignment noise), the fidelity number every later
+                      scaling PR must hold flat.
+
+Results go to BENCH_fleet.json.
+
+Run:  PYTHONPATH=src python -m benchmarks.figmn_fleet
+      (or via ``python -m benchmarks.run figmn_fleet [--smoke]``)
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import FleetConfig, FleetCoordinator, sp_mass
+from repro.stream import LifecycleConfig, RuntimeConfig
+
+REPLICAS = [1, 2, 4]
+CHUNKS = [128, 512]
+D, KMAX = 16, 16
+N_POINTS = 4096
+N_QUICK = 768
+N_HELD = 512
+
+
+def _stream(n: int, d: int, modes: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6.0, (modes, d))
+    x = centers[rng.integers(0, modes, n)] + rng.normal(0, 1.0, (n, d))
+    return x.astype(np.float32)
+
+
+def run(out_path: str = "BENCH_fleet.json", quick: bool = False
+        ) -> List[Dict]:
+    n = N_QUICK if quick else N_POINTS
+    replicas = REPLICAS[:2] if quick else REPLICAS
+    chunks = CHUNKS[:1] if quick else CHUNKS
+    x = _stream(n, D, 4)
+    held = _stream(N_HELD, D, 4, seed=1)
+    cfg = FIGMNConfig(kmax=KMAX, dim=D, beta=0.1, delta=1.0, vmin=50.0,
+                      spmin=1.0, update_mode="exact",
+                      sigma_ini=figmn.sigma_from_data(jnp.asarray(x), 1.0))
+
+    # single-stream fidelity baseline (the learner the fleet must match)
+    ref = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    ll_ref = float(jnp.mean(figmn.score_batch(cfg, ref,
+                                              jnp.asarray(held))))
+
+    rows = []
+    for n_rep in replicas:
+        for chunk in chunks:
+            def build():
+                return FleetCoordinator(
+                    cfg,
+                    FleetConfig(n_replicas=n_rep, router="round_robin",
+                                consolidate_every=0, global_kmax=KMAX),
+                    RuntimeConfig(chunk=chunk,
+                                  lifecycle=LifecycleConfig(
+                                      k_budget=KMAX, every=8)))
+            warm = build()                 # compile every chunk shape
+            warm.ingest(x)
+            warm.consolidate()
+            warm.close()
+            fleet = build()
+            t0 = time.perf_counter()
+            fleet.ingest(x)
+            snap = fleet.consolidate()
+            dt = time.perf_counter() - t0
+            ll = float(jnp.mean(fleet.score(held)))
+            summary = fleet.summary()
+            row = {
+                "replicas": n_rep, "chunk": chunk, "n": n,
+                "points_per_s": n / dt,
+                "rate_sum": summary["points_per_s"],
+                "wall_s": dt,
+                "global_active_k": int(snap.n_active),
+                "sp_mass": sp_mass(snap),
+                "ll_fleet": ll, "ll_single": ll_ref,
+                "ll_gap": ll - ll_ref,
+            }
+            fleet.close()
+            rows.append(row)
+            print(f"R={n_rep} chunk={chunk:4d}: "
+                  f"{row['points_per_s']:9.0f} pts/s wall "
+                  f"({row['rate_sum']:9.0f} pts/s summed), "
+                  f"ll_gap={row['ll_gap']:+.3f}, "
+                  f"K={row['global_active_k']}")
+    with open(out_path, "w") as f:
+        json.dump({"benchmark": "figmn_fleet",
+                   "backend": jax.default_backend(),
+                   "ll_single_stream": ll_ref,
+                   "rows": rows}, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return rows
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,8 +79,8 @@ def run(out_path: str = "BENCH_stream.json", quick: bool = False
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
 
 
 if __name__ == "__main__":

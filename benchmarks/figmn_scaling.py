@@ -18,6 +18,7 @@ from repro.core import figmn, igmn_ref
 from repro.core.types import FIGMNConfig
 
 DIMS = (64, 128, 256, 512, 1024)
+SMOKE_DIMS = (8, 16, 32)
 N_POINTS = 24
 
 
@@ -58,8 +59,8 @@ def exponents(rows) -> Dict[str, float]:
     return out
 
 
-def main():
-    rows = run()
+def main(smoke: bool = False):
+    rows = run(dims=SMOKE_DIMS if smoke else DIMS)
     for r in rows:
         print(f"figmn_scaling/d{r['d']},{r['figmn_us_pt']:.1f},"
               f"igmn_us_pt={r['igmn_us_pt']:.1f}")

@@ -76,8 +76,9 @@ def run(datasets=None) -> List[Dict]:
     return rows
 
 
-def main():
-    for r in run():
+def main(smoke: bool = False):
+    # smoke: two small Table-1 shapes — exercises the full path, tiny N·D
+    for r in run(datasets=["iris", "glass"] if smoke else None):
         print(f"figmn_timing/{r['dataset']},"
               f"{r['train_figmn_us_pt']:.1f},"
               f"train_speedup={r['train_speedup']:.2f}x;"

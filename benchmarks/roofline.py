@@ -120,7 +120,10 @@ def pick_hillclimb_cells(rows: List[Dict]) -> Dict[str, Dict]:
             "paper_representative": figmn}
 
 
-def main():
+def main(smoke: bool = False):
+    # no size knob: analyses whatever dry-run artifacts exist (none in CI
+    # smoke ⇒ exercises the load/parse path and prints nothing)
+    del smoke
     rows = load_all()
     for r in rows:
         if r["mesh"] == "16x16":
@@ -128,6 +131,11 @@ def main():
                   f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
                   f"c={r['compute_s']:.2e};m={r['memory_s']:.2e};"
                   f"x={r['collective_s']:.2e}")
+    if not any(r["mesh"] == "16x16" and r["arch"] != "figmn-core"
+               for r in rows):
+        print("roofline/no_dryrun_artifacts,0,run repro.launch.dryrun "
+              "--all first")
+        return
     picks = pick_hillclimb_cells(rows)
     for tag, r in picks.items():
         if r:

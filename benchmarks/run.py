@@ -7,57 +7,62 @@ CSV convention: ``name,us_per_call,derived``.
   figmn_accuracy  — paper Table 4 (quality parity, AUC/acc)
   figmn_runtime   — streaming-runtime points/sec across (D, K, chunk)
                     sweeps → BENCH_stream.json
-  kernels         — Pallas kernel wall-times (interpret mode: correctness
-                    path; TPU timing comes from the roofline, not CPU)
+  figmn_fleet     — multi-replica fleet: replicas × chunk throughput and
+                    merged-vs-single-stream LL gap → BENCH_fleet.json
   lm_bench        — reduced-config LM substrate step times
   roofline        — §Roofline terms per (arch × shape) from the dry-run
                     artifacts (run repro.launch.dryrun --all first)
 
 Run everything:  PYTHONPATH=src python -m benchmarks.run
 Subset:          PYTHONPATH=src python -m benchmarks.run figmn_scaling ...
+CI smoke:        PYTHONPATH=src python -m benchmarks.run --smoke
+                 (every registered benchmark at a tiny size; any failure
+                 exits non-zero so benchmark scripts cannot rot silently)
 """
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import time
 import traceback
 
+#: every registered benchmark module under benchmarks/; each exposes
+#: ``main(smoke: bool = False)`` where smoke runs a tiny-size subset.
+REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
+            "figmn_runtime", "figmn_fleet", "lm_bench", "roofline")
 
-def _section(name, fn):
+
+def _section(name: str, smoke: bool) -> bool:
     print(f"# --- {name} " + "-" * max(1, 60 - len(name)))
     t0 = time.time()
     try:
-        fn()
+        importlib.import_module(f"benchmarks.{name}").main(smoke=smoke)
         print(f"# {name} done in {time.time() - t0:.1f}s")
+        return True
     except Exception as e:                                 # keep harness alive
         print(f"# {name} FAILED: {type(e).__name__}: {e}")
         traceback.print_exc()
+        return False
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
-
-    def on(name):
-        return not want or name in want
-
-    if on("figmn_scaling"):
-        from benchmarks import figmn_scaling
-        _section("figmn_scaling", figmn_scaling.main)
-    if on("figmn_timing"):
-        from benchmarks import figmn_timing
-        _section("figmn_timing", figmn_timing.main)
-    if on("figmn_accuracy"):
-        from benchmarks import figmn_accuracy
-        _section("figmn_accuracy", figmn_accuracy.main)
-    if on("figmn_runtime"):
-        from benchmarks import figmn_runtime
-        _section("figmn_runtime", figmn_runtime.main)
-    if on("lm_bench"):
-        from benchmarks import lm_bench
-        _section("lm_bench", lm_bench.main)
-    if on("roofline"):
-        from benchmarks import roofline
-        _section("roofline", roofline.main)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*",
+                    help=f"benchmarks to run (default: all of "
+                         f"{', '.join(REGISTRY)})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for every benchmark; fail loudly")
+    args = ap.parse_args()
+    unknown = set(args.names) - set(REGISTRY)
+    if unknown:
+        ap.error(f"unknown benchmarks: {', '.join(sorted(unknown))}")
+    want = args.names or list(REGISTRY)
+    failed = [n for n in REGISTRY if n in want
+              and not _section(n, args.smoke)]
+    if failed:
+        print(f"# FAILED sections: {', '.join(failed)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

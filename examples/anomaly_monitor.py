@@ -10,7 +10,11 @@ layers of the same incremental-GMM machinery watch it:
   * per-chunk: the production StreamRuntime (repro.stream) ingests the same
     feature stream micro-batched — exactly how a fleet-wide monitor runs in
     production — and its log-likelihood-CUSUM drift detector flags the
-    regime change, while runtime telemetry tracks pool size and throughput.
+    regime change, while runtime telemetry tracks pool size and throughput;
+  * sharded: the same stream is then round-robined across a 2-replica
+    FleetCoordinator (repro.fleet) — the scale-out deployment — whose
+    consolidated global mixture must conserve the replicas' posterior mass
+    and score the telemetry like the single-runtime model does.
 
 Injected events: a gradual loss drift (must NOT alarm), one divergence
 spike (must alarm — both layers), one host turning persistently slow (must
@@ -24,6 +28,7 @@ from repro.ft.anomaly import AnomalyDetector
 from repro.ft.straggler import StragglerConfig, StragglerMonitor
 from repro.core import figmn
 from repro.core.types import FIGMNConfig
+from repro.fleet import FleetConfig, FleetCoordinator, sp_mass
 from repro.stream import DriftConfig, RuntimeConfig, StreamRuntime
 
 CHUNK = 20
@@ -84,8 +89,35 @@ def main():
     assert all(s >= 100 for s in drift_steps), drift_steps   # decay: silent
     assert any(100 <= s <= 160 for s in drift_steps), drift_steps  # NIC
     assert any(180 <= s <= 240 for s in drift_steps), drift_steps  # spike
+
+    # -- the same stream, sharded across a 2-replica fleet ---------------
+    fleet = FleetCoordinator(
+        fcfg, FleetConfig(n_replicas=2, router="round_robin",
+                          consolidate_every=1),
+        RuntimeConfig(chunk=CHUNK,
+                      drift=DriftConfig(window=6, threshold=6.0,
+                                        min_chunks=3, response="inflate")))
+    fsummary = fleet.ingest(x)
+    snap = fleet.global_state
+    mass = sp_mass(snap)
+    replica_mass = sum(sp_mass(r.state) for r in fleet.replicas)
+    assert abs(mass - replica_mass) < 1e-3 * max(replica_mass, 1.0), \
+        (mass, replica_mass)
+    ll_fleet = float(np.mean(np.asarray(fleet.score(x[-60:]))))
+    ll_single = float(np.mean(np.asarray(runtime.score(x[-60:]))))
+    fleet.close()
+    print(f"Fleet: {fsummary['replicas']} replicas, router load "
+          f"{fsummary['router_load']}, global K="
+          f"{fsummary['global_active_k']} after "
+          f"{fsummary['consolidations']} consolidations; posterior mass "
+          f"{mass:.1f} conserved; snapshot mean logp {ll_fleet:.2f} vs "
+          f"single-runtime {ll_single:.2f}")
+    assert abs(ll_fleet - ll_single) < 3.0, (ll_fleet, ll_single)
+
     print("OK: the incremental GMM caught exactly the injected events — "
-          "per-step (ft.anomaly) and per-chunk (stream drift CUSUM).")
+          "per-step (ft.anomaly), per-chunk (stream drift CUSUM), and the "
+          "sharded fleet's consolidated mixture agrees with the "
+          "single-stream monitor.")
 
 
 if __name__ == "__main__":

@@ -132,12 +132,17 @@ class CheckpointManager:
 
     def restore(self, step: int, template: Any,
                 shardings: Optional[Any] = None,
-                verify: bool = True) -> Any:
+                verify: bool = True, missing: str = "error") -> Any:
         """Load step into the structure of ``template``.
 
         shardings: optional pytree of NamedSharding (matching template) —
         arrays are placed with the CURRENT mesh's shardings (elastic
         restore); None → uncommitted host arrays as jnp arrays.
+        missing: what to do for template entries absent from the file —
+        "error" raises (default), "template" keeps the template's value
+        (payload-format migration: older checkpoints restore what they
+        have, new state starts fresh).  File entries absent from the
+        template are always ignored (state the caller doesn't track).
         """
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
@@ -153,10 +158,24 @@ class CheckpointManager:
         out = {}
         tmpl_flat = _flatten_with_paths(template)
         for k, arr in flat_np.items():
+            if k not in tmpl_flat:
+                continue
             tmpl = tmpl_flat[k]
             arr = arr.astype(tmpl.dtype)
             if flat_sh is not None and hasattr(flat_sh.get(k), "mesh"):
                 out[k] = jax.device_put(arr, flat_sh[k])
+            elif isinstance(tmpl, np.ndarray):
+                # host-side template leaf (e.g. 64-bit running counters):
+                # keep it numpy — jnp.asarray would silently downcast
+                # int64/float64 under jax's default no-x64 config
+                out[k] = arr
             else:
                 out[k] = jnp.asarray(arr)
+        absent = [k for k in tmpl_flat if k not in out]
+        if absent and missing != "template":
+            raise KeyError(f"checkpoint step {step} lacks entries "
+                           f"{absent} (pass missing='template' to keep "
+                           f"template defaults for them)")
+        for k in absent:
+            out[k] = tmpl_flat[k]
         return _unflatten_like(template, out)

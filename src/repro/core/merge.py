@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.core.types import Array, FIGMNConfig, FIGMNState
 
 
-def _top_k_by_sp(state: FIGMNState, kmax: int) -> FIGMNState:
+def top_k_by_sp(state: FIGMNState, kmax: int) -> FIGMNState:
     """Keep the kmax highest-sp active slots (drop weakest on overflow)."""
     score = jnp.where(state.active, state.sp, -jnp.inf)
     _, idx = jax.lax.top_k(score, kmax)
@@ -41,7 +41,10 @@ def union(cfg: FIGMNConfig, states: Sequence[FIGMNState]) -> FIGMNState:
 
     Posterior mass (sp) is additive across shards, so priors (eq. 12)
     renormalise automatically.  Truncation drops the globally weakest slots
-    (they are precisely the prune candidates of §2.3).
+    (they are precisely the prune candidates of §2.3).  Mass-conserving
+    consolidation (moment-match down instead of truncating) lives in
+    ``repro.fleet.consolidate``; call this with cfg.kmax ≥ total slots to
+    get the pure (exact, lossless) union.
     """
     cat = lambda f: jnp.concatenate([f(s) for s in states], axis=0)
     big = FIGMNState(
@@ -50,7 +53,7 @@ def union(cfg: FIGMNConfig, states: Sequence[FIGMNState]) -> FIGMNState:
         sp=cat(lambda s: s.sp), v=cat(lambda s: s.v),
         active=cat(lambda s: s.active),
         n_created=sum(s.n_created for s in states))
-    return _top_k_by_sp(big, cfg.kmax)
+    return top_k_by_sp(big, cfg.kmax)
 
 
 def moment_match_pair(cfg: FIGMNConfig, state: FIGMNState,
@@ -80,14 +83,38 @@ def moment_match_pair(cfg: FIGMNConfig, state: FIGMNState,
         n_created=state.n_created)
 
 
+def merge_to_budget(cfg: FIGMNConfig, state: FIGMNState, budget: int
+                    ) -> tuple[FIGMNState, int]:
+    """Moment-match closest pairs until ≤ budget live slots.
+
+    Mass-exact by construction (every step is a moment_match_pair — never
+    truncation).  The ONE budget-enforcement loop shared by the stream
+    lifecycle (per-replica k_budget) and fleet consolidation (global
+    kmax); returns (state, n_merges).  cfg.kmax must equal the state's
+    slot count.
+    """
+    merged = 0
+    while int(state.n_active) > budget:
+        ia, ib = closest_pair(state)
+        state = moment_match_pair(cfg, state, ia, ib)
+        merged += 1
+    return state, merged
+
+
 def closest_pair(state: FIGMNState) -> tuple[Array, Array]:
     """Most-similar active pair by symmetric squared Mahalanobis distance.
 
-    d(a,b) = (μa-μb)ᵀ(Λa+Λb)(μa-μb) — O(K²D²), cheap relative to a merge.
+    d(a,b) = (μa-μb)ᵀ(Λa+Λb)(μa-μb) — O(K²D²) FLOPs.  Computed via ONE
+    (K, K, D) intermediate: materialising Λa+Λb as a (K, K, D, D) tensor
+    would OOM exactly where fleet consolidation needs this most (every
+    over-budget union, large D).  Only the Λa term is evaluated — diff is
+    antisymmetric, so the Λb term at (a, b) equals the Λa term at (b, a)
+    and the full matrix is q + qᵀ.
     """
     diff = state.mu[:, None, :] - state.mu[None, :, :]          # (K,K,D)
-    lam_sum = state.lam[:, None] + state.lam[None, :]           # (K,K,D,D)
-    d = jnp.einsum("abd,abde,abe->ab", diff, lam_sum, diff)
+    ya = jnp.einsum("ade,abe->abd", state.lam, diff)            # Λa diff
+    q = jnp.einsum("abd,abd->ab", diff, ya)                     # diffᵀΛa diff
+    d = q + q.T
     mask = state.active[:, None] & state.active[None, :]
     k = state.active.shape[0]
     d = jnp.where(mask & ~jnp.eye(k, dtype=bool), d, jnp.inf)

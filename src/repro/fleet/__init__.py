@@ -1,0 +1,31 @@
+"""repro.fleet — sharded multi-replica stream fleet for the Fast IGMN.
+
+PR 1 (repro.stream) made one unbounded stream production-grade; this
+package scales it OUT: N StreamRuntime replicas — one per data shard —
+behind a single coordinator, periodically consolidated into one global
+mixture that serves reads without ever blocking ingestion.
+
+  router.py       hash / round-robin / feature-affinity shard routing
+  consolidate.py  exact cross-replica merge (star / gossip topologies,
+                  sum(sp)-conserving budget enforcement via core.merge)
+  scoring.py      async serving front-end over a read-only snapshot
+  telemetry.py    fleet-level aggregation + consolidation history
+  coordinator.py  FleetCoordinator (routing, merge clock, checkpointing)
+
+Design lineage: the replica+merge structure follows Pinto & Engel 2017
+("Scalable and Incremental Learning of Gaussian Mixture Models" — the
+union of sp-weighted replica mixtures is the mixture of the combined
+stream), and the affinity-routed component partitioning follows the
+sublinear-GMM direction (Salwig et al. 2025) — see PAPERS.md.
+"""
+from repro.fleet.consolidate import consolidate, merge_down, sp_mass
+from repro.fleet.coordinator import FleetConfig, FleetCoordinator
+from repro.fleet.router import RouterConfig, ShardRouter
+from repro.fleet.scoring import ScoringFrontend
+from repro.fleet.telemetry import ConsolidationEvent, FleetTelemetry
+
+__all__ = [
+    "ConsolidationEvent", "FleetConfig", "FleetCoordinator",
+    "FleetTelemetry", "RouterConfig", "ScoringFrontend", "ShardRouter",
+    "consolidate", "merge_down", "sp_mass",
+]

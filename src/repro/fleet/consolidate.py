@@ -1,0 +1,119 @@
+"""Cross-replica consolidation: N replica mixtures → one global mixture.
+
+The math (Pinto & Engel 2017's data-parallel argument): each replica's
+(sp-weighted) mixture summarises its shard, and posterior mass is additive
+across shards, so the *union* of the replicas' components is exactly the
+mixture of the combined stream up to assignment noise.  Consolidation is
+therefore union + budget enforcement, and the budget is enforced by
+moment-matched merging (``core.merge.moment_match_pair``), never by
+truncation — merging redistributes mass, truncation destroys it, and the
+fleet's conservation contract is that ``sum(sp)`` over active slots is
+EXACTLY the sum over the inputs.
+
+Two topologies:
+
+  star    — all replicas union into one wide pool, merged down once.
+            One O((ΣK)²D) closest-pair search; the best global merge
+            decisions; what a single coordinator host runs.
+  gossip  — pairwise reduction tree: replicas merge in pairs, winners merge
+            in pairs, ... log₂(N) rounds, each bounded to the output
+            budget.  Worse merge decisions (locally greedy) but each step
+            touches only 2K slots — the shape that scales to pod meshes
+            where replica pairs share a fast link and no host ever holds
+            the full ΣK pool.
+
+Both return a state with exactly ``kmax_out`` slots, inactive-slot sp
+zeroed (a consolidated snapshot is a serving artifact: eq. 12 priors are
+computed from raw sp sums, so stale mass in dead slots would skew them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import merge
+from repro.core.types import FIGMNConfig, FIGMNState
+
+TOPOLOGIES = ("star", "gossip")
+
+
+def sp_mass(state: FIGMNState) -> float:
+    """Total posterior mass over ACTIVE slots (float64 accumulation)."""
+    sp = np.asarray(state.sp, np.float64)
+    act = np.asarray(state.active)
+    return float(sp[act].sum())
+
+
+# Budget enforcement is core.merge.merge_to_budget — the same loop the
+# per-replica lifecycle uses, so conservation semantics cannot diverge.
+merge_down = merge.merge_to_budget
+
+
+def _compact(state: FIGMNState, kmax_out: int) -> FIGMNState:
+    """Resize to exactly kmax_out slots.  Callers guarantee n_active ≤
+    kmax_out, so shrinking only drops dead slots; growing pads with dead
+    slots (slot-0 geometry, finite so downstream batched math stays
+    NaN-free).  Surviving dead slots get sp zeroed."""
+    k = int(state.active.shape[0])
+    if k < kmax_out:
+        pad = kmax_out - k
+        rep = lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])], axis=0)
+        state = FIGMNState(
+            mu=rep(state.mu), lam=rep(state.lam), logdet=rep(state.logdet),
+            sp=jnp.concatenate([state.sp, jnp.zeros((pad,),
+                                                    state.sp.dtype)]),
+            v=jnp.concatenate([state.v, jnp.zeros((pad,), state.v.dtype)]),
+            active=jnp.concatenate([state.active,
+                                    jnp.zeros((pad,), bool)]),
+            n_created=state.n_created)
+    out = merge.top_k_by_sp(state, kmax_out)
+    return dataclasses.replace(
+        out, sp=jnp.where(out.active, out.sp, 0.0))
+
+
+def _union_wide(cfg: FIGMNConfig, states: Sequence[FIGMNState]
+                ) -> Tuple[FIGMNConfig, FIGMNState]:
+    """Lossless union: widen cfg.kmax to the total slot count so
+    merge.union's top-k keeps every slot."""
+    total = sum(int(s.active.shape[0]) for s in states)
+    wide_cfg = dataclasses.replace(cfg, kmax=total)
+    return wide_cfg, merge.union(wide_cfg, list(states))
+
+
+def consolidate(cfg: FIGMNConfig, states: Sequence[FIGMNState],
+                topology: str = "star", kmax_out: int = 0
+                ) -> Tuple[FIGMNState, int]:
+    """Merge replica states into one kmax_out-slot global mixture.
+
+    Returns (global_state, n_pairwise_merges).  kmax_out = 0 ⇒ cfg.kmax.
+    """
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"topology must be one of {TOPOLOGIES}")
+    kmax_out = kmax_out or cfg.kmax
+    states = list(states)
+    if not states:
+        raise ValueError("nothing to consolidate")
+    if topology == "star":
+        wide_cfg, big = _union_wide(cfg, states)
+        big, merged = merge_down(wide_cfg, big, kmax_out)
+        return _compact(big, kmax_out), merged
+    # gossip: pairwise reduction tree, each round budget-bounded
+    merged = 0
+    while len(states) > 1:
+        nxt: List[FIGMNState] = []
+        for i in range(0, len(states) - 1, 2):
+            wide_cfg, pair = _union_wide(cfg, states[i:i + 2])
+            pair, m = merge_down(wide_cfg, pair, kmax_out)
+            merged += m
+            nxt.append(_compact(pair, kmax_out))
+        if len(states) % 2:
+            nxt.append(states[-1])
+        states = nxt
+    # a lone replica (or the tree's root) may itself exceed the budget
+    wide_cfg, big = _union_wide(cfg, states)
+    big, m = merge_down(wide_cfg, big, kmax_out)
+    return _compact(big, kmax_out), merged + m

@@ -1,0 +1,279 @@
+"""FleetCoordinator — N StreamRuntime replicas behind one front door.
+
+The scaling story (ROADMAP north star): PR 1 proved the per-chunk body of a
+StreamRuntime is contract-equivalent to one-shot ``figmn.fit``, so the unit
+of data-parallel scale-out is the *replica*: one runtime per data shard,
+each with its own lifecycle budget, drift detector and checkpoint lineage.
+This module adds the three things N replicas need to act as ONE model:
+
+  routing        — ShardRouter splits every incoming batch into per-replica
+                   sub-streams (hash / round-robin / feature-affinity),
+  consolidation  — every ``consolidate_every`` ingest rounds (a lifecycle
+                   boundary: replicas have just run their final lifecycle
+                   pass, so pools are pruned and within budget) the replica
+                   mixtures merge into one global mixture
+                   (fleet.consolidate, star or gossip topology) with
+                   ``sum(sp)`` conserved exactly,
+  serving        — the consolidated mixture is *published* to a read-only
+                   ScoringFrontend; ``score``/``score_async`` read the
+                   snapshot and never touch (or wait on) ingesting
+                   replicas.
+
+Checkpointing writes one fleet manifest + per-replica payloads (each via
+its own CheckpointManager, so replica saves stay independently atomic and
+resumable); ``resume`` restores every replica — including drift-detector
+and telemetry state — then re-consolidates to rebuild the snapshot.
+
+In this container the replicas step sequentially on one device; the
+coordinator is deliberately ignorant of placement (replicas share no state
+between consolidations), so the multi-host version is this same class with
+``_ingest_shard`` dispatched over processes — the layer later pod-mesh PRs
+plug into.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.types import Array, FIGMNConfig, FIGMNState
+from repro.fleet.consolidate import consolidate as _consolidate
+from repro.fleet.consolidate import sp_mass
+from repro.fleet.router import RouterConfig, ShardRouter
+from repro.fleet.scoring import ScoringFrontend
+from repro.fleet.telemetry import ConsolidationEvent, FleetTelemetry
+from repro.stream import RuntimeConfig, StreamRuntime
+
+_MANIFEST = "fleet_manifest.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-level knobs (per-replica knobs live in RuntimeConfig).
+
+    n_replicas:        StreamRuntime replicas (= data shards).
+    router:            "round_robin" | "hash" | "affinity".
+    topology:          consolidation topology, "star" | "gossip".
+    consolidate_every: ingest rounds between consolidations (0 ⇒ never
+                       automatic — only an explicit consolidate() call, or
+                       the implicit one on the first score of an
+                       unpublished fleet).
+    global_kmax:       slot budget of the consolidated mixture (0 ⇒ the
+                       replica cfg.kmax).
+    checkpoint_dir:    fleet manifest + per-replica checkpoint root.
+    score_workers:     ScoringFrontend worker threads.
+    """
+    n_replicas: int = 2
+    router: str = "round_robin"
+    topology: str = "star"
+    consolidate_every: int = 1
+    global_kmax: int = 0
+    checkpoint_dir: Optional[str] = None
+    score_workers: int = 2
+    router_seed: int = 0
+
+
+class FleetCoordinator:
+    """Owns the replicas, the router, the merge clock and the snapshot."""
+
+    def __init__(self, cfg: FIGMNConfig, fcfg: FleetConfig = FleetConfig(),
+                 rcfg: RuntimeConfig = RuntimeConfig()):
+        self.cfg = cfg
+        self.fcfg = fcfg
+        self.rcfg = rcfg
+        self.router = ShardRouter(
+            RouterConfig(policy=fcfg.router, seed=fcfg.router_seed),
+            fcfg.n_replicas)
+        self.replicas: List[StreamRuntime] = [
+            StreamRuntime(cfg, self._replica_rcfg(i))
+            for i in range(fcfg.n_replicas)]
+        self.scoring = ScoringFrontend(cfg, workers=fcfg.score_workers)
+        self.telemetry = FleetTelemetry()
+        self.rounds = 0
+
+    @property
+    def _ckpt_root(self) -> Optional[str]:
+        """Fleet checkpoint root: FleetConfig wins, else a RuntimeConfig
+        checkpoint_dir is promoted to fleet root — replicas must NEVER
+        share one literal directory (same chunk_idx steps would rmtree
+        each other's saves and resume() would silently swap states)."""
+        return self.fcfg.checkpoint_dir or self.rcfg.checkpoint_dir
+
+    def _replica_rcfg(self, i: int) -> RuntimeConfig:
+        root = self._ckpt_root
+        if root is None:
+            return self.rcfg
+        return dataclasses.replace(
+            self.rcfg, checkpoint_dir=os.path.join(root, f"replica_{i}"))
+
+    # ------------------------------------------------------------------
+    # ingestion
+    # ------------------------------------------------------------------
+
+    def ingest(self, xs) -> Dict[str, object]:
+        """Route one (N, D) batch to the replicas; returns fleet summary.
+
+        One call is one fleet "round": every replica ingests its shard
+        (running its own chunking/lifecycle/drift), then — at the cadence
+        of ``consolidate_every`` — the round ends at a lifecycle boundary
+        with a consolidation + snapshot publish.
+        """
+        xs = np.asarray(xs, np.float32)
+        for replica, idx in zip(self.replicas, self.router.route(xs)):
+            if idx.size:
+                replica.ingest(xs[idx])
+        self.rounds += 1
+        every = self.fcfg.consolidate_every
+        if every > 0 and self.rounds % every == 0:
+            self.consolidate()
+        return self.summary()
+
+    # ------------------------------------------------------------------
+    # consolidation / serving
+    # ------------------------------------------------------------------
+
+    def consolidate(self) -> FIGMNState:
+        """Merge all replica mixtures; publish the result for serving."""
+        t0 = time.perf_counter()
+        states = [r.state for r in self.replicas]
+        active_in = sum(int(s.n_active) for s in states)
+        global_state, merges = _consolidate(
+            self.cfg, states, topology=self.fcfg.topology,
+            kmax_out=self.fcfg.global_kmax)
+        version = self.scoring.publish(global_state)
+        self.telemetry.record_consolidation(ConsolidationEvent(
+            round_idx=self.rounds, version=version,
+            topology=self.fcfg.topology, n_states_in=len(states),
+            active_in=active_in, active_out=int(global_state.n_active),
+            merges=merges,
+            sp_mass=sp_mass(global_state),
+            wall_s=time.perf_counter() - t0))
+        return global_state
+
+    @property
+    def global_state(self) -> Optional[FIGMNState]:
+        """The last consolidated mixture (None before first consolidate)."""
+        state, _ = self.scoring.snapshot()
+        return state
+
+    def score(self, xs) -> Array:
+        """Serving read: (N,) log-densities under the published snapshot
+        (consolidates first if nothing was published yet)."""
+        if not self.scoring.ready:
+            self.consolidate()
+        return self.scoring.score(xs)
+
+    def score_async(self, xs):
+        """Non-blocking serving read; returns a Future of score(xs)."""
+        if not self.scoring.ready:
+            self.consolidate()
+        return self.scoring.score_async(xs)
+
+    # ------------------------------------------------------------------
+    # telemetry / checkpointing
+    # ------------------------------------------------------------------
+
+    def summary(self) -> Dict[str, object]:
+        return self.telemetry.summary(
+            [r.telemetry.summary() for r in self.replicas],
+            self.router.load())
+
+    def checkpoint(self) -> None:
+        """One manifest + N independently-atomic replica payloads."""
+        d = self._ckpt_root
+        if d is None:
+            raise RuntimeError("no checkpoint_dir configured")
+        for r in self.replicas:
+            r.checkpoint()
+        # Pin the exact replica steps this manifest describes: replicas
+        # also auto-checkpoint on every ingest, so "latest" may be newer
+        # than the manifest after a crash — resume restores THESE steps so
+        # the fleet always comes back as one consistent cut.
+        manifest = {"n_replicas": self.fcfg.n_replicas,
+                    "rounds": self.rounds,
+                    "topology": self.fcfg.topology,
+                    "snapshot_version": self.scoring.version,
+                    "replica_steps": [r.ckpt.latest_step()
+                                      for r in self.replicas],
+                    "router": self.router.export_state()}
+        tmp = os.path.join(d, _MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(d, _MANIFEST))
+
+    def resume(self) -> bool:
+        """Restore manifest + every replica (incl. drift/telemetry state);
+        re-consolidate to rebuild the serving snapshot.  True if resumed."""
+        d = self._ckpt_root
+        if d is None:
+            raise RuntimeError("no checkpoint_dir configured")
+        path = os.path.join(d, _MANIFEST)
+        if not os.path.exists(path):
+            return False
+        with open(path) as f:
+            manifest = json.load(f)
+        if manifest["n_replicas"] != self.fcfg.n_replicas:
+            raise ValueError(
+                f"manifest has {manifest['n_replicas']} replicas, "
+                f"fleet configured with {self.fcfg.n_replicas}")
+        steps = manifest.get("replica_steps",
+                             [None] * self.fcfg.n_replicas)
+        # Resolve and validate the WHOLE cut before touching any replica:
+        # a partial restore (some replicas rolled back, some not) is worse
+        # than failing.  None (legacy manifest) resolves to that replica's
+        # latest step; a replica with no checkpoint at all ⇒ clean False.
+        # A PINNED step can only be missing when replica auto-checkpoint
+        # GC (keep_n) outran fleet.checkpoint() — that is an operator
+        # error (checkpoint the fleet at least every keep_n-1 ingest
+        # rounds), and it is loud, not a silent False.
+        resolved = [step if step is not None else r.ckpt.latest_step()
+                    for r, step in zip(self.replicas, steps)]
+        if None in resolved:
+            return False
+        lost = [i for i, (r, step) in enumerate(zip(self.replicas,
+                                                    resolved))
+                if step not in r.ckpt.all_steps()]
+        if lost:
+            if any(s is not None for s in steps):
+                raise RuntimeError(
+                    f"fleet manifest pins replica steps {steps} but "
+                    f"replicas {lost} no longer have theirs (GC'd by "
+                    f"keep_n); call fleet.checkpoint() at least every "
+                    f"keep_n-1 ingest rounds or raise "
+                    f"RuntimeConfig.keep_n")
+            return False
+        for r, step in zip(self.replicas, resolved):
+            if not r.resume(step=step):
+                return False
+        self.rounds = int(manifest["rounds"])
+        self.router.load_state(manifest["router"])
+        if int(manifest.get("snapshot_version", 0)) > 0:
+            t0 = time.perf_counter()
+            state, merges = _consolidate(
+                self.cfg, [r.state for r in self.replicas],
+                topology=self.fcfg.topology,
+                kmax_out=self.fcfg.global_kmax)
+            version = self.scoring.publish(
+                state, version=manifest["snapshot_version"])
+            # log the republish so summary() (snapshot_version, global K,
+            # mass) reflects the serving snapshot immediately, not only
+            # after the next scheduled consolidation
+            self.telemetry.record_consolidation(ConsolidationEvent(
+                round_idx=self.rounds, version=version,
+                topology=self.fcfg.topology,
+                n_states_in=len(self.replicas),
+                active_in=sum(int(r.state.n_active)
+                              for r in self.replicas),
+                active_out=int(state.n_active), merges=merges,
+                sp_mass=sp_mass(state),
+                wall_s=time.perf_counter() - t0))
+        return True
+
+    def close(self) -> None:
+        self.scoring.close()

@@ -1,0 +1,149 @@
+"""Shard routing: which replica's sub-stream does each point join?
+
+The fleet's correctness contract (consolidated replicas ≈ one single-stream
+fit) holds for ANY partition of the stream — the union of sp-weighted
+mixtures is the mixture of the union of the shards.  Routing therefore only
+shapes the *statistical efficiency* and load balance:
+
+  round_robin — perfect load balance, every replica sees an i.i.d. thinning
+                of the stream.  The default, and what the equivalence tests
+                use (each replica's sub-stream is distributionally the full
+                stream, so consolidation has the least assignment noise).
+  hash        — stateless, content-addressed (blake2b of the feature bytes):
+                the same point always lands on the same replica regardless
+                of arrival order or which coordinator process is routing —
+                what a multi-host front-end needs for cache affinity and
+                for exactly-once semantics under replay.
+  affinity    — feature-space affinity: points go to the replica whose
+                running centroid is nearest (greedy max-min init from the
+                first batch).  Each replica then models a compact region of
+                feature space — the component-pool partitioning of the
+                sublinear-GMM line of work (fewer cross-replica duplicate
+                components, cheaper consolidation merges) at the cost of
+                load skew on lumpy traffic.
+
+Routing runs on host (numpy) — it is the serving front door, upstream of
+any device work, and must not trigger XLA retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+POLICIES = ("round_robin", "hash", "affinity")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    policy: str = "round_robin"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}")
+
+
+class ShardRouter:
+    """Partitions each incoming (N, D) batch into per-replica index sets."""
+
+    def __init__(self, cfg: RouterConfig, n_replicas: int):
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.cfg = cfg
+        self.n = int(n_replicas)
+        self._rr_offset = 0                     # round_robin clock
+        self._centroids: Optional[np.ndarray] = None   # affinity state
+        self._counts = np.zeros(self.n, np.int64)      # points per replica
+
+    # ------------------------------------------------------------------
+
+    def route(self, xs: np.ndarray) -> List[np.ndarray]:
+        """Return n_replicas index arrays partitioning ``range(len(xs))``.
+
+        Order within a shard preserves stream order — the IGMN is
+        order-sensitive, and a shard IS that replica's stream.
+        """
+        xs = np.asarray(xs, np.float32)
+        if xs.ndim != 2:
+            raise ValueError(f"expected (N, D) batch, got {xs.shape}")
+        assign = getattr(self, f"_assign_{self.cfg.policy}")(xs)
+        np.add.at(self._counts, assign, 1)
+        return [np.flatnonzero(assign == r) for r in range(self.n)]
+
+    def load(self) -> Dict[str, int]:
+        """Cumulative points routed per replica (load-balance telemetry)."""
+        return {f"replica_{r}": int(c) for r, c in enumerate(self._counts)}
+
+    # -- policies ------------------------------------------------------
+
+    def _assign_round_robin(self, xs: np.ndarray) -> np.ndarray:
+        n = xs.shape[0]
+        assign = (self._rr_offset + np.arange(n)) % self.n
+        self._rr_offset = (self._rr_offset + n) % self.n
+        return assign
+
+    def _assign_hash(self, xs: np.ndarray) -> np.ndarray:
+        salt = self.cfg.seed.to_bytes(8, "little", signed=True)
+        rows = np.ascontiguousarray(xs)
+        return np.fromiter(
+            (int.from_bytes(hashlib.blake2b(r.tobytes(), digest_size=8,
+                                            salt=salt).digest(), "little")
+             % self.n for r in rows),
+            np.int64, count=rows.shape[0])
+
+    def _assign_affinity(self, xs: np.ndarray) -> np.ndarray:
+        if self._centroids is None:
+            if xs.shape[0] < self.n:
+                # not enough points to seed n distinct centroids — a
+                # duplicate seed would tie-break every assignment to the
+                # lower replica index and starve its twin forever; route
+                # round-robin until a big-enough batch arrives
+                return self._assign_round_robin(xs)
+            self._centroids = self._init_centroids(xs)
+        d2 = ((xs[:, None, :] - self._centroids[None]) ** 2).sum(-1)
+        assign = d2.argmin(1)
+        # running-mean centroid update (count-weighted, order-free)
+        for r in range(self.n):
+            sel = assign == r
+            k = int(sel.sum())
+            if not k:
+                continue
+            c0 = self._counts[r]
+            self._centroids[r] = (self._centroids[r] * c0
+                                  + xs[sel].sum(0)) / (c0 + k)
+        return assign
+
+    def _init_centroids(self, xs: np.ndarray) -> np.ndarray:
+        """Greedy max-min (k-means++ style, deterministic) seed centroids."""
+        idx = [0]
+        d2 = ((xs - xs[0]) ** 2).sum(-1)
+        while len(idx) < self.n:
+            j = int(d2.argmax())
+            idx.append(j)
+            d2 = np.minimum(d2, ((xs - xs[j]) ** 2).sum(-1))
+        cent = xs[idx].astype(np.float64).copy()
+        # degenerate batches (duplicate points) can still seed coincident
+        # centroids; a deterministic per-replica jitter lets their regions
+        # separate once real traffic updates them
+        scale = max(float(np.abs(cent).max()), 1.0)
+        cent += (1e-6 * scale
+                 * np.arange(self.n, dtype=np.float64)[:, None])
+        return cent
+
+    # -- checkpoint round-trip -----------------------------------------
+
+    def export_state(self) -> Dict[str, object]:
+        return {"rr_offset": self._rr_offset,
+                "counts": self._counts.tolist(),
+                "centroids": (self._centroids.tolist()
+                              if self._centroids is not None else None)}
+
+    def load_state(self, payload: Dict[str, object]) -> None:
+        self._rr_offset = int(payload["rr_offset"])
+        self._counts = np.asarray(payload["counts"], np.int64)
+        cent = payload.get("centroids")
+        self._centroids = (np.asarray(cent, np.float64)
+                           if cent is not None else None)

@@ -1,0 +1,86 @@
+"""Serving-path scoring from a read-only consolidated snapshot.
+
+The serving contract: ``score()`` NEVER touches a live replica.  Replicas
+mutate their states on every chunk; a scorer reading them mid-stream would
+see a half-drifted mixture and, worse, would serialise reads against
+ingestion.  Instead the coordinator *publishes* each consolidated global
+mixture here; publication is an atomic reference swap (FIGMNState leaves
+are immutable jax arrays, so a published snapshot can never change under a
+reader), and every score call reads whichever snapshot was current when it
+started.  Ingestion therefore never waits on scoring and scoring never
+waits on ingestion — the only synchronisation is one mutex around the
+reference swap.
+
+``score_async`` pushes the evaluation onto a worker pool and returns a
+future: the serving front door queues scores while the coordinator is mid
+ingest (XLA releases the GIL during device compute, so worker-thread
+scoring genuinely overlaps host-side routing/lifecycle work).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.types import Array, FIGMNConfig, FIGMNState
+from repro.stream import ingest
+
+
+class ScoringFrontend:
+    """Read-only mixture scores from the last published snapshot."""
+
+    def __init__(self, cfg: FIGMNConfig, workers: int = 2):
+        self.cfg = cfg
+        self._lock = threading.Lock()
+        self._snapshot: Optional[FIGMNState] = None
+        self._version = 0
+        self._pool = ThreadPoolExecutor(max_workers=max(int(workers), 1),
+                                        thread_name_prefix="fleet-score")
+        self.served = 0
+
+    # -- publication (coordinator side) --------------------------------
+
+    def publish(self, state: FIGMNState, version: Optional[int] = None
+                ) -> int:
+        """Swap in a new snapshot; returns its version number."""
+        with self._lock:
+            self._version = self._version + 1 if version is None \
+                else int(version)
+            self._snapshot = state
+            return self._version
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def ready(self) -> bool:
+        return self._snapshot is not None
+
+    def snapshot(self) -> Tuple[Optional[FIGMNState], int]:
+        """The current (state, version) pair under the swap lock."""
+        with self._lock:
+            return self._snapshot, self._version
+
+    # -- reads (serving side) ------------------------------------------
+
+    def score(self, xs) -> Array:
+        """(N,) mixture log-densities under the current snapshot."""
+        state, _ = self.snapshot()
+        if state is None:
+            raise RuntimeError("no consolidated snapshot published yet")
+        out = ingest.score_batch_jit(
+            self.cfg, state, jnp.asarray(xs, self.cfg.dtype))
+        with self._lock:        # += races across pool threads otherwise
+            self.served += int(out.shape[0])
+        return out
+
+    def score_async(self, xs) -> "Future[Array]":
+        """Queue a score; the returned future resolves off the caller's
+        thread, against whichever snapshot is current when it runs."""
+        return self._pool.submit(self.score, xs)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)

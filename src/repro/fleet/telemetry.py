@@ -1,0 +1,77 @@
+"""Fleet-level telemetry: replica aggregation + consolidation history.
+
+Each StreamRuntime already keeps exact running counters for its own stream
+(repro.stream.telemetry); the fleet layer's job is the cross-replica view a
+fleet operator actually pages on: aggregate throughput, per-replica load
+skew (is the router balanced?), consolidation cadence/cost, and how much
+the budget merge is compressing the global pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Sequence
+
+
+@dataclasses.dataclass
+class ConsolidationEvent:
+    round_idx: int          # coordinator ingest-round clock at the merge
+    version: int            # snapshot version published from this merge
+    topology: str
+    n_states_in: int        # replicas (star) / tree leaves (gossip)
+    active_in: int          # total live slots across inputs
+    active_out: int         # live slots in the global mixture
+    merges: int             # moment-match pair merges performed
+    sp_mass: float          # conserved posterior mass of the snapshot
+    wall_s: float = 0.0
+
+
+class FleetTelemetry:
+    """Consolidation event log + cross-replica summary aggregation."""
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = int(capacity)
+        self.events: List[ConsolidationEvent] = []
+        self.total_consolidations = 0
+        self.total_merges = 0
+
+    def record_consolidation(self, ev: ConsolidationEvent) -> None:
+        self.events.append(ev)
+        if len(self.events) > self.capacity:
+            self.events = self.events[-self.capacity:]
+        self.total_consolidations += 1
+        self.total_merges += ev.merges
+
+    def summary(self, replica_summaries: Sequence[Dict],
+                router_load: Dict[str, int]) -> Dict[str, object]:
+        """One fleet-level dict from the per-replica runtime summaries."""
+        last = self.events[-1] if self.events else None
+        agg_keys = ("total_points", "created", "pruned", "merged",
+                    "spawned", "drift_alarms", "chunks")
+        agg = {k: sum(int(s.get(k, 0)) for s in replica_summaries)
+               for k in agg_keys}
+        # replicas run concurrently in production, so fleet throughput is
+        # the SUM of replica rates (each rate is that replica's exact
+        # points/wall over its own stream)
+        agg["points_per_s"] = sum(float(s.get("points_per_s", 0.0))
+                                  for s in replica_summaries)
+        return {
+            "replicas": len(replica_summaries),
+            **agg,
+            "router_load": dict(router_load),
+            "consolidations": self.total_consolidations,
+            "consolidation_merges": self.total_merges,
+            "snapshot_version": last.version if last else 0,
+            "global_active_k": last.active_out if last else 0,
+            "global_sp_mass": last.sp_mass if last else 0.0,
+            "per_replica": [dict(s) for s in replica_summaries],
+        }
+
+    def to_json(self, path: str, replica_summaries: Sequence[Dict],
+                router_load: Dict[str, int]) -> None:
+        with open(path, "w") as f:
+            json.dump({"summary": self.summary(replica_summaries,
+                                               router_load),
+                       "consolidations": [dataclasses.asdict(e)
+                                          for e in self.events]}, f,
+                      indent=1)

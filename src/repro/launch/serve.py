@@ -3,10 +3,12 @@
 Loads (or random-inits) a model, spins the ServeEngine over a synthetic
 request stream, reports throughput/latency percentiles, and runs the FIGMN
 OOD monitor over prompt embeddings (the paper's algorithm on the serving
-path) as a ``repro.stream.StreamRuntime`` — the same always-on runtime
-(chunked ingestion, lifecycle budget, drift detection) that production
-replicas keep running over live request features.  At production scale the
-same engine runs per model replica with the dry-run's decode shardings.
+path) as a ``repro.fleet.FleetCoordinator``: request features are hash-
+sharded across N StreamRuntime replicas (chunked ingestion, lifecycle
+budget, drift detection per shard), periodically consolidated into one
+global mixture, and OOD scores are served from that read-only snapshot so
+the serving path never blocks on ingestion.  At production scale the same
+fleet runs with one replica per serving pod.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
@@ -25,10 +27,10 @@ from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.core import figmn
 from repro.core.types import FIGMNConfig
+from repro.fleet import FleetConfig, FleetCoordinator
 from repro.models import transformer as tr
 from repro.serve.engine import Request, ServeEngine
-from repro.stream import (DriftConfig, LifecycleConfig, RuntimeConfig,
-                          StreamRuntime)
+from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
 
 
 def main() -> None:
@@ -42,6 +44,8 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from a training checkpoint")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ood-replicas", type=int, default=2,
+                    help="stream-fleet replicas for the OOD monitor")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -84,24 +88,36 @@ def main() -> None:
           f"p95={ls[int(len(ls) * 0.95) - 1] * 1e3:.0f}ms")
 
     # FIGMN OOD monitor over prompt-embedding means (first 16 dims), run as
-    # the streaming runtime a live replica would keep open: chunked ingest,
-    # a fixed component budget, and drift detection over request features.
+    # the stream FLEET a serving deployment keeps open: request features
+    # hash-sharded across replicas (each with chunked ingest, a fixed
+    # component budget and drift detection), consolidated into one global
+    # mixture, and scored from the read-only serving snapshot.
     emb = np.asarray(params["embed"], np.float32)
     feats = np.stack([emb[r.prompt].mean(0)[:16] for r in reqs])
-    fcfg = FIGMNConfig(kmax=8, dim=16, beta=0.1, delta=1.0, vmin=1e9,
+    gcfg = FIGMNConfig(kmax=8, dim=16, beta=0.1, delta=1.0, vmin=1e9,
                        spmin=0.0, update_mode="exact",
                        sigma_ini=figmn.sigma_from_data(
                            jnp.asarray(feats), 1.0))
-    monitor = StreamRuntime(fcfg, RuntimeConfig(
-        chunk=max(args.requests // 4, 4),
-        lifecycle=LifecycleConfig(k_budget=8, every=4),
-        drift=DriftConfig(window=8, threshold=8.0, response="inflate")))
+    monitor = FleetCoordinator(
+        gcfg,
+        FleetConfig(n_replicas=args.ood_replicas, router="hash",
+                    consolidate_every=1, global_kmax=8),
+        RuntimeConfig(
+            chunk=max(args.requests // 4, 4),
+            lifecycle=LifecycleConfig(k_budget=8, every=4),
+            drift=DriftConfig(window=8, threshold=8.0,
+                              response="inflate")))
     summary = monitor.ingest(feats)
+    # snapshot read — non-blocking w.r.t. ingestion (score_async exists
+    # for callers that also want to get off their own thread)
     scores = monitor.score(feats)
-    print(f"FIGMN OOD monitor active: in-dist logp median "
+    monitor.close()
+    print(f"FIGMN OOD fleet active ({summary['replicas']} replicas, "
+          f"router load {summary['router_load']}): in-dist logp median "
           f"{float(jnp.median(scores)):.1f} over {len(reqs)} requests "
           f"({summary['points_per_s']:.0f} feats/s, "
-          f"K={summary['active_k']}, "
+          f"global K={summary['global_active_k']}, "
+          f"snapshot v{summary['snapshot_version']}, "
           f"drift alarms={summary['drift_alarms']})")
 
 

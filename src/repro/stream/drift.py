@@ -84,6 +84,11 @@ class DriftDetector:
         """
         c = self.cfg
         weight = min(max(weight, 0.0), 1.0)
+        # float32-quantise everything that enters persistent state: the
+        # checkpoint payload is float32, so this makes save/resume
+        # LOSSLESS — a resumed detector continues bit-identically.
+        mean_ll = float(np.float32(mean_ll))
+        novelty_rate = float(np.float32(novelty_rate))
         if len(self._ref) >= c.min_chunks:
             mu = float(np.mean(self._ref))
             sd = float(np.std(self._ref)) or 1.0
@@ -95,6 +100,7 @@ class DriftDetector:
             base_nov = float(np.mean(self._ref_nov)) if self._ref_nov else 0.0
             self._g += c.novelty_weight * weight \
                 * max(0.0, novelty_rate - base_nov)
+            self._g = float(np.float32(self._g))
             if self._g > c.threshold:
                 self.alarms += 1
                 self._g = 0.0
@@ -107,6 +113,39 @@ class DriftDetector:
             self._ref = self._ref[-c.window:]
             self._ref_nov = self._ref_nov[-c.window:]
         return self._g, False
+
+    # -- checkpoint round-trip (fixed-shape arrays: the manager's manifest
+    # -- keys/shapes must not depend on how full the reference window is) --
+
+    def export_state(self):
+        """Detector state as a fixed-shape array dict (NaN-padded window)."""
+        w = self.cfg.window
+        ref = np.full((w,), np.nan, np.float32)
+        nov = np.full((w,), np.nan, np.float32)
+        ref[:len(self._ref)] = self._ref
+        nov[:len(self._ref_nov)] = self._ref_nov
+        return {"ref": jnp.asarray(ref), "ref_nov": jnp.asarray(nov),
+                "count": jnp.asarray(len(self._ref), jnp.int32),
+                "g": jnp.asarray(self._g, jnp.float32),
+                "alarms": jnp.asarray(self.alarms, jnp.int32)}
+
+    def load_state(self, payload) -> None:
+        n = int(payload["count"])
+        self._ref = [float(v) for v in np.asarray(payload["ref"])[:n]]
+        self._ref_nov = [float(v)
+                         for v in np.asarray(payload["ref_nov"])[:n]]
+        self._g = float(payload["g"])
+        self.alarms = int(payload["alarms"])
+
+    @staticmethod
+    def state_template(cfg: DriftConfig):
+        """Zero-filled payload matching export_state (checkpoint restore)."""
+        w = cfg.window
+        return {"ref": jnp.zeros((w,), jnp.float32),
+                "ref_nov": jnp.zeros((w,), jnp.float32),
+                "count": jnp.zeros((), jnp.int32),
+                "g": jnp.zeros((), jnp.float32),
+                "alarms": jnp.zeros((), jnp.int32)}
 
 
 # ---------------------------------------------------------------------------

@@ -80,6 +80,26 @@ class FailureBuffer:
         out, self._items = self._items[:k], self._items[k:]
         return np.asarray(out, np.float32).reshape(k, self.dim)
 
+    # -- checkpoint round-trip (fixed (cap, dim) shape so the manager's
+    # -- manifest doesn't depend on the current fill level) ---------------
+
+    def export_state(self):
+        arr = np.zeros((self.cap, self.dim), np.float32)
+        if self._items:
+            arr[:len(self._items)] = np.stack(self._items)
+        return {"buf": arr,
+                "count": np.asarray(len(self._items), np.int64)}
+
+    def load_state(self, payload) -> None:
+        n = int(payload["count"])
+        arr = np.asarray(payload["buf"], np.float32)
+        self._items = [arr[i].copy() for i in range(n)]
+
+    @staticmethod
+    def state_template(cap: int, dim: int):
+        return {"buf": np.zeros((cap, dim), np.float32),
+                "count": np.zeros((), np.int64)}
+
 
 def run_pass(cfg: FIGMNConfig, lcfg: LifecycleConfig, state: FIGMNState,
              buffer: Optional[FailureBuffer] = None
@@ -100,10 +120,7 @@ def run_pass(cfg: FIGMNConfig, lcfg: LifecycleConfig, state: FIGMNState,
             rep.spawned += 1
 
     if lcfg.merge_down:
-        while int(state.n_active) > k_budget:
-            ia, ib = merge.closest_pair(state)
-            state = merge.moment_match_pair(cfg, state, ia, ib)
-            rep.merged += 1
+        state, rep.merged = merge.merge_to_budget(cfg, state, k_budget)
 
     rep.active_k = int(state.n_active)
     return state, rep

@@ -188,9 +188,21 @@ class StreamRuntime:
                                       jnp.asarray(xs, self.cfg.dtype))
 
     def _payload(self) -> Dict[str, object]:
-        return {"figmn": self.state,
-                "runtime": {"chunk_idx":
-                            jnp.asarray(self.chunk_idx, jnp.int32)}}
+        """Everything a resumed runtime needs to continue bit-identically:
+        the mixture, the chunk clock, the drift detector's CUSUM/reference
+        window (else a resumed replica re-warms up and misses early
+        drift), the running telemetry counters (else the summary resets)
+        and the pending gate-failure spawn buffer (else the next lifecycle
+        pass spawns different components than the uninterrupted run)."""
+        payload = {"figmn": self.state,
+                   "runtime": {"chunk_idx":
+                               jnp.asarray(self.chunk_idx, jnp.int32)},
+                   "telemetry": self.telemetry.export_counters()}
+        if self.detector is not None:
+            payload["drift"] = self.detector.export_state()
+        if self.rcfg.lifecycle is not None:
+            payload["spawn_buffer"] = self.buffer.export_state()
+        return payload
 
     def checkpoint(self) -> None:
         if self.ckpt is None:
@@ -198,16 +210,39 @@ class StreamRuntime:
         self.ckpt.save(self.chunk_idx, self._payload())
         self.ckpt.wait()
 
-    def resume(self) -> bool:
-        """Restore the latest checkpoint; returns True if one existed."""
+    def resume(self, step: Optional[int] = None) -> bool:
+        """Restore a checkpoint (latest by default); True if one existed.
+
+        step: restore this exact step instead — the fleet coordinator pins
+        per-replica steps in its manifest so a resumed fleet is a
+        consistent cut even when replicas auto-checkpointed after the last
+        manifest write.
+        """
         if self.ckpt is None:
             raise RuntimeError("no checkpoint_dir configured")
-        step = self.ckpt.latest_step()
+        if step is None:
+            step = self.ckpt.latest_step()
+        elif step not in self.ckpt.all_steps():
+            return False
         if step is None:
             return False
         template = {"figmn": figmn.init_state(self.cfg),
-                    "runtime": {"chunk_idx": jnp.zeros((), jnp.int32)}}
-        loaded = self.ckpt.restore(step, template)
+                    "runtime": {"chunk_idx": jnp.zeros((), jnp.int32)},
+                    "telemetry": telemetry.Telemetry.counters_template()}
+        if self.detector is not None:
+            template["drift"] = drift_mod.DriftDetector.state_template(
+                self.rcfg.drift)
+        if self.rcfg.lifecycle is not None:
+            template["spawn_buffer"] = lifecycle.FailureBuffer \
+                .state_template(self.buffer.cap, self.cfg.dim)
+        # missing="template": checkpoints from an older payload format
+        # restore what they have; newer sections start fresh (zeros)
+        loaded = self.ckpt.restore(step, template, missing="template")
         self.state = loaded["figmn"]
         self.chunk_idx = int(loaded["runtime"]["chunk_idx"])
+        self.telemetry.load_counters(loaded["telemetry"])
+        if self.detector is not None:
+            self.detector.load_state(loaded["drift"])
+        if self.rcfg.lifecycle is not None:
+            self.buffer.load_state(loaded["spawn_buffer"])
         return True

@@ -14,6 +14,8 @@ import dataclasses
 import json
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.ft.anomaly import AnomalyDetector
 
 
@@ -87,6 +89,40 @@ class Telemetry:
             last.pruned += pruned
             last.merged += merged
             last.spawned += spawned
+
+    # -- checkpoint round-trip of the RUNNING counters (the bounded history
+    # -- is inspection-only and deliberately not persisted) ----------------
+
+    def export_counters(self):
+        # host-side numpy, 64-bit: an unbounded stream overflows int32 in
+        # hours at fleet rates, and the manager preserves numpy template
+        # leaves exactly (no jax no-x64 downcast)
+        out = {"total_points": np.asarray(self.total_points, np.int64),
+               "total_time_s": np.asarray(self.total_time_s, np.float64),
+               "total_chunks": np.asarray(self.total_chunks, np.int64),
+               "total_drift_alarms": np.asarray(self.total_drift_alarms,
+                                                np.int64)}
+        for k in self._COUNTERS:
+            out[k] = np.asarray(self.totals[k], np.int64)
+        return out
+
+    def load_counters(self, payload) -> None:
+        self.total_points = int(payload["total_points"])
+        self.total_time_s = float(payload["total_time_s"])
+        self.total_chunks = int(payload["total_chunks"])
+        self.total_drift_alarms = int(payload["total_drift_alarms"])
+        for k in self._COUNTERS:
+            self.totals[k] = int(payload[k])
+
+    @classmethod
+    def counters_template(cls):
+        out = {"total_points": np.zeros((), np.int64),
+               "total_time_s": np.zeros((), np.float64),
+               "total_chunks": np.zeros((), np.int64),
+               "total_drift_alarms": np.zeros((), np.int64)}
+        for k in cls._COUNTERS:
+            out[k] = np.zeros((), np.int64)
+        return out
 
     def summary(self) -> Dict[str, object]:
         last = self.history[-1] if self.history else None

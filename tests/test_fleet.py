@@ -1,0 +1,362 @@
+"""Fleet acceptance contract: (a) 2-replica fleet over a split stream,
+consolidated, matches single-stream figmn.fit held-out LL and conserves
+sum(sp); (b) snapshot scoring never blocks or mutates ingesting replicas;
+(c) fleet checkpoint/resume round-trips including drift state; plus router
+policies, topologies and the fleet benchmark."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import (FleetConfig, FleetCoordinator, RouterConfig,
+                         ShardRouter, sp_mass)
+from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
+
+
+def _stream(n=1200, d=4, modes=3, seed=0, spread=6.0, centers_seed=0):
+    """Points from a fixed mixture: centers_seed pins the distribution,
+    seed draws the points (held-out sets share centers_seed)."""
+    centers = np.random.default_rng(centers_seed).normal(0, spread,
+                                                         (modes, d))
+    rng = np.random.default_rng(seed + 1000)
+    x = centers[rng.integers(0, modes, n)] + rng.normal(0, 1.0, (n, d))
+    return x.astype(np.float32)
+
+
+def _cfg(x, **kw):
+    defaults = dict(kmax=16, dim=x.shape[1], beta=0.1, delta=1.0,
+                    vmin=1e9, spmin=0.0, update_mode="exact",
+                    sigma_ini=figmn.sigma_from_data(jnp.asarray(x), 1.0))
+    defaults.update(kw)
+    return FIGMNConfig(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# (a) equivalence + mass conservation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", ["star", "gossip"])
+def test_two_replica_fleet_matches_single_stream(topology):
+    """The tentpole contract: a 2-replica fleet over a split stream,
+    consolidated at the end, matches one figmn.fit pass on held-out mean
+    log-likelihood within tolerance, and the consolidated mixture's active
+    sp is exactly the replicas' (mass conservation)."""
+    x = _stream(seed=0)
+    held = _stream(n=400, seed=9)
+    cfg = _cfg(x)
+    fleet = FleetCoordinator(
+        cfg, FleetConfig(n_replicas=2, router="round_robin",
+                         topology=topology, consolidate_every=0,
+                         global_kmax=2 * cfg.kmax),
+        RuntimeConfig(chunk=64))
+    fleet.ingest(x)
+    snap = fleet.consolidate()
+
+    # -- mass: the global active-sp multiset IS the replicas' (exact) ----
+    def active_sp(state):
+        sp = np.asarray(state.sp, np.float64)
+        return np.sort(sp[np.asarray(state.active)])
+    np.testing.assert_array_equal(
+        active_sp(snap),
+        np.sort(np.concatenate([active_sp(r.state)
+                                for r in fleet.replicas])))
+    # every accepted point contributes posterior mass 1 ⇒ sum(sp) == N
+    assert abs(sp_mass(snap) - x.shape[0]) < 1e-2
+
+    # -- fidelity: held-out mean LL within tolerance of one-shot fit -----
+    ref = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    ll_ref = float(jnp.mean(figmn.score_batch(cfg, ref,
+                                              jnp.asarray(held))))
+    ll_fleet = float(jnp.mean(fleet.score(held)))
+    fleet.close()
+    assert np.isfinite(ll_fleet)
+    assert abs(ll_fleet - ll_ref) < 0.5, (ll_fleet, ll_ref)
+
+
+def test_consolidation_conserves_mass_under_budget_merging():
+    """When the union exceeds global_kmax, budget enforcement must merge
+    (moment-match) rather than truncate: sum(sp) conserved to float
+    tolerance, pool at most global_kmax."""
+    x = _stream(n=900, modes=6)
+    cfg = _cfg(x)
+    fleet = FleetCoordinator(
+        cfg, FleetConfig(n_replicas=3, consolidate_every=0, global_kmax=4),
+        RuntimeConfig(chunk=64))
+    fleet.ingest(x)
+    snap = fleet.consolidate()
+    replica_mass = sum(sp_mass(r.state) for r in fleet.replicas)
+    ev = fleet.telemetry.events[-1]
+    fleet.close()
+    assert int(snap.n_active) <= 4
+    assert ev.merges > 0                      # merging actually happened
+    np.testing.assert_allclose(sp_mass(snap), replica_mass, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (b) serving-path scoring: non-blocking, non-mutating
+# ---------------------------------------------------------------------------
+
+def test_scoring_reads_snapshot_not_live_replicas():
+    """Scores come from the published snapshot: further ingestion must not
+    change them until the next consolidation, and scoring must not mutate
+    replica state."""
+    x = _stream(seed=1)
+    cfg = _cfg(x)
+    fleet = FleetCoordinator(
+        cfg, FleetConfig(n_replicas=2, consolidate_every=1),
+        RuntimeConfig(chunk=64))
+    fleet.ingest(x[:600])
+    held = x[-100:]
+    s1 = np.asarray(fleet.score(held))
+    v1 = fleet.scoring.version
+
+    before = [np.asarray(r.state.lam).copy() for r in fleet.replicas]
+    for _ in range(3):
+        fleet.score(held)
+        fleet.score_async(held).result()
+    for lam0, r in zip(before, fleet.replicas):
+        np.testing.assert_array_equal(lam0, np.asarray(r.state.lam))
+
+    # ingest more WITHOUT consolidating: snapshot (and scores) unchanged
+    import dataclasses
+    fleet.fcfg = dataclasses.replace(fleet.fcfg, consolidate_every=0)
+    fleet.ingest(x[600:])
+    assert fleet.scoring.version == v1
+    np.testing.assert_array_equal(s1, np.asarray(fleet.score(held)))
+    # after consolidation the snapshot advances and reflects the new data
+    fleet.consolidate()
+    assert fleet.scoring.version == v1 + 1
+    fleet.close()
+
+
+def test_async_scoring_overlaps_ingestion():
+    """score_async futures issued before/during ingestion resolve to the
+    same values as synchronous reads of the same snapshot version."""
+    x = _stream(seed=2)
+    cfg = _cfg(x)
+    fleet = FleetCoordinator(
+        cfg, FleetConfig(n_replicas=2, consolidate_every=0),
+        RuntimeConfig(chunk=64))
+    fleet.ingest(x[:400])
+    fleet.consolidate()
+    held = x[-80:]
+    expected = np.asarray(fleet.score(held))
+    futures = [fleet.score_async(held) for _ in range(4)]
+    fleet.ingest(x[400:800])          # replicas advance; snapshot must not
+    for f in futures:
+        np.testing.assert_array_equal(expected, np.asarray(f.result()))
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# (c) checkpoint / resume (incl. drift state)
+# ---------------------------------------------------------------------------
+
+def test_fleet_checkpoint_resume_roundtrip_with_drift(tmp_path):
+    x = _stream(seed=3)
+    cfg = _cfg(x, vmin=10.0, spmin=2.0)
+    def build():
+        return FleetCoordinator(
+            cfg,
+            FleetConfig(n_replicas=2, consolidate_every=1,
+                        checkpoint_dir=str(tmp_path)),
+            RuntimeConfig(chunk=50,
+                          lifecycle=LifecycleConfig(k_budget=8, every=4),
+                          drift=DriftConfig(window=6, threshold=6.0,
+                                            min_chunks=3)))
+    fleet = build()
+    fleet.ingest(x)
+    fleet.checkpoint()
+
+    fresh = build()
+    assert fresh.resume()
+    assert fresh.rounds == fleet.rounds
+    assert fresh.router.export_state() == fleet.router.export_state()
+    assert fresh.scoring.version == fleet.scoring.version
+    for a, b in zip(fleet.replicas, fresh.replicas):
+        assert b.chunk_idx == a.chunk_idx
+        np.testing.assert_array_equal(np.asarray(a.state.lam),
+                                      np.asarray(b.state.lam))
+        # drift state survives: CUSUM score, reference window, alarm count
+        assert b.detector._g == a.detector._g
+        assert b.detector._ref == a.detector._ref
+        assert b.detector._ref_nov == a.detector._ref_nov
+        assert b.detector.alarms == a.detector.alarms
+        # telemetry running counters survive
+        assert (b.telemetry.export_counters().keys()
+                == a.telemetry.export_counters().keys())
+        for k, v in a.telemetry.export_counters().items():
+            assert int(b.telemetry.export_counters()[k]) == int(v), k
+
+    # both fleets continue identically (same routing, same drift baseline)
+    more = _stream(n=300, seed=4)
+    fleet.ingest(more)
+    fresh.ingest(more)
+    for a, b in zip(fleet.replicas, fresh.replicas):
+        np.testing.assert_array_equal(np.asarray(a.state.lam),
+                                      np.asarray(b.state.lam))
+    fleet.close()
+    fresh.close()
+
+
+def test_fleet_resume_restores_manifest_cut_not_latest(tmp_path):
+    """Replicas auto-checkpoint on every ingest; after a crash the latest
+    replica steps can be NEWER than the last fleet manifest.  resume()
+    must restore the manifest's pinned cut so re-fed data is not
+    double-learned against a stale router clock."""
+    x = _stream(seed=6)
+    cfg = _cfg(x)
+    def build():
+        return FleetCoordinator(
+            cfg, FleetConfig(n_replicas=2, consolidate_every=1,
+                             checkpoint_dir=str(tmp_path)),
+            RuntimeConfig(chunk=50))
+    fleet = build()
+    fleet.ingest(x[:600])
+    fleet.checkpoint()
+    at_manifest = [(r.chunk_idx, np.asarray(r.state.lam).copy())
+                   for r in fleet.replicas]
+    version_at_manifest = fleet.scoring.version
+    fleet.ingest(x[600:])            # replicas save newer checkpoints
+    fresh = build()
+    assert fresh.resume()
+    for (idx, lam), r in zip(at_manifest, fresh.replicas):
+        assert r.chunk_idx == idx
+        np.testing.assert_array_equal(lam, np.asarray(r.state.lam))
+    # resumed fleet reports its serving snapshot, not version 0
+    s = fresh.summary()
+    assert s["snapshot_version"] == version_at_manifest
+    assert s["global_active_k"] > 0
+    fleet.close()
+    fresh.close()
+
+
+def test_router_affinity_small_first_batch_does_not_starve():
+    """A first batch smaller than n_replicas must not seed duplicate
+    centroids (which would starve replicas forever): it falls back to
+    round-robin until a big-enough batch arrives."""
+    rng = np.random.default_rng(8)
+    r = ShardRouter(RouterConfig(policy="affinity"), 4)
+    tiny = rng.normal(0, 1, (2, 3)).astype(np.float32)
+    shards = r.route(tiny)
+    assert sum(len(s) for s in shards) == 2
+    assert r._centroids is None            # deferred, not duplicated
+    big = rng.normal(0, 5, (64, 3)).astype(np.float32)
+    r.route(big)
+    assert r._centroids is not None
+    # no coincident centroids even on degenerate data
+    same = np.zeros((8, 3), np.float32)
+    r2 = ShardRouter(RouterConfig(policy="affinity"), 4)
+    r2.route(same)
+    c = r2._centroids
+    assert len({tuple(row) for row in c}) == 4
+
+
+def test_fleet_resume_raises_when_manifest_cut_gcd(tmp_path):
+    """If replica auto-checkpoint GC (keep_n) deleted the manifest's
+    pinned steps, resume must fail loudly BEFORE touching any replica —
+    never a silent False or a half-restored fleet."""
+    x = _stream(seed=7)
+    cfg = _cfg(x)
+    def build(keep_n):
+        return FleetCoordinator(
+            cfg, FleetConfig(n_replicas=2, consolidate_every=0,
+                             checkpoint_dir=str(tmp_path)),
+            RuntimeConfig(chunk=50, keep_n=keep_n))
+    fleet = build(keep_n=2)
+    fleet.ingest(x[:300])
+    fleet.checkpoint()
+    for lo in range(300, 600, 100):   # 3 more rounds ⇒ pinned step GC'd
+        fleet.ingest(x[lo:lo + 100])
+    fresh = build(keep_n=2)
+    before = [np.asarray(r.state.lam).copy() for r in fresh.replicas]
+    with pytest.raises(RuntimeError, match="GC'd by keep_n"):
+        fresh.resume()
+    for lam0, r in zip(before, fresh.replicas):   # untouched by the fail
+        np.testing.assert_array_equal(lam0, np.asarray(r.state.lam))
+    fleet.close()
+    fresh.close()
+
+
+def test_fleet_resume_on_empty_dir_returns_false(tmp_path):
+    x = _stream(n=100)
+    fleet = FleetCoordinator(
+        _cfg(x), FleetConfig(n_replicas=2,
+                             checkpoint_dir=str(tmp_path / "empty")))
+    os.makedirs(str(tmp_path / "empty"), exist_ok=True)
+    assert not fleet.resume()
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# router policies
+# ---------------------------------------------------------------------------
+
+def test_router_round_robin_balances_and_resumes():
+    r = ShardRouter(RouterConfig(policy="round_robin"), 3)
+    x = _stream(n=100, seed=5)
+    shards = r.route(x[:50]) + r.route(x[50:])
+    counts = r.load()
+    assert sum(counts.values()) == 100
+    assert max(counts.values()) - min(counts.values()) <= 1
+    # the second call continues the interleave where the first stopped
+    all_idx = np.sort(np.concatenate([s for s in shards[:3]]))
+    np.testing.assert_array_equal(all_idx, np.arange(50))
+
+
+def test_router_hash_is_content_deterministic():
+    x = _stream(n=64, seed=6)
+    r1 = ShardRouter(RouterConfig(policy="hash", seed=1), 4)
+    r2 = ShardRouter(RouterConfig(policy="hash", seed=1), 4)
+    s1 = r1.route(x)
+    s2 = r2.route(x[::-1].copy())     # same points, reversed arrival
+    # membership is content-addressed: each point lands identically
+    a1 = np.concatenate([np.full(len(s), i) for i, s in enumerate(s1)])
+    assign1 = np.empty(64, int)
+    assign1[np.concatenate(s1)] = a1
+    a2 = np.concatenate([np.full(len(s), i) for i, s in enumerate(s2)])
+    assign2 = np.empty(64, int)
+    assign2[np.concatenate(s2)] = a2
+    np.testing.assert_array_equal(assign1, assign2[::-1])
+    # a different salt reshuffles
+    r3 = ShardRouter(RouterConfig(policy="hash", seed=2), 4)
+    s3 = r3.route(x)
+    assert any(not np.array_equal(a, b) for a, b in zip(s1, s3))
+
+
+def test_router_affinity_separates_clusters():
+    """Well-separated clusters should each land (almost) wholly on one
+    replica — the component-partitioning property."""
+    rng = np.random.default_rng(7)
+    c = np.array([[-30.0, 0.0], [30.0, 0.0]])
+    lab = rng.integers(0, 2, 400)
+    x = (c[lab] + rng.normal(0, 1.0, (400, 2))).astype(np.float32)
+    r = ShardRouter(RouterConfig(policy="affinity"), 2)
+    shards = r.route(x)
+    for s in shards:
+        if not len(s):
+            continue
+        purity = max((lab[s] == v).mean() for v in (0, 1))
+        assert purity > 0.95
+
+
+# ---------------------------------------------------------------------------
+# benchmark artifact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_benchmark_writes_artifact(tmp_path):
+    """benchmarks/figmn_fleet.py emits BENCH_fleet.json with points/sec
+    for ≥2 replica counts and the LL-gap fidelity column."""
+    import json
+    from benchmarks import figmn_fleet
+    out = os.path.join(str(tmp_path), "BENCH_fleet.json")
+    rows = figmn_fleet.run(out_path=out, quick=True)
+    assert os.path.exists(out)
+    data = json.load(open(out))
+    assert len({r["replicas"] for r in rows}) >= 2
+    assert all(r["points_per_s"] > 0 for r in rows)
+    assert all(np.isfinite(r["ll_gap"]) for r in data["rows"])

@@ -138,6 +138,54 @@ def test_checkpoint_resume_roundtrip(tmp_path):
                                np.asarray(rt.state.lam), atol=0)
 
 
+def test_checkpoint_persists_spawn_buffer_and_counters(tmp_path):
+    """A mid-stream checkpoint carries the pending gate-failure buffer and
+    the running telemetry counters, so a resumed runtime's next lifecycle
+    pass spawns the same components and its summary doesn't reset."""
+    x = _blob_stream(seed=1, n_per=40, d=8)
+    cfg = _cfg(x, kmax=8, beta=0.05, vmin=1e9, spmin=0.0,
+               update_mode="exact")
+    rc = RuntimeConfig(chunk=30, path="vmem",
+                       lifecycle=LifecycleConfig(k_budget=8, every=1000,
+                                                 spawn_max=0),
+                       checkpoint_dir=str(tmp_path))
+    rt = StreamRuntime(cfg, rc)
+    rt.ingest(x)                      # vmem path buffers gate failures
+    assert len(rt.buffer) > 0
+    fresh = StreamRuntime(cfg, rc)
+    assert fresh.resume()
+    np.testing.assert_array_equal(rt.buffer.drain(), fresh.buffer.drain())
+    assert fresh.telemetry.total_points == rt.telemetry.total_points
+    assert fresh.telemetry.total_chunks == rt.telemetry.total_chunks
+
+
+def test_resume_migrates_legacy_payload(tmp_path):
+    """Checkpoints written by the pre-fleet payload format (figmn +
+    chunk_idx only) must still resume: new sections start fresh instead of
+    KeyError-ing on the recovery path."""
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointManager
+    from repro.stream import DriftConfig
+
+    x = _blob_stream(seed=4)
+    cfg = _cfg(x)
+    ref = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    legacy_mgr = CheckpointManager(str(tmp_path))
+    legacy_mgr.save(
+        7, {"figmn": ref,
+            "runtime": {"chunk_idx": jnp.asarray(7, jnp.int32)}})
+    legacy_mgr.wait()
+    rt = StreamRuntime(cfg, RuntimeConfig(
+        chunk=64, checkpoint_dir=str(tmp_path),
+        drift=DriftConfig(window=6)))
+    assert rt.resume()
+    assert rt.chunk_idx == 7
+    np.testing.assert_array_equal(np.asarray(rt.state.lam),
+                                  np.asarray(ref.lam))
+    assert rt.detector._ref == [] and rt.detector._g == 0.0
+    assert rt.telemetry.total_points == 0
+
+
 def test_select_path_heuristic():
     x = _blob_stream()
     small = _cfg(x, kmax=8, update_mode="exact")
