@@ -1,0 +1,199 @@
+"""Autoscaled fleet vs fixed fleet under ramp load → BENCH_autoscale.json.
+
+The scenario the autoscaler exists for: traffic that GROWS — each phase
+delivers more points than the last AND introduces new feature-space modes
+(so the component budget saturates and the affinity router skews).  Two
+fleets ingest the identical stream:
+
+  fixed       — 1 replica, membership never changes (the PR-2 deployment).
+  autoscaled  — starts at 1 replica, FleetConfig.autoscale lets the
+                telemetry-driven policy grow it (splitting the hottest
+                replica's pool by responsibility-weighted bisection) up to
+                ``MAX_REPLICAS``.
+
+Per phase we record the autoscaled fleet's membership and throughput —
+the replicas-over-time curve — plus, at the end, both fleets' wall-clock
+points/sec, summed per-replica rates (what concurrent hosts would
+deliver), held-out mean log-likelihood, and the scale-event log with its
+conservation witnesses (sp_mass_before/after per event).
+
+The committed smoke baseline (benchmarks/baselines/) gates CI: a >2×
+throughput regression of the autoscaled smoke run fails the build
+(``--check``).
+
+Run:    PYTHONPATH=src python -m benchmarks.figmn_autoscale [--smoke]
+Gate:   PYTHONPATH=src python -m benchmarks.figmn_autoscale \
+            --check BENCH_autoscale.json \
+            --baseline benchmarks/baselines/BENCH_autoscale_smoke.json
+(or via ``python -m benchmarks.run figmn_autoscale [--smoke]``)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
+from repro.stream import LifecycleConfig, RuntimeConfig
+
+D, KMAX, K_BUDGET = 8, 12, 8
+MODES = 6
+MAX_REPLICAS = 4
+PHASES = 6
+RAMP_BASE = 512          # phase p delivers RAMP_BASE * (p + 1) points
+SMOKE_PHASES = 4
+SMOKE_RAMP_BASE = 96
+N_HELD = 384
+
+
+def _ramp_stream(phases: int, base: int, seed: int = 0
+                 ) -> Tuple[List[np.ndarray], np.ndarray]:
+    """Returns (phases, held): phase p delivers base*(p+1) points from
+    modes 0..min(p+1, MODES)-1 — load AND structural complexity both
+    ramp.  ``held`` is drawn from the SAME centers (full final mixture),
+    so the reported log-likelihoods measure fidelity on the learned
+    distribution, not on unrelated random clusters."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6.0, (MODES, D))
+    out = []
+    for p in range(phases):
+        n = base * (p + 1)
+        live = centers[:min(p + 2, MODES)]
+        x = live[rng.integers(0, live.shape[0], n)] \
+            + rng.normal(0, 1.0, (n, D))
+        out.append(x.astype(np.float32))
+    live = centers[:min(phases + 1, MODES)]
+    held = (live[rng.integers(0, live.shape[0], N_HELD)]
+            + rng.normal(0, 1.0, (N_HELD, D))).astype(np.float32)
+    return out, held
+
+
+def _build(cfg: FIGMNConfig, autoscaled: bool, chunk: int
+           ) -> FleetCoordinator:
+    auto = AutoscaleConfig(min_replicas=1, max_replicas=MAX_REPLICAS,
+                           up_skew=1.5, up_pressure=0.99, up_drift=0.2,
+                           down_share=0.1, cooldown=1) if autoscaled \
+        else None
+    return FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=1, router="affinity", consolidate_every=1,
+                    global_kmax=KMAX, autoscale=auto),
+        RuntimeConfig(chunk=chunk,
+                      lifecycle=LifecycleConfig(k_budget=K_BUDGET,
+                                                every=4)))
+
+
+def _drive(fleet: FleetCoordinator, phases: List[np.ndarray]
+           ) -> List[Dict]:
+    rows = []
+    for p, x in enumerate(phases):
+        t0 = time.perf_counter()
+        summary = fleet.ingest(x)
+        dt = time.perf_counter() - t0
+        rows.append({"phase": p, "points": int(x.shape[0]),
+                     "replicas": fleet.n_replicas,
+                     "points_per_s": x.shape[0] / dt,
+                     "global_active_k": int(summary["global_active_k"])})
+    return rows
+
+
+def run(out_path: str = "BENCH_autoscale.json", quick: bool = False
+        ) -> Dict:
+    phases, held = _ramp_stream(SMOKE_PHASES if quick else PHASES,
+                                SMOKE_RAMP_BASE if quick else RAMP_BASE)
+    chunk = 48 if quick else 128
+    all_x = np.concatenate(phases)
+    cfg = FIGMNConfig(kmax=KMAX, dim=D, beta=0.1, delta=1.0, vmin=50.0,
+                      spmin=1.0, update_mode="exact",
+                      sigma_ini=figmn.sigma_from_data(
+                          jnp.asarray(all_x), 1.0))
+
+    results = {}
+    for name, autoscaled in (("fixed", False), ("autoscaled", True)):
+        warm = _build(cfg, autoscaled, chunk)    # compile all chunk shapes
+        _drive(warm, phases)
+        warm.close()
+        fleet = _build(cfg, autoscaled, chunk)
+        t0 = time.perf_counter()
+        phase_rows = _drive(fleet, phases)
+        wall = time.perf_counter() - t0
+        ll = float(jnp.mean(fleet.score(held)))
+        summary = fleet.summary()
+        events = [dataclasses.asdict(e)
+                  for e in fleet.telemetry.scale_events]
+        results[name] = {
+            "points_per_s": all_x.shape[0] / wall,
+            "rate_sum": summary["points_per_s"],
+            "wall_s": wall,
+            "ll_held": ll,
+            "replicas_final": fleet.n_replicas,
+            "scale_ups": summary["scale_ups"],
+            "scale_downs": summary["scale_downs"],
+            "phases": phase_rows,
+            "scale_events": events,
+        }
+        fleet.close()
+        curve = " -> ".join(str(r["replicas"]) for r in phase_rows)
+        print(f"{name:10s}: {results[name]['points_per_s']:9.0f} pts/s "
+              f"wall ({results[name]['rate_sum']:9.0f} summed), "
+              f"ll={ll:+.3f}, replicas/phase {curve}")
+
+    doc = {"benchmark": "figmn_autoscale",
+           "backend": jax.default_backend(),
+           "smoke": quick,
+           "n_points": int(all_x.shape[0]),
+           "ll_gap": results["autoscaled"]["ll_held"]
+           - results["fixed"]["ll_held"],
+           **results}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {out_path} "
+          f"(autoscaled {results['autoscaled']['scale_ups']} ups / "
+          f"{results['autoscaled']['scale_downs']} downs, "
+          f"ll_gap={doc['ll_gap']:+.3f})")
+    return doc
+
+
+def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
+    """CI gate: fail when autoscaled smoke throughput fell more than
+    ``factor``× below the committed baseline."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    got = float(bench["autoscaled"]["points_per_s"])
+    ref = float(base["autoscaled"]["points_per_s"])
+    floor = ref / factor
+    ok = got >= floor
+    verdict = "OK" if ok else "REGRESSION"
+    print(f"autoscale smoke throughput: {got:.0f} pts/s vs committed "
+          f"baseline {ref:.0f} (floor {floor:.0f}) — {verdict}")
+    return ok
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="gate mode: compare BENCH_JSON against --baseline "
+                         "instead of running the benchmark")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/"
+                            "BENCH_autoscale_smoke.json")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(0 if check(args.check, args.baseline) else 1)
+    main(smoke=args.smoke)

@@ -9,6 +9,10 @@ CSV convention: ``name,us_per_call,derived``.
                     sweeps → BENCH_stream.json
   figmn_fleet     — multi-replica fleet: replicas × chunk throughput and
                     merged-vs-single-stream LL gap → BENCH_fleet.json
+  figmn_autoscale — autoscaled vs fixed fleet under ramp load:
+                    replicas-over-time, throughput, conservation-witnessed
+                    scale events → BENCH_autoscale.json (CI-gated against
+                    benchmarks/baselines/)
   lm_bench        — reduced-config LM substrate step times
   roofline        — §Roofline terms per (arch × shape) from the dry-run
                     artifacts (run repro.launch.dryrun --all first)
@@ -30,7 +34,8 @@ import traceback
 #: every registered benchmark module under benchmarks/; each exposes
 #: ``main(smoke: bool = False)`` where smoke runs a tiny-size subset.
 REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
-            "figmn_runtime", "figmn_fleet", "lm_bench", "roofline")
+            "figmn_runtime", "figmn_fleet", "figmn_autoscale", "lm_bench",
+            "roofline")
 
 
 def _section(name: str, smoke: bool) -> bool:

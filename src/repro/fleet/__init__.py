@@ -3,29 +3,44 @@
 PR 1 (repro.stream) made one unbounded stream production-grade; this
 package scales it OUT: N StreamRuntime replicas — one per data shard —
 behind a single coordinator, periodically consolidated into one global
-mixture that serves reads without ever blocking ingestion.
+mixture that serves reads without ever blocking ingestion, with the
+replica count itself tracking traffic via telemetry-driven autoscaling.
 
-  router.py       hash / round-robin / feature-affinity shard routing
+  router.py       hash-ring / round-robin / feature-affinity shard routing
+                  (membership-change remaps are stable: consistent hashing
+                  + centroid handoff)
   consolidate.py  exact cross-replica merge (star / gossip topologies,
                   sum(sp)-conserving budget enforcement via core.merge)
+  autoscale.py    telemetry-driven scale policy + mass-conserving pool
+                  bisection (scale-up) / drain (scale-down) mechanisms
   scoring.py      async serving front-end over a read-only snapshot
-  telemetry.py    fleet-level aggregation + consolidation history
-  coordinator.py  FleetCoordinator (routing, merge clock, checkpointing)
+  telemetry.py    fleet-level aggregation + consolidation/scale event log
+                  (immutable atomic-swap snapshots, reader-safe)
+  coordinator.py  FleetCoordinator (routing, merge clock, scale events,
+                  epoch-pinned whole-cut checkpointing)
 
 Design lineage: the replica+merge structure follows Pinto & Engel 2017
 ("Scalable and Incremental Learning of Gaussian Mixture Models" — the
 union of sp-weighted replica mixtures is the mixture of the combined
 stream), and the affinity-routed component partitioning follows the
-sublinear-GMM direction (Salwig et al. 2025) — see PAPERS.md.
+sublinear-GMM direction (Salwig et al. 2025) — see PAPERS.md.  Both argue
+that model capacity (components there, replicas here) must track data
+complexity rather than be fixed up front — which is what autoscale.py
+delivers.
 """
-from repro.fleet.consolidate import consolidate, merge_down, sp_mass
+from repro.fleet.autoscale import (Autoscaler, AutoscaleConfig,
+                                   ReplicaSignal, ScaleDecision,
+                                   split_state)
+from repro.fleet.consolidate import consolidate, drain, merge_down, sp_mass
 from repro.fleet.coordinator import FleetConfig, FleetCoordinator
 from repro.fleet.router import RouterConfig, ShardRouter
 from repro.fleet.scoring import ScoringFrontend
-from repro.fleet.telemetry import ConsolidationEvent, FleetTelemetry
+from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
+                                   ScaleEvent)
 
 __all__ = [
-    "ConsolidationEvent", "FleetConfig", "FleetCoordinator",
-    "FleetTelemetry", "RouterConfig", "ScoringFrontend", "ShardRouter",
-    "consolidate", "merge_down", "sp_mass",
+    "Autoscaler", "AutoscaleConfig", "ConsolidationEvent", "FleetConfig",
+    "FleetCoordinator", "FleetTelemetry", "ReplicaSignal", "RouterConfig",
+    "ScaleDecision", "ScaleEvent", "ScoringFrontend", "ShardRouter",
+    "consolidate", "drain", "merge_down", "split_state", "sp_mass",
 ]

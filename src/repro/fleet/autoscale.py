@@ -1,0 +1,291 @@
+"""Telemetry-driven replica autoscaling with mass-conserving scale events.
+
+ROADMAP's "what's next" after the fleet PR: the O(NKD²) learner only pays
+off at production scale if the replica count tracks the traffic, not a
+config constant (Pinto & Engel 2017 make the same argument for component
+counts; the sublinear-GMM line extends it to pool partitioning).  This
+module is the POLICY half of that loop; `FleetCoordinator` is the
+mechanism half.  The contract between them:
+
+  * the `Autoscaler` consumes exactly what `FleetTelemetry` already
+    aggregates — router load skew, per-replica throughput, drift-alarm
+    rate, component-budget pressure — as *deltas since the previous
+    decision* (cumulative counters would let week-old history outvote the
+    last five minutes), and emits a `ScaleDecision`;
+  * the coordinator executes decisions only at consolidation boundaries
+    (replica pools are pruned, merged-to-budget and just consolidated, so
+    a membership change is a clean cut for checkpoints and the serving
+    snapshot);
+  * every scale event is mass-conserving:
+
+      scale-up    `split_state` partitions the hottest replica's pool by
+                  responsibility-weighted bisection (principal axis of the
+                  sp-weighted component scatter; the cut equalises sp mass,
+                  i.e. responsibility, not slot counts).  Slots MOVE —
+                  bit-identical sp values land in a fresh pool — so the
+                  active-sp multiset, and hence ``sum(sp)``, is conserved
+                  EXACTLY (the same lossless semantics as
+                  ``core.merge.union``).
+      scale-down  the coldest replica drains into a peer through
+                  ``fleet.consolidate`` (union + ``merge_to_budget``):
+                  moment-matched merging, never truncation, so mass is
+                  conserved to float rounding of the pair merges (exactly,
+                  when the union fits the peer's budget).
+
+Decisions are pure functions of (config, observed deltas): the same stream
+through the same fleet yields the same decision sequence — the property the
+conformance suite (tests/test_autoscale.py) pins down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig, FIGMNState
+
+ACTIONS = ("hold", "up", "down")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleConfig:
+    """Policy knobs.  All rate thresholds apply to deltas between
+    consecutive decisions (one decision per consolidation boundary).
+
+    min_replicas/max_replicas: hard membership bounds.
+    up_skew:     scale up when hottest/mean routed-load ratio ≥ this
+                 (router imbalance the hash/affinity policies cannot fix
+                 without more shards).
+    up_pressure: scale up when some replica ends its lifecycle pass at
+                 active_k/k_budget ≥ this (the pool is saturated: every
+                 pass is moment-matching real structure away).
+    up_drift:    scale up when fleet drift alarms per ingested chunk ≥
+                 this (a regime change needs modelling capacity NOW).
+    down_share:  scale down when the coldest replica's share of routed
+                 points, normalised by 1/n, ≤ this (it is idle; its pool
+                 can live in a peer).
+    cooldown:    decisions to skip after any scale event (let the router
+                 deltas re-baseline before judging the new membership).
+    """
+    min_replicas: int = 1
+    max_replicas: int = 8
+    up_skew: float = 2.0
+    up_pressure: float = 0.99
+    up_drift: float = 0.2
+    down_share: float = 0.35
+    cooldown: int = 2
+
+    def __post_init__(self):
+        if not 1 <= self.min_replicas <= self.max_replicas:
+            raise ValueError("need 1 <= min_replicas <= max_replicas")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSignal:
+    """One replica's slice of the fleet telemetry, by stable replica id."""
+    rid: int                 # stable replica id (checkpoint-dir identity)
+    routed: int              # cumulative points routed to this replica
+    chunks: int              # cumulative chunks ingested
+    drift_alarms: int        # cumulative drift alarms
+    active_k: int            # live components after the last lifecycle pass
+    budget: int              # lifecycle k_budget (or cfg.kmax)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    action: str = "hold"     # "hold" | "up" | "down"
+    rid: int = -1            # up: replica to split;  down: replica to drain
+    peer: int = -1           # down only: replica that absorbs the pool
+    reason: str = ""
+
+
+class Autoscaler:
+    """Thresholds + hysteresis over FleetTelemetry deltas.
+
+    Deterministic and checkpointable: the only state is the per-replica
+    counter baseline of the previous decision and the cooldown clock, both
+    round-tripped through the fleet manifest so a resumed fleet continues
+    the exact decision sequence.
+    """
+
+    def __init__(self, cfg: AutoscaleConfig = AutoscaleConfig()):
+        self.cfg = cfg
+        self._last: Dict[int, Tuple[int, int, int]] = {}  # rid -> (routed,
+        self._cooldown = 0                                #  chunks, alarms)
+        self.decisions = 0
+
+    # ------------------------------------------------------------------
+
+    def observe(self, signals: Sequence[ReplicaSignal]) -> ScaleDecision:
+        """One decision from the current cumulative telemetry.
+
+        Deltas are taken against the previous ``observe`` call (a replica
+        id never seen before baselines at zero — correct for a replica
+        spawned since the last decision, whose counters started at zero).
+        """
+        c = self.cfg
+        self.decisions += 1
+        deltas = []
+        for s in signals:
+            base = self._last.get(s.rid, (0, 0, 0))
+            deltas.append((max(s.routed - base[0], 0),
+                           max(s.chunks - base[1], 0),
+                           max(s.drift_alarms - base[2], 0)))
+        self._last = {s.rid: (s.routed, s.chunks, s.drift_alarms)
+                      for s in signals}
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return ScaleDecision(reason="cooldown")
+
+        n = len(signals)
+        routed = np.asarray([d[0] for d in deltas], np.float64)
+        total = float(routed.sum())
+        if total <= 0:
+            return ScaleDecision(reason="idle")
+        chunks = sum(d[1] for d in deltas)
+        alarms = sum(d[2] for d in deltas)
+        skew = float(routed.max()) * n / total
+        drift_rate = alarms / max(chunks, 1)
+        pressure = np.asarray(
+            [s.active_k / max(s.budget, 1) for s in signals], np.float64)
+
+        # -- scale UP: split the hottest replica -----------------------
+        if n < c.max_replicas:
+            # hottest by routed delta; ties resolve to the lowest
+            # position (np.argmax) — deterministic
+            hot = int(np.argmax(routed))
+            reason = None
+            if skew >= c.up_skew:
+                reason = f"load skew {skew:.2f} >= {c.up_skew}"
+            elif float(pressure.max()) >= c.up_pressure:
+                hot = int(np.argmax(pressure))
+                reason = (f"budget pressure {float(pressure.max()):.2f}"
+                          f" >= {c.up_pressure}")
+            elif drift_rate >= c.up_drift:
+                reason = f"drift rate {drift_rate:.2f} >= {c.up_drift}"
+            if reason is not None and signals[hot].active_k >= 2:
+                self._cooldown = c.cooldown
+                return ScaleDecision("up", rid=signals[hot].rid,
+                                     reason=reason)
+
+        # -- scale DOWN: drain the coldest replica into the next-coldest
+        if n > c.min_replicas and alarms == 0:
+            order = np.argsort(routed, kind="stable")
+            cold = int(order[0])
+            share = float(routed[cold]) * n / total
+            if share <= c.down_share:
+                peer = int(order[1])
+                self._cooldown = c.cooldown
+                return ScaleDecision(
+                    "down", rid=signals[cold].rid, peer=signals[peer].rid,
+                    reason=f"cold share {share:.2f} <= {c.down_share}")
+        return ScaleDecision(reason="in band")
+
+    def rebaseline(self, signals: Sequence[ReplicaSignal]) -> None:
+        """Reset the delta baseline to the current counters WITHOUT making
+        a decision.  The coordinator calls this right after executing a
+        scale event: scale-down folds the retired replica's lifetime
+        routed count into its peer (load telemetry must stay exact), and
+        without a rebaseline the next delta would read that folded history
+        as a sudden traffic spike on the peer and flap straight back into
+        a scale-up (cooldown=0 is legal, so hysteresis alone cannot be
+        relied on to absorb it)."""
+        self._last = {s.rid: (s.routed, s.chunks, s.drift_alarms)
+                      for s in signals}
+
+    # -- checkpoint round-trip (JSON-safe: lives in the fleet manifest) --
+
+    def export_state(self) -> Dict[str, object]:
+        return {"cooldown": self._cooldown,
+                "decisions": self.decisions,
+                "last": {str(rid): list(v)
+                         for rid, v in self._last.items()}}
+
+    def load_state(self, payload: Dict[str, object]) -> None:
+        self._cooldown = int(payload["cooldown"])
+        self.decisions = int(payload["decisions"])
+        self._last = {int(rid): tuple(int(x) for x in v)
+                      for rid, v in payload["last"].items()}
+
+
+# ---------------------------------------------------------------------------
+# Scale-up mechanism: responsibility-weighted pool bisection
+# ---------------------------------------------------------------------------
+
+def split_state(cfg: FIGMNConfig, state: FIGMNState
+                ) -> Optional[Tuple[FIGMNState, FIGMNState, np.ndarray]]:
+    """Partition one replica pool into (kept, spun-out) pools.
+
+    The cut: project active components onto the principal axis of their
+    sp-weighted scatter and sweep the sorted order for the point that best
+    bisects the TOTAL sp mass (responsibility), so both halves carry
+    comparable posterior weight even when slot counts are lopsided.  Slots
+    are MOVED, never recomputed: every surviving (mu, lam, logdet, sp, v)
+    tuple is bit-identical to the parent's, which is what makes the
+    active-sp multiset — and sum(sp) — conserved exactly.
+
+    Returns (kept_state, child_state, child_centroid) or None when the
+    pool has fewer than two live components (nothing to bisect).  The
+    centroid (sp-weighted mean of the spun-out components, float64) is the
+    router's affinity handoff for the new replica.
+    """
+    active = np.asarray(state.active)
+    slots = np.flatnonzero(active)
+    if slots.size < 2:
+        return None
+    mu = np.asarray(state.mu, np.float64)[slots]
+    sp = np.asarray(state.sp, np.float64)[slots]
+    w = sp / sp.sum()
+    center = (w[:, None] * mu).sum(0)
+    dev = mu - center
+    scatter = (w[:, None] * dev).T @ dev                    # (D, D), host
+    _, vecs = np.linalg.eigh(scatter)
+    proj = dev @ vecs[:, -1]                                # principal axis
+    if np.allclose(proj, 0.0):
+        proj = np.arange(slots.size, dtype=np.float64)      # degenerate pool
+    order = np.argsort(proj, kind="stable")
+    cum = np.cumsum(sp[order])
+    # cut after position c-1: |mass_left - total/2| minimised, both sides
+    # non-empty
+    half = cum[-1] / 2.0
+    cut = int(np.argmin(np.abs(cum[:-1] - half))) + 1
+    keep_slots = slots[order[:cut]]
+    move_slots = slots[order[cut:]]
+
+    kept = _deactivate_slots(state, move_slots)
+    child = _slots_into_fresh(cfg, state, move_slots)
+    sp_move = sp[order[cut:]]
+    centroid = (sp_move[:, None] * mu[order[cut:]]).sum(0) / sp_move.sum()
+    return kept, child, centroid
+
+
+def _deactivate_slots(state: FIGMNState, slots: np.ndarray) -> FIGMNState:
+    """Clear ``slots`` from the pool; their sp is zeroed (dead slots must
+    not skew eq. 12 priors), everything else keeps its exact bits."""
+    drop = np.zeros(state.active.shape[0], bool)
+    drop[slots] = True
+    active = np.asarray(state.active) & ~drop
+    sp = np.where(active, np.asarray(state.sp), 0.0).astype(
+        np.asarray(state.sp).dtype)
+    return dataclasses.replace(state, active=jnp.asarray(active),
+                               sp=jnp.asarray(sp))
+
+
+def _slots_into_fresh(cfg: FIGMNConfig, state: FIGMNState,
+                      slots: np.ndarray) -> FIGMNState:
+    """Copy ``slots`` bit-identically into the first slots of a fresh
+    kmax-slot pool (the spun-out replica's StreamRuntime state)."""
+    base = figmn.init_state(cfg)
+    m = slots.size
+    leaves = {}
+    for name in ("mu", "lam", "logdet", "sp", "v"):
+        arr = np.asarray(getattr(base, name)).copy()
+        arr[:m] = np.asarray(getattr(state, name))[slots]
+        leaves[name] = jnp.asarray(arr)
+    act = np.zeros(cfg.kmax, bool)
+    act[:m] = True
+    return FIGMNState(active=jnp.asarray(act),
+                      n_created=jnp.asarray(m, jnp.int32), **leaves)

@@ -84,6 +84,22 @@ def _union_wide(cfg: FIGMNConfig, states: Sequence[FIGMNState]
     return wide_cfg, merge.union(wide_cfg, list(states))
 
 
+def drain(cfg: FIGMNConfig, peer: FIGMNState, cold: FIGMNState
+          ) -> Tuple[FIGMNState, int]:
+    """Scale-down path: absorb a drained replica's pool into a peer.
+
+    Lossless union of the two pools, then budget enforcement back to the
+    replica slot count (cfg.kmax) by moment-matched merging — NEVER
+    truncation, so the peer's new active ``sum(sp)`` equals the two inputs'
+    exactly when the union fits the budget, and to pair-merge float
+    rounding otherwise.  Returns (merged_state, n_pairwise_merges) with
+    exactly cfg.kmax slots (a drop-in replacement pool for the peer
+    runtime).
+    """
+    return consolidate(cfg, [peer, cold], topology="star",
+                       kmax_out=cfg.kmax)
+
+
 def consolidate(cfg: FIGMNConfig, states: Sequence[FIGMNState],
                 topology: str = "star", kmax_out: int = 0
                 ) -> Tuple[FIGMNState, int]:

@@ -4,10 +4,10 @@ The scaling story (ROADMAP north star): PR 1 proved the per-chunk body of a
 StreamRuntime is contract-equivalent to one-shot ``figmn.fit``, so the unit
 of data-parallel scale-out is the *replica*: one runtime per data shard,
 each with its own lifecycle budget, drift detector and checkpoint lineage.
-This module adds the three things N replicas need to act as ONE model:
+This module adds the four things N replicas need to act as ONE model:
 
   routing        — ShardRouter splits every incoming batch into per-replica
-                   sub-streams (hash / round-robin / feature-affinity),
+                   sub-streams (hash ring / round-robin / feature-affinity),
   consolidation  — every ``consolidate_every`` ingest rounds (a lifecycle
                    boundary: replicas have just run their final lifecycle
                    pass, so pools are pruned and within budget) the replica
@@ -17,12 +17,29 @@ This module adds the three things N replicas need to act as ONE model:
   serving        — the consolidated mixture is *published* to a read-only
                    ScoringFrontend; ``score``/``score_async`` read the
                    snapshot and never touch (or wait on) ingesting
-                   replicas.
+                   replicas,
+  autoscaling    — when ``FleetConfig.autoscale`` is set, an Autoscaler
+                   (fleet/autoscale.py) reads the telemetry deltas at each
+                   consolidation boundary and the coordinator executes its
+                   decisions: scale-up splits the hottest replica's pool by
+                   responsibility-weighted bisection into a fresh runtime
+                   (slots move bit-identically — sum(sp) conserved
+                   EXACTLY); scale-down drains the coldest replica into a
+                   peer via consolidate.drain (moment-matched merging,
+                   never truncation).  Each event bumps the replica-set
+                   ``epoch``.
+
+Replicas carry stable integer *ids* (``replica_ids``): positions in
+``self.replicas`` shift when a replica is removed, ids never do — they key
+checkpoint directories, the router's hash ring and the autoscaler's delta
+baselines, so everything stays stable across scale events and restarts.
 
 Checkpointing writes one fleet manifest + per-replica payloads (each via
 its own CheckpointManager, so replica saves stay independently atomic and
-resumable); ``resume`` restores every replica — including drift-detector
-and telemetry state — then re-consolidates to rebuild the snapshot.
+resumable).  The manifest pins the replica-id set, the epoch and each
+replica's step, so ``resume`` after any number of scale events rebuilds
+exactly that membership and restores a whole cut; it then re-consolidates
+to rebuild the serving snapshot.
 
 In this container the replicas step sequentially on one device; the
 coordinator is deliberately ignorant of placement (replicas share no state
@@ -41,11 +58,16 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.types import Array, FIGMNConfig, FIGMNState
+from repro.fleet import autoscale as autoscale_mod
+from repro.fleet.autoscale import (Autoscaler, AutoscaleConfig,
+                                   ReplicaSignal, ScaleDecision)
 from repro.fleet.consolidate import consolidate as _consolidate
+from repro.fleet.consolidate import drain as _drain
 from repro.fleet.consolidate import sp_mass
 from repro.fleet.router import RouterConfig, ShardRouter
 from repro.fleet.scoring import ScoringFrontend
-from repro.fleet.telemetry import ConsolidationEvent, FleetTelemetry
+from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
+                                   ScaleEvent)
 from repro.stream import RuntimeConfig, StreamRuntime
 
 _MANIFEST = "fleet_manifest.json"
@@ -55,7 +77,9 @@ _MANIFEST = "fleet_manifest.json"
 class FleetConfig:
     """Fleet-level knobs (per-replica knobs live in RuntimeConfig).
 
-    n_replicas:        StreamRuntime replicas (= data shards).
+    n_replicas:        INITIAL StreamRuntime replicas (= data shards);
+                       with autoscaling the live count moves within
+                       [autoscale.min_replicas, autoscale.max_replicas].
     router:            "round_robin" | "hash" | "affinity".
     topology:          consolidation topology, "star" | "gossip".
     consolidate_every: ingest rounds between consolidations (0 ⇒ never
@@ -64,6 +88,9 @@ class FleetConfig:
                        unpublished fleet).
     global_kmax:       slot budget of the consolidated mixture (0 ⇒ the
                        replica cfg.kmax).
+    autoscale:         None ⇒ fixed membership; an AutoscaleConfig enables
+                       telemetry-driven scale events at consolidation
+                       boundaries.
     checkpoint_dir:    fleet manifest + per-replica checkpoint root.
     score_workers:     ScoringFrontend worker threads.
     """
@@ -72,6 +99,7 @@ class FleetConfig:
     topology: str = "star"
     consolidate_every: int = 1
     global_kmax: int = 0
+    autoscale: Optional[AutoscaleConfig] = None
     checkpoint_dir: Optional[str] = None
     score_workers: int = 2
     router_seed: int = 0
@@ -88,12 +116,22 @@ class FleetCoordinator:
         self.router = ShardRouter(
             RouterConfig(policy=fcfg.router, seed=fcfg.router_seed),
             fcfg.n_replicas)
+        self.replica_ids: List[int] = list(range(fcfg.n_replicas))
+        self._next_id = fcfg.n_replicas
         self.replicas: List[StreamRuntime] = [
-            StreamRuntime(cfg, self._replica_rcfg(i))
-            for i in range(fcfg.n_replicas)]
+            StreamRuntime(cfg, self._rcfg_for_id(rid))
+            for rid in self.replica_ids]
         self.scoring = ScoringFrontend(cfg, workers=fcfg.score_workers)
         self.telemetry = FleetTelemetry()
+        self.autoscaler = (Autoscaler(fcfg.autoscale)
+                           if fcfg.autoscale is not None else None)
         self.rounds = 0
+        self.epoch = 0          # replica-set epoch (bumps on scale events)
+
+    @property
+    def n_replicas(self) -> int:
+        """Live membership size (≠ fcfg.n_replicas after scale events)."""
+        return len(self.replicas)
 
     @property
     def _ckpt_root(self) -> Optional[str]:
@@ -103,12 +141,14 @@ class FleetCoordinator:
         each other's saves and resume() would silently swap states)."""
         return self.fcfg.checkpoint_dir or self.rcfg.checkpoint_dir
 
-    def _replica_rcfg(self, i: int) -> RuntimeConfig:
+    def _rcfg_for_id(self, rid: int) -> RuntimeConfig:
+        """Per-replica RuntimeConfig, checkpoint dir keyed by STABLE id —
+        positions shift on scale-down, directories must not."""
         root = self._ckpt_root
         if root is None:
             return self.rcfg
         return dataclasses.replace(
-            self.rcfg, checkpoint_dir=os.path.join(root, f"replica_{i}"))
+            self.rcfg, checkpoint_dir=os.path.join(root, f"replica_{rid}"))
 
     # ------------------------------------------------------------------
     # ingestion
@@ -120,7 +160,9 @@ class FleetCoordinator:
         One call is one fleet "round": every replica ingests its shard
         (running its own chunking/lifecycle/drift), then — at the cadence
         of ``consolidate_every`` — the round ends at a lifecycle boundary
-        with a consolidation + snapshot publish.
+        with a consolidation + snapshot publish, followed by at most one
+        autoscale decision/event (scale events only ever happen at these
+        boundaries: pools are pruned, budget-merged and just published).
         """
         xs = np.asarray(xs, np.float32)
         for replica, idx in zip(self.replicas, self.router.route(xs)):
@@ -130,6 +172,8 @@ class FleetCoordinator:
         every = self.fcfg.consolidate_every
         if every > 0 and self.rounds % every == 0:
             self.consolidate()
+            if self.autoscaler is not None:
+                self._maybe_autoscale()
         return self.summary()
 
     # ------------------------------------------------------------------
@@ -174,13 +218,115 @@ class FleetCoordinator:
         return self.scoring.score_async(xs)
 
     # ------------------------------------------------------------------
+    # autoscaling
+    # ------------------------------------------------------------------
+
+    def _signals(self) -> List[ReplicaSignal]:
+        counts = self.router.counts()
+        budget = (self.rcfg.lifecycle.k_budget or self.cfg.kmax) \
+            if self.rcfg.lifecycle is not None else self.cfg.kmax
+        out = []
+        for pos, (rid, r) in enumerate(zip(self.replica_ids,
+                                           self.replicas)):
+            s = r.telemetry.summary()
+            out.append(ReplicaSignal(
+                rid=rid, routed=counts[pos], chunks=int(s["chunks"]),
+                drift_alarms=int(s["drift_alarms"]),
+                active_k=int(r.state.n_active), budget=budget))
+        return out
+
+    def _maybe_autoscale(self) -> Optional[ScaleDecision]:
+        decision = self.autoscaler.observe(self._signals())
+        if decision.action == "up":
+            self.scale_up(decision.rid, reason=decision.reason)
+        elif decision.action == "down":
+            self.scale_down(decision.rid, decision.peer,
+                            reason=decision.reason)
+        if decision.action != "hold":
+            # membership (and, on down, the folded router counts) changed:
+            # re-anchor the delta baseline so the next decision judges only
+            # traffic that arrives AFTER the event
+            self.autoscaler.rebaseline(self._signals())
+        return decision
+
+    def scale_up(self, rid: int, reason: str = "") -> bool:
+        """Split replica ``rid``'s pool into itself + a fresh replica.
+
+        Mass-conserving by construction: ``autoscale.split_state`` moves
+        slots bit-identically, so the fleet's active-sp multiset is
+        unchanged.  Returns False (no event) when the pool has fewer than
+        two live components.
+        """
+        t0 = time.perf_counter()
+        pos = self.replica_ids.index(rid)
+        parent = self.replicas[pos]
+        split = autoscale_mod.split_state(self.cfg, parent.export_pool())
+        if split is None:
+            return False
+        kept, child_state, centroid = split
+        mass_before = sp_mass(parent.state)
+        new_id = self._next_id
+        self._next_id += 1
+        child = StreamRuntime(self.cfg, self._rcfg_for_id(new_id))
+        parent.import_pool(kept)
+        child.import_pool(child_state)
+        self.router.grow(new_id, centroid=centroid)
+        self.replicas.append(child)
+        self.replica_ids.append(new_id)
+        self.epoch += 1
+        self.telemetry.record_scale(ScaleEvent(
+            round_idx=self.rounds, epoch=self.epoch, action="up",
+            rid=rid, peer=new_id, n_replicas=len(self.replicas),
+            active_moved=int(child_state.n_active),
+            sp_mass_before=mass_before,
+            sp_mass_after=sp_mass(kept) + sp_mass(child_state),
+            merges=0, reason=reason, wall_s=time.perf_counter() - t0))
+        return True
+
+    def scale_down(self, rid: int, peer_rid: int, reason: str = "") -> bool:
+        """Drain replica ``rid`` into ``peer_rid`` and retire it.
+
+        The drained pool is absorbed through ``consolidate.drain`` (union +
+        moment-matched budget merging — never truncation); the pending
+        spawn buffer moves too, so gate-failing points observed by the
+        retired replica still get their lifecycle chance.
+        """
+        if rid == peer_rid:
+            raise ValueError("cannot drain a replica into itself")
+        t0 = time.perf_counter()
+        pos = self.replica_ids.index(rid)
+        peer_pos = self.replica_ids.index(peer_rid)
+        cold, peer = self.replicas[pos], self.replicas[peer_pos]
+        mass_before = sp_mass(cold.state) + sp_mass(peer.state)
+        moved = int(cold.state.n_active)
+        merged_state, merges = _drain(self.cfg, peer.export_pool(),
+                                      cold.export_pool())
+        peer.import_pool(merged_state)
+        if len(cold.buffer):
+            peer.buffer.push(cold.buffer.drain())
+        self.router.shrink(pos, into=peer_pos)
+        del self.replicas[pos]
+        del self.replica_ids[pos]
+        self.epoch += 1
+        self.telemetry.record_scale(ScaleEvent(
+            round_idx=self.rounds, epoch=self.epoch, action="down",
+            rid=rid, peer=peer_rid, n_replicas=len(self.replicas),
+            active_moved=moved, sp_mass_before=mass_before,
+            sp_mass_after=sp_mass(merged_state), merges=merges,
+            reason=reason, wall_s=time.perf_counter() - t0))
+        return True
+
+    # ------------------------------------------------------------------
     # telemetry / checkpointing
     # ------------------------------------------------------------------
 
     def summary(self) -> Dict[str, object]:
-        return self.telemetry.summary(
+        s = self.telemetry.summary(
             [r.telemetry.summary() for r in self.replicas],
             self.router.load())
+        s["epoch"] = self.epoch
+        s["replica_ids"] = list(self.replica_ids)
+        return s
 
     def checkpoint(self) -> None:
         """One manifest + N independently-atomic replica payloads."""
@@ -189,17 +335,26 @@ class FleetCoordinator:
             raise RuntimeError("no checkpoint_dir configured")
         for r in self.replicas:
             r.checkpoint()
-        # Pin the exact replica steps this manifest describes: replicas
-        # also auto-checkpoint on every ingest, so "latest" may be newer
-        # than the manifest after a crash — resume restores THESE steps so
-        # the fleet always comes back as one consistent cut.
-        manifest = {"n_replicas": self.fcfg.n_replicas,
+        # Pin the exact replica-id set, epoch and per-replica steps this
+        # manifest describes: replicas also auto-checkpoint on every
+        # ingest, so "latest" may be newer than the manifest after a
+        # crash — resume restores THESE ids at THESE steps so the fleet
+        # always comes back as one consistent cut, even across scale
+        # events (a retired replica's directory stays on disk but is no
+        # longer referenced).
+        manifest = {"n_replicas": len(self.replicas),
+                    "replica_ids": list(self.replica_ids),
+                    "epoch": self.epoch,
+                    "next_replica_id": self._next_id,
                     "rounds": self.rounds,
                     "topology": self.fcfg.topology,
                     "snapshot_version": self.scoring.version,
                     "replica_steps": [r.ckpt.latest_step()
                                       for r in self.replicas],
-                    "router": self.router.export_state()}
+                    "router": self.router.export_state(),
+                    "autoscale": (self.autoscaler.export_state()
+                                  if self.autoscaler is not None
+                                  else None)}
         tmp = os.path.join(d, _MANIFEST + ".tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f)
@@ -209,7 +364,14 @@ class FleetCoordinator:
 
     def resume(self) -> bool:
         """Restore manifest + every replica (incl. drift/telemetry state);
-        re-consolidate to rebuild the serving snapshot.  True if resumed."""
+        re-consolidate to rebuild the serving snapshot.  True if resumed.
+
+        Scale events change membership, so resume rebuilds the EXACT
+        replica-id set the manifest pins (whole-cut semantics): a fleet
+        configured with n_replicas=1 that autoscaled to 3 before the
+        checkpoint comes back with those same 3 replicas, states
+        bit-identical.
+        """
         d = self._ckpt_root
         if d is None:
             raise RuntimeError("no checkpoint_dir configured")
@@ -218,12 +380,19 @@ class FleetCoordinator:
             return False
         with open(path) as f:
             manifest = json.load(f)
-        if manifest["n_replicas"] != self.fcfg.n_replicas:
-            raise ValueError(
-                f"manifest has {manifest['n_replicas']} replicas, "
-                f"fleet configured with {self.fcfg.n_replicas}")
-        steps = manifest.get("replica_steps",
-                             [None] * self.fcfg.n_replicas)
+        ids = manifest.get("replica_ids")
+        if ids is None:
+            # legacy (pre-autoscale) manifest: identity membership only
+            if manifest["n_replicas"] != len(self.replicas):
+                raise ValueError(
+                    f"manifest has {manifest['n_replicas']} replicas, "
+                    f"fleet configured with {len(self.replicas)}")
+            ids = list(self.replica_ids)
+        ids = [int(i) for i in ids]
+        rebuild = ids != self.replica_ids
+        replicas = ([StreamRuntime(self.cfg, self._rcfg_for_id(rid))
+                     for rid in ids] if rebuild else self.replicas)
+        steps = manifest.get("replica_steps", [None] * len(ids))
         # Resolve and validate the WHOLE cut before touching any replica:
         # a partial restore (some replicas rolled back, some not) is worse
         # than failing.  None (legacy manifest) resolves to that replica's
@@ -233,11 +402,10 @@ class FleetCoordinator:
         # error (checkpoint the fleet at least every keep_n-1 ingest
         # rounds), and it is loud, not a silent False.
         resolved = [step if step is not None else r.ckpt.latest_step()
-                    for r, step in zip(self.replicas, steps)]
+                    for r, step in zip(replicas, steps)]
         if None in resolved:
             return False
-        lost = [i for i, (r, step) in enumerate(zip(self.replicas,
-                                                    resolved))
+        lost = [i for i, (r, step) in enumerate(zip(replicas, resolved))
                 if step not in r.ckpt.all_steps()]
         if lost:
             if any(s is not None for s in steps):
@@ -248,11 +416,22 @@ class FleetCoordinator:
                     f"keep_n-1 ingest rounds or raise "
                     f"RuntimeConfig.keep_n")
             return False
-        for r, step in zip(self.replicas, resolved):
+        for r, step in zip(replicas, resolved):
             if not r.resume(step=step):
                 return False
+        if rebuild:
+            self.replicas = replicas
+            self.replica_ids = list(ids)
+            self.router = ShardRouter(
+                RouterConfig(policy=self.fcfg.router,
+                             seed=self.fcfg.router_seed), len(ids))
         self.rounds = int(manifest["rounds"])
+        self.epoch = int(manifest.get("epoch", 0))
+        self._next_id = int(manifest.get("next_replica_id", len(ids)))
         self.router.load_state(manifest["router"])
+        if self.autoscaler is not None \
+                and manifest.get("autoscale") is not None:
+            self.autoscaler.load_state(manifest["autoscale"])
         if int(manifest.get("snapshot_version", 0)) > 0:
             t0 = time.perf_counter()
             state, merges = _consolidate(

@@ -9,21 +9,32 @@ shapes the *statistical efficiency* and load balance:
                 of the stream.  The default, and what the equivalence tests
                 use (each replica's sub-stream is distributionally the full
                 stream, so consolidation has the least assignment noise).
-  hash        — stateless, content-addressed (blake2b of the feature bytes):
-                the same point always lands on the same replica regardless
-                of arrival order or which coordinator process is routing —
-                what a multi-host front-end needs for cache affinity and
-                for exactly-once semantics under replay.
+  hash        — stateless, content-addressed (blake2b of the feature bytes)
+                onto a CONSISTENT-HASHING RING: each replica owns
+                ``_VNODES`` pseudo-random arcs of the 64-bit key circle, a
+                point goes to the owner of the first vnode at or clockwise
+                of its key.  The same point lands on the same replica
+                regardless of arrival order or which coordinator process is
+                routing, and — the property a fixed modulus cannot give —
+                membership changes remap only the arcs the new/removed
+                replica owns (~1/n of keys), so autoscaling does not
+                reshuffle every replica's working set.
   affinity    — feature-space affinity: points go to the replica whose
                 running centroid is nearest (greedy max-min init from the
                 first batch).  Each replica then models a compact region of
                 feature space — the component-pool partitioning of the
                 sublinear-GMM line of work (fewer cross-replica duplicate
                 components, cheaper consolidation merges) at the cost of
-                load skew on lumpy traffic.
+                load skew on lumpy traffic.  On scale-up the new replica is
+                seeded with the centroid of the pool half it received
+                (centroid handoff); on scale-down the dropped region falls
+                to whichever surviving centroid is nearest.
 
-Routing runs on host (numpy) — it is the serving front door, upstream of
-any device work, and must not trigger XLA retraces.
+Membership is a list of stable replica *ids* (positions shift when a
+replica is removed; ids never do — they key checkpoint directories and the
+hash ring, so routing stays stable across coordinator restarts and scale
+events).  Routing runs on host (numpy) — it is the serving front door,
+upstream of any device work, and must not trigger XLA retraces.
 """
 from __future__ import annotations
 
@@ -34,6 +45,11 @@ from typing import Dict, List, Optional
 import numpy as np
 
 POLICIES = ("round_robin", "hash", "affinity")
+
+#: virtual nodes per replica on the hash ring — enough that per-replica
+#: load concentrates (stddev ~ 1/sqrt(_VNODES)) while membership changes
+#: stay O(_VNODES log) host work.
+_VNODES = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,9 +70,12 @@ class ShardRouter:
             raise ValueError("need at least one replica")
         self.cfg = cfg
         self.n = int(n_replicas)
+        self.ids: List[int] = list(range(self.n))      # stable replica ids
         self._rr_offset = 0                     # round_robin clock
         self._centroids: Optional[np.ndarray] = None   # affinity state
         self._counts = np.zeros(self.n, np.int64)      # points per replica
+        self._ring_pos: Optional[np.ndarray] = None    # hash-ring cache
+        self._ring_owner: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
 
@@ -74,8 +93,53 @@ class ShardRouter:
         return [np.flatnonzero(assign == r) for r in range(self.n)]
 
     def load(self) -> Dict[str, int]:
-        """Cumulative points routed per replica (load-balance telemetry)."""
+        """Cumulative points routed per replica (load-balance telemetry),
+        keyed by POSITION (the coordinator's replicas-list order)."""
         return {f"replica_{r}": int(c) for r, c in enumerate(self._counts)}
+
+    def counts(self) -> List[int]:
+        """Cumulative points per replica in position order."""
+        return [int(c) for c in self._counts]
+
+    # -- membership changes (fleet autoscaling) ------------------------
+
+    def grow(self, rid: int, centroid: Optional[np.ndarray] = None) -> int:
+        """Add a replica with stable id ``rid``; returns its position.
+
+        centroid: affinity handoff — the sp-weighted centre of the pool
+        half the new replica received, so its routing region starts where
+        its components already are.  Ignored by the other policies (and by
+        an affinity router that has not seeded centroids yet).
+        """
+        if rid in self.ids:
+            raise ValueError(f"replica id {rid} already routed")
+        self.ids.append(int(rid))
+        self.n += 1
+        self._counts = np.append(self._counts, np.int64(0))
+        if self._centroids is not None:
+            if centroid is None:
+                raise ValueError(
+                    "affinity routing needs a centroid handoff on grow")
+            self._centroids = np.vstack(
+                [self._centroids, np.asarray(centroid, np.float64)])
+        self._ring_pos = None                    # rebuild lazily
+        return self.n - 1
+
+    def shrink(self, pos: int, into: int) -> None:
+        """Remove the replica at position ``pos``; its cumulative load is
+        folded into position ``into`` (which absorbed its pool)."""
+        if self.n <= 1:
+            raise ValueError("cannot shrink below one replica")
+        if pos == into:
+            raise ValueError("cannot drain a replica into itself")
+        self._counts[into] += self._counts[pos]
+        self._counts = np.delete(self._counts, pos)
+        del self.ids[pos]
+        if self._centroids is not None:
+            self._centroids = np.delete(self._centroids, pos, axis=0)
+        self.n -= 1
+        self._rr_offset %= self.n
+        self._ring_pos = None
 
     # -- policies ------------------------------------------------------
 
@@ -85,14 +149,35 @@ class ShardRouter:
         self._rr_offset = (self._rr_offset + n) % self.n
         return assign
 
+    def _salt(self) -> bytes:
+        return self.cfg.seed.to_bytes(8, "little", signed=True)
+
+    def _build_ring(self) -> None:
+        salt = self._salt()
+        pts, owners = [], []
+        for pos, rid in enumerate(self.ids):
+            for v in range(_VNODES):
+                h = hashlib.blake2b(f"vnode:{rid}:{v}".encode(),
+                                    digest_size=8, salt=salt).digest()
+                pts.append(int.from_bytes(h, "little"))
+                owners.append(pos)
+        order = np.argsort(np.asarray(pts, np.uint64), kind="stable")
+        self._ring_pos = np.asarray(pts, np.uint64)[order]
+        self._ring_owner = np.asarray(owners, np.int64)[order]
+
     def _assign_hash(self, xs: np.ndarray) -> np.ndarray:
-        salt = self.cfg.seed.to_bytes(8, "little", signed=True)
+        if self._ring_pos is None:
+            self._build_ring()
+        salt = self._salt()
         rows = np.ascontiguousarray(xs)
-        return np.fromiter(
+        keys = np.fromiter(
             (int.from_bytes(hashlib.blake2b(r.tobytes(), digest_size=8,
                                             salt=salt).digest(), "little")
-             % self.n for r in rows),
-            np.int64, count=rows.shape[0])
+             for r in rows),
+            np.uint64, count=rows.shape[0])
+        loc = np.searchsorted(self._ring_pos, keys, side="left") \
+            % self._ring_pos.shape[0]
+        return self._ring_owner[loc]
 
     def _assign_affinity(self, xs: np.ndarray) -> np.ndarray:
         if self._centroids is None:
@@ -137,6 +222,7 @@ class ShardRouter:
 
     def export_state(self) -> Dict[str, object]:
         return {"rr_offset": self._rr_offset,
+                "ids": list(self.ids),
                 "counts": self._counts.tolist(),
                 "centroids": (self._centroids.tolist()
                               if self._centroids is not None else None)}
@@ -144,6 +230,11 @@ class ShardRouter:
     def load_state(self, payload: Dict[str, object]) -> None:
         self._rr_offset = int(payload["rr_offset"])
         self._counts = np.asarray(payload["counts"], np.int64)
+        # pre-autoscale manifests carry no ids: identity membership
+        self.ids = [int(i) for i in
+                    payload.get("ids", range(len(self._counts)))]
+        self.n = len(self.ids)
         cent = payload.get("centroids")
         self._centroids = (np.asarray(cent, np.float64)
                            if cent is not None else None)
+        self._ring_pos = None

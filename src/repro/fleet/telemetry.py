@@ -3,17 +3,28 @@
 Each StreamRuntime already keeps exact running counters for its own stream
 (repro.stream.telemetry); the fleet layer's job is the cross-replica view a
 fleet operator actually pages on: aggregate throughput, per-replica load
-skew (is the router balanced?), consolidation cadence/cost, and how much
-the budget merge is compressing the global pool.
+skew (is the router balanced?), consolidation cadence/cost, membership
+(scale) events, and how much the budget merge is compressing the global
+pool.
+
+Concurrency contract (same pattern as fleet/scoring.py): writers — the
+coordinator's consolidation clock and the autoscaler — record events under
+one mutex by building a NEW immutable ``_Counters`` snapshot and swapping
+the reference; readers (``summary`` runs on scoring/serving threads) grab
+the reference once and read only immutable state.  A reader can therefore
+never observe a half-applied event (e.g. the event list grown but the
+totals not yet incremented), which the previous read-modify-write fields
+allowed.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Sequence
+import threading
+from typing import Dict, List, Sequence, Tuple
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class ConsolidationEvent:
     round_idx: int          # coordinator ingest-round clock at the merge
     version: int            # snapshot version published from this merge
@@ -26,26 +37,96 @@ class ConsolidationEvent:
     wall_s: float = 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class ScaleEvent:
+    """One mass-conserving membership change (fleet/autoscale.py)."""
+    round_idx: int          # coordinator ingest-round clock at the event
+    epoch: int              # replica-set epoch AFTER the event
+    action: str             # "up" | "down"
+    rid: int                # up: split replica;  down: drained replica
+    peer: int               # down: absorbing replica id (-1 for up)
+    n_replicas: int         # membership size AFTER the event
+    active_moved: int       # components spun out (up) / drained (down)
+    sp_mass_before: float   # active sum(sp) over the involved replicas
+    sp_mass_after: float    # ... after the event (conservation witness)
+    merges: int             # moment-match merges (down only; up is 0)
+    reason: str = ""
+    wall_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _Counters:
+    """The immutable snapshot readers see.  Tuples, not lists — a
+    published snapshot can never change under a reader."""
+    events: Tuple[ConsolidationEvent, ...] = ()
+    scale_events: Tuple[ScaleEvent, ...] = ()
+    total_consolidations: int = 0
+    total_merges: int = 0
+    scale_ups: int = 0
+    scale_downs: int = 0
+
+
 class FleetTelemetry:
-    """Consolidation event log + cross-replica summary aggregation."""
+    """Consolidation/scale event log + cross-replica summary aggregation."""
 
     def __init__(self, capacity: int = 1024):
         self.capacity = int(capacity)
-        self.events: List[ConsolidationEvent] = []
-        self.total_consolidations = 0
-        self.total_merges = 0
+        self._lock = threading.Lock()
+        self._counters = _Counters()
+
+    # -- writers (coordinator thread) ----------------------------------
 
     def record_consolidation(self, ev: ConsolidationEvent) -> None:
-        self.events.append(ev)
-        if len(self.events) > self.capacity:
-            self.events = self.events[-self.capacity:]
-        self.total_consolidations += 1
-        self.total_merges += ev.merges
+        with self._lock:
+            c = self._counters
+            self._counters = dataclasses.replace(
+                c, events=(c.events + (ev,))[-self.capacity:],
+                total_consolidations=c.total_consolidations + 1,
+                total_merges=c.total_merges + ev.merges)
+
+    def record_scale(self, ev: ScaleEvent) -> None:
+        with self._lock:
+            c = self._counters
+            self._counters = dataclasses.replace(
+                c, scale_events=(c.scale_events + (ev,))[-self.capacity:],
+                scale_ups=c.scale_ups + (ev.action == "up"),
+                scale_downs=c.scale_downs + (ev.action == "down"))
+
+    # -- readers (any thread; lock-free) -------------------------------
+
+    def snapshot(self) -> _Counters:
+        """The current immutable counters (one volatile reference read)."""
+        return self._counters
+
+    @property
+    def events(self) -> List[ConsolidationEvent]:
+        return list(self._counters.events)
+
+    @property
+    def scale_events(self) -> List[ScaleEvent]:
+        return list(self._counters.scale_events)
+
+    @property
+    def total_consolidations(self) -> int:
+        return self._counters.total_consolidations
+
+    @property
+    def total_merges(self) -> int:
+        return self._counters.total_merges
 
     def summary(self, replica_summaries: Sequence[Dict],
                 router_load: Dict[str, int]) -> Dict[str, object]:
         """One fleet-level dict from the per-replica runtime summaries."""
-        last = self.events[-1] if self.events else None
+        return self._summary_from(self._counters, replica_summaries,
+                                  router_load)
+
+    def _summary_from(self, snap: _Counters,
+                      replica_summaries: Sequence[Dict],
+                      router_load: Dict[str, int]) -> Dict[str, object]:
+        """Aggregate against ONE already-taken snapshot — to_json must use
+        the same snap for the summary AND the event dumps, or the file
+        could show N+1 consolidations above an N-entry event list."""
+        last = snap.events[-1] if snap.events else None
         agg_keys = ("total_points", "created", "pruned", "merged",
                     "spawned", "drift_alarms", "chunks")
         agg = {k: sum(int(s.get(k, 0)) for s in replica_summaries)
@@ -59,8 +140,10 @@ class FleetTelemetry:
             "replicas": len(replica_summaries),
             **agg,
             "router_load": dict(router_load),
-            "consolidations": self.total_consolidations,
-            "consolidation_merges": self.total_merges,
+            "consolidations": snap.total_consolidations,
+            "consolidation_merges": snap.total_merges,
+            "scale_ups": snap.scale_ups,
+            "scale_downs": snap.scale_downs,
             "snapshot_version": last.version if last else 0,
             "global_active_k": last.active_out if last else 0,
             "global_sp_mass": last.sp_mass if last else 0.0,
@@ -69,9 +152,13 @@ class FleetTelemetry:
 
     def to_json(self, path: str, replica_summaries: Sequence[Dict],
                 router_load: Dict[str, int]) -> None:
+        snap = self._counters
         with open(path, "w") as f:
-            json.dump({"summary": self.summary(replica_summaries,
-                                               router_load),
+            json.dump({"summary": self._summary_from(snap,
+                                                     replica_summaries,
+                                                     router_load),
                        "consolidations": [dataclasses.asdict(e)
-                                          for e in self.events]}, f,
+                                          for e in snap.events],
+                       "scale_events": [dataclasses.asdict(e)
+                                        for e in snap.scale_events]}, f,
                       indent=1)

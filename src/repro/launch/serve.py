@@ -27,7 +27,7 @@ from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.core import figmn
 from repro.core.types import FIGMNConfig
-from repro.fleet import FleetConfig, FleetCoordinator
+from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
 from repro.models import transformer as tr
 from repro.serve.engine import Request, ServeEngine
 from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
@@ -45,7 +45,12 @@ def main() -> None:
                     help="restore params from a training checkpoint")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ood-replicas", type=int, default=2,
-                    help="stream-fleet replicas for the OOD monitor")
+                    help="stream-fleet replicas for the OOD monitor "
+                         "(with --ood-autoscale: the maximum)")
+    ap.add_argument("--ood-autoscale", action="store_true",
+                    help="let the OOD fleet autoscale from 1 replica up "
+                         "to --ood-replicas off its own telemetry "
+                         "(load skew / budget pressure / drift rate)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -100,8 +105,13 @@ def main() -> None:
                            jnp.asarray(feats), 1.0))
     monitor = FleetCoordinator(
         gcfg,
-        FleetConfig(n_replicas=args.ood_replicas, router="hash",
-                    consolidate_every=1, global_kmax=8),
+        FleetConfig(n_replicas=1 if args.ood_autoscale
+                    else args.ood_replicas,
+                    router="hash", consolidate_every=1, global_kmax=8,
+                    autoscale=AutoscaleConfig(
+                        min_replicas=1,
+                        max_replicas=max(args.ood_replicas, 1),
+                        cooldown=1) if args.ood_autoscale else None),
         RuntimeConfig(
             chunk=max(args.requests // 4, 4),
             lifecycle=LifecycleConfig(k_budget=8, every=4),
@@ -118,7 +128,9 @@ def main() -> None:
           f"({summary['points_per_s']:.0f} feats/s, "
           f"global K={summary['global_active_k']}, "
           f"snapshot v{summary['snapshot_version']}, "
-          f"drift alarms={summary['drift_alarms']})")
+          f"drift alarms={summary['drift_alarms']}, "
+          f"scale events={summary['scale_ups']}+{summary['scale_downs']} "
+          f"epoch={summary['epoch']})")
 
 
 if __name__ == "__main__":

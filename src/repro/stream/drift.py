@@ -69,6 +69,15 @@ class DriftDetector:
     def score(self) -> float:
         return self._g
 
+    def reset_baseline(self) -> None:
+        """Restart the CUSUM and its reference window — called when the
+        monitored mixture changes out from under the detector (fleet scale
+        events move pool halves between replicas), so the old
+        log-likelihood baseline would read as spurious drift."""
+        self._g = 0.0
+        self._ref = []
+        self._ref_nov = []
+
     def update(self, mean_ll: float, novelty_rate: float,
                weight: float = 1.0) -> Tuple[float, bool]:
         """Feed one chunk's stats; returns (score, alarm).

@@ -179,6 +179,34 @@ class StreamRuntime:
         self.state = drift_mod.respond(self.cfg, dcfg, self.state)
 
     # ------------------------------------------------------------------
+    # pool export / import (fleet scale events)
+    # ------------------------------------------------------------------
+
+    def export_pool(self) -> FIGMNState:
+        """The live mixture, for mass-conserving pool moves (fleet
+        autoscaling).  The returned leaves are immutable jax arrays, so the
+        caller can hold them across further ingestion."""
+        return self.state
+
+    def import_pool(self, state: FIGMNState) -> None:
+        """Replace the live mixture wholesale (fleet scale events: a split
+        half on scale-up, the drained union on scale-down).
+
+        Only the pool changes — the chunk clock, telemetry, drift detector
+        and spawn buffer stay; but the drift CUSUM's log-likelihood
+        baseline belonged to the OLD pool, so its reference window restarts
+        (otherwise losing/gaining half the components reads as a fake
+        regime change on the very next chunk).
+        """
+        want = (self.cfg.kmax, self.cfg.dim)
+        got = tuple(int(s) for s in state.mu.shape)
+        if got != want:
+            raise ValueError(f"pool shape {got} != configured {want}")
+        self.state = state
+        if self.detector is not None:
+            self.detector.reset_baseline()
+
+    # ------------------------------------------------------------------
     # scoring / checkpointing
     # ------------------------------------------------------------------
 

@@ -1,0 +1,597 @@
+"""Autoscaling conformance suite (fleet/autoscale.py + coordinator wiring).
+
+The invariants every scale event must honour, example-tested here and
+property-tested (hypothesis, via the shared strategies in conftest.py)
+against random (stream, scale-event schedule) pairs:
+
+  * mass conservation — scale-up moves slots bit-identically (the
+    fleet-wide active-sp MULTISET is unchanged, so sum(sp) is conserved
+    exactly); scale-down goes through moment-matched merging (never
+    truncation), conserving fsum(sp) exactly when the union fits the
+    peer's budget and to float rounding otherwise;
+  * seeded determinism — the same stream through the same config yields
+    the same decision/event sequence;
+  * fidelity — an autoscaled fleet's held-out log-likelihood stays within
+    tolerance of a fixed 1-replica run;
+  * whole-cut checkpointing — resume after scale events rebuilds the
+    manifest's exact replica-id set, bit-identical, and continues
+    identically;
+  * telemetry snapshot atomicity — readers can never observe half-applied
+    events (the fix for the summary-counter read-modify-write race).
+"""
+import dataclasses
+import math
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conftest
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import (Autoscaler, AutoscaleConfig, ConsolidationEvent,
+                         FleetConfig, FleetCoordinator, FleetTelemetry,
+                         ReplicaSignal, split_state, sp_mass)
+from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
+
+pytestmark = pytest.mark.fleet
+
+
+def _stream(n=900, d=4, modes=3, seed=0, spread=6.0, centers_seed=0):
+    """centers_seed pins the distribution, seed draws the points — held-out
+    sets share centers_seed with their training stream."""
+    centers = np.random.default_rng(centers_seed).normal(0, spread,
+                                                         (modes, d))
+    rng = np.random.default_rng(seed + 1000)
+    x = centers[rng.integers(0, modes, n)] + rng.normal(0, 1.0, (n, d))
+    return x.astype(np.float32)
+
+
+def _cfg(x, **kw):
+    defaults = dict(kmax=16, dim=x.shape[1], beta=0.1, delta=1.0,
+                    vmin=1e9, spmin=0.0, update_mode="exact",
+                    sigma_ini=figmn.sigma_from_data(jnp.asarray(x), 1.0))
+    defaults.update(kw)
+    return FIGMNConfig(**defaults)
+
+
+def _active_sp_multiset(states) -> np.ndarray:
+    """Sorted fleet-wide active sp values — THE conserved quantity."""
+    parts = [np.asarray(s.sp, np.float64)[np.asarray(s.active)]
+             for s in states]
+    return np.sort(np.concatenate(parts)) if parts else np.zeros(0)
+
+
+def _fleet_mass(fleet) -> float:
+    """Order-invariant exact sum (math.fsum) of active sp over the fleet."""
+    return math.fsum(
+        float(v) for r in fleet.replicas
+        for v in np.asarray(r.state.sp, np.float64)[
+            np.asarray(r.state.active)])
+
+
+# ---------------------------------------------------------------------------
+# split_state: the scale-up mechanism
+# ---------------------------------------------------------------------------
+
+def test_split_state_moves_slots_bit_identically():
+    x = _stream()
+    cfg = _cfg(x)
+    state = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    assert int(state.n_active) >= 2
+    kept, child, centroid = split_state(cfg, state)
+    n0 = int(state.n_active)
+    assert int(kept.n_active) >= 1 and int(child.n_active) >= 1
+    assert int(kept.n_active) + int(child.n_active) == n0
+    # the active-sp multiset is EXACTLY conserved (slots moved, not math'd)
+    np.testing.assert_array_equal(
+        _active_sp_multiset([state]), _active_sp_multiset([kept, child]))
+    # every child slot is a bit-identical copy of some parent slot
+    pm = np.asarray(state.mu)[np.asarray(state.active)]
+    for row in np.asarray(child.mu)[np.asarray(child.active)]:
+        assert (row == pm).all(axis=1).any()
+    # dead slots in the kept pool carry no mass (eq. 12 priors stay clean)
+    kept_sp = np.asarray(kept.sp)
+    assert (kept_sp[~np.asarray(kept.active)] == 0.0).all()
+    assert centroid.shape == (cfg.dim,) and np.isfinite(centroid).all()
+
+
+def test_split_state_bisects_responsibility_not_slots():
+    """The cut equalises sp mass: neither half carries less than ~25% of
+    the total on a well-spread pool (slot counts may be lopsided)."""
+    x = _stream(n=1500, modes=6, seed=3)
+    cfg = _cfg(x, kmax=24)
+    state = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    kept, child, _ = split_state(cfg, state)
+    total = sp_mass(state)
+    assert sp_mass(kept) > 0.25 * total
+    assert sp_mass(child) > 0.25 * total
+
+
+def test_split_state_refuses_single_component_pool():
+    x = _stream(n=200, modes=1, seed=1)
+    cfg = _cfg(x, beta=0.0)          # paper setting: one component ever
+    state = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    assert int(state.n_active) == 1
+    assert split_state(cfg, state) is None
+
+
+# ---------------------------------------------------------------------------
+# coordinator scale events: conservation (example-based)
+# ---------------------------------------------------------------------------
+
+def test_forced_scale_cycle_conserves_mass():
+    """up → up → down → down, mass checked around every event."""
+    x = _stream(seed=5)
+    cfg = _cfg(x)
+    fleet = FleetCoordinator(
+        cfg, FleetConfig(n_replicas=1, consolidate_every=0),
+        RuntimeConfig(chunk=64))
+    fleet.ingest(x[:600])
+    for step, action in enumerate(["up", "up", "down", "down"]):
+        before_set = _active_sp_multiset([r.state for r in fleet.replicas])
+        before_sum = _fleet_mass(fleet)
+        n0 = fleet.n_replicas
+        if action == "up":
+            assert fleet.scale_up(fleet.replica_ids[0])
+            assert fleet.n_replicas == n0 + 1
+            # lossless: the fleet-wide multiset is untouched
+            np.testing.assert_array_equal(
+                before_set,
+                _active_sp_multiset([r.state for r in fleet.replicas]))
+        else:
+            rid, peer = fleet.replica_ids[-1], fleet.replica_ids[0]
+            assert fleet.scale_down(rid, peer)
+            assert fleet.n_replicas == n0 - 1
+            assert rid not in fleet.replica_ids
+            np.testing.assert_allclose(_fleet_mass(fleet), before_sum,
+                                       rtol=1e-6)
+        ev = fleet.telemetry.scale_events[-1]
+        assert ev.action == action and ev.epoch == step + 1
+        np.testing.assert_allclose(ev.sp_mass_after, ev.sp_mass_before,
+                                   rtol=1e-6)
+        fleet.ingest(x[600:])        # fleet keeps learning after any event
+    fleet.close()
+
+
+def test_scale_down_merges_rather_than_truncates():
+    """Drain a replica into a peer whose union overflows kmax: components
+    must moment-match (merges > 0) and fsum(sp) stays within float
+    rounding — truncation would lose whole components' mass."""
+    x = _stream(n=1200, modes=8, seed=6)
+    cfg = _cfg(x, kmax=6)            # tight: union of two pools overflows
+    fleet = FleetCoordinator(
+        cfg, FleetConfig(n_replicas=2, consolidate_every=0),
+        RuntimeConfig(chunk=64))
+    fleet.ingest(x)
+    assert all(int(r.state.n_active) >= 4 for r in fleet.replicas)
+    before = _fleet_mass(fleet)
+    assert fleet.scale_down(fleet.replica_ids[1], fleet.replica_ids[0])
+    ev = fleet.telemetry.scale_events[-1]
+    assert ev.merges > 0
+    assert int(fleet.replicas[0].state.n_active) <= cfg.kmax
+    np.testing.assert_allclose(_fleet_mass(fleet), before, rtol=1e-6)
+    fleet.close()
+
+
+def test_scale_events_only_at_consolidation_boundaries():
+    """With consolidate_every=2, the policy only ever fires on even
+    rounds — a scale event is always a clean cut after a publish."""
+    x = _stream(seed=7)
+    cfg = _cfg(x)
+    fleet = FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=1, consolidate_every=2,
+                    autoscale=AutoscaleConfig(max_replicas=4, up_skew=1.0,
+                                              cooldown=0)),
+        RuntimeConfig(chunk=64))
+    for lo in range(0, 900, 100):
+        fleet.ingest(x[lo:lo + 100])
+    events = fleet.telemetry.scale_events
+    assert events, "aggressive policy must have fired"
+    assert all(e.round_idx % 2 == 0 for e in events)
+    fleet.close()
+
+
+def test_scale_down_rebaselines_deltas_no_flapping():
+    """Scale-down folds the retired replica's lifetime routed count into
+    its peer (router telemetry must stay exact).  The coordinator must
+    re-anchor the autoscaler's delta baseline after the event — otherwise
+    the folded history reads as a traffic spike on the peer at the very
+    next boundary and flaps straight back into a scale-up (cooldown=0 is
+    legal, so hysteresis cannot be relied on to absorb it)."""
+    x = _stream(n=960, seed=12)
+    cfg = _cfg(x)
+    fleet = FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=3, consolidate_every=1,
+                    autoscale=AutoscaleConfig(min_replicas=2,
+                                              max_replicas=3,
+                                              up_skew=1.8,
+                                              down_share=1.5,
+                                              cooldown=0)),
+        RuntimeConfig(chunk=64))
+    fleet.ingest(x[:900])            # balanced ⇒ the loose down_share fires
+    assert fleet.telemetry.scale_events[-1].action == "down"
+    assert fleet.n_replicas == 2
+    fleet.ingest(x[900:])            # tiny balanced round: without the
+    ups = [e for e in fleet.telemetry.scale_events   # rebaseline the fold
+           if e.action == "up"]                      # fakes skew ≈ 1.83
+    fleet.close()
+    assert not ups, "folded scale-down counts flapped into a scale-up"
+
+
+# ---------------------------------------------------------------------------
+# the policy: deterministic threshold logic (unit-tested on signals)
+# ---------------------------------------------------------------------------
+
+def _sig(rid, routed, chunks=10, alarms=0, active_k=8, budget=16):
+    return ReplicaSignal(rid=rid, routed=routed, chunks=chunks,
+                         drift_alarms=alarms, active_k=active_k,
+                         budget=budget)
+
+
+def test_policy_up_on_skew_and_deltas_not_cumulative():
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, up_skew=2.0,
+                                   down_share=0.1, cooldown=0))
+    d = a.observe([_sig(0, 300), _sig(1, 100)])       # skew 1.5: in band
+    assert d.action == "hold" and "band" in d.reason
+    # cumulative counters now (1300, 100) — skew 2.17 if judged
+    # cumulatively — but the DELTA since the last decision is (1000, 0):
+    # skew 2.0 ⇒ up.  The policy must judge recent traffic, and it does.
+    d = a.observe([_sig(0, 1300), _sig(1, 100)])
+    assert d.action == "up" and d.rid == 0 and "skew" in d.reason
+
+
+def test_policy_up_on_budget_pressure_targets_pressured_replica():
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, up_pressure=0.99,
+                                   cooldown=0))
+    d = a.observe([_sig(0, 100, active_k=16, budget=16),
+                   _sig(1, 100, active_k=4, budget=16)])
+    assert d.action == "up" and d.rid == 0 and "pressure" in d.reason
+
+
+def test_policy_up_on_drift_rate():
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, up_drift=0.2,
+                                   up_skew=10.0, cooldown=0))
+    d = a.observe([_sig(0, 100, chunks=10, alarms=4), _sig(1, 100)])
+    assert d.action == "up" and "drift" in d.reason
+
+
+def test_policy_down_requires_cold_and_quiet():
+    a = Autoscaler(AutoscaleConfig(min_replicas=1, up_skew=100.0,
+                                   down_share=0.35, cooldown=0))
+    # replica 2 got 2% of traffic and nothing drifted: drain into the
+    # next-coldest (replica 1)
+    d = a.observe([_sig(0, 500), _sig(1, 480), _sig(2, 20)])
+    assert d.action == "down" and d.rid == 2 and d.peer == 1
+    # same shape but drift alarms present: never shed capacity mid-drift
+    a2 = Autoscaler(AutoscaleConfig(min_replicas=1, up_skew=100.0,
+                                    up_drift=100.0, cooldown=0))
+    d = a2.observe([_sig(0, 500), _sig(1, 480), _sig(2, 20, alarms=1)])
+    assert d.action == "hold"
+
+
+def test_policy_respects_bounds_and_cooldown():
+    a = Autoscaler(AutoscaleConfig(min_replicas=2, max_replicas=2,
+                                   up_skew=1.0, down_share=0.9,
+                                   cooldown=0))
+    d = a.observe([_sig(0, 1000), _sig(1, 1)])   # skewed AND cold, but n
+    assert d.action == "hold"                    # is pinned to [2, 2]
+    b = Autoscaler(AutoscaleConfig(max_replicas=8, up_skew=1.0, cooldown=2))
+    assert b.observe([_sig(0, 100), _sig(1, 10)]).action == "up"
+    assert b.observe([_sig(0, 300), _sig(1, 20)]).reason == "cooldown"
+    assert b.observe([_sig(0, 600), _sig(1, 30)]).reason == "cooldown"
+    assert b.observe([_sig(0, 1000), _sig(1, 40)]).action == "up"
+
+
+def test_policy_needs_two_components_to_split():
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, up_skew=1.0,
+                                   down_share=0.0, cooldown=0))
+    d = a.observe([_sig(0, 100, active_k=1), _sig(1, 1, active_k=1)])
+    assert d.action == "hold"
+
+
+def test_policy_state_roundtrips_through_export():
+    a = Autoscaler(AutoscaleConfig(up_skew=1.0, cooldown=2))
+    a.observe([_sig(0, 100), _sig(1, 50)])
+    b = Autoscaler(AutoscaleConfig(up_skew=1.0, cooldown=2))
+    b.load_state(a.export_state())
+    sigs = [_sig(0, 400), _sig(1, 60)]
+    assert a.observe(sigs) == b.observe(sigs)
+    assert a.export_state() == b.export_state()
+
+
+# ---------------------------------------------------------------------------
+# fidelity + determinism (example-based; hypothesis variants below)
+# ---------------------------------------------------------------------------
+
+def _autoscaled(cfg, **auto_kw):
+    kw = dict(min_replicas=1, max_replicas=3, up_skew=1.0, cooldown=1)
+    kw.update(auto_kw)
+    return FleetCoordinator(
+        cfg, FleetConfig(n_replicas=1, consolidate_every=1,
+                         autoscale=AutoscaleConfig(**kw)),
+        RuntimeConfig(chunk=64))
+
+
+def test_autoscaled_fleet_ll_matches_fixed_single_replica():
+    """The fidelity contract: growing the fleet mid-stream must not cost
+    held-out likelihood vs the fixed 1-replica deployment."""
+    x = _stream(n=1200, seed=8)
+    held = _stream(n=400, seed=9)
+    cfg = _cfg(x)
+    fixed = FleetCoordinator(
+        cfg, FleetConfig(n_replicas=1, consolidate_every=1),
+        RuntimeConfig(chunk=64))
+    auto = _autoscaled(cfg)
+    for lo in range(0, 1200, 200):
+        fixed.ingest(x[lo:lo + 200])
+        auto.ingest(x[lo:lo + 200])
+    assert auto.n_replicas > 1, "autoscaler never fired"
+    ll_fixed = float(jnp.mean(fixed.score(held)))
+    ll_auto = float(jnp.mean(auto.score(held)))
+    fixed.close()
+    auto.close()
+    assert np.isfinite(ll_auto)
+    assert abs(ll_auto - ll_fixed) < 0.5, (ll_auto, ll_fixed)
+
+
+def test_decision_sequence_is_seeded_deterministic():
+    x = _stream(seed=10)
+    cfg = _cfg(x)
+    runs = []
+    for _ in range(2):
+        fleet = _autoscaled(cfg)
+        for lo in range(0, x.shape[0], 150):
+            fleet.ingest(x[lo:lo + 150])
+        runs.append([(e.round_idx, e.action, e.rid, e.peer, e.reason)
+                     for e in fleet.telemetry.scale_events])
+        ids = list(fleet.replica_ids)
+        fleet.close()
+    assert runs[0] == runs[1]
+    assert runs[0], "policy should have fired at least once"
+    assert len(ids) == len(set(ids))
+
+
+# ---------------------------------------------------------------------------
+# whole-cut checkpoint/resume across scale events  (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_across_scale_event_is_whole_cut(tmp_path):
+    x = _stream(n=1000, modes=4, seed=11)
+    cfg = _cfg(x, kmax=12, vmin=20.0, spmin=1.0)
+
+    def build():
+        return FleetCoordinator(
+            cfg,
+            FleetConfig(n_replicas=1, consolidate_every=1,
+                        checkpoint_dir=str(tmp_path),
+                        autoscale=AutoscaleConfig(max_replicas=3,
+                                                  up_skew=1.0,
+                                                  cooldown=1)),
+            RuntimeConfig(chunk=50,
+                          lifecycle=LifecycleConfig(k_budget=8, every=4),
+                          drift=DriftConfig(window=6, threshold=6.0,
+                                            min_chunks=3)))
+
+    fleet = build()
+    for lo in range(0, 800, 200):
+        fleet.ingest(x[lo:lo + 200])
+    assert fleet.epoch >= 1, "no scale event before the checkpoint"
+    fleet.checkpoint()
+
+    fresh = build()                   # configured at 1 replica...
+    assert fresh.resume()             # ...rebuilds the manifest's 3
+    assert fresh.replica_ids == fleet.replica_ids
+    assert fresh.epoch == fleet.epoch
+    assert fresh._next_id == fleet._next_id
+    assert fresh.router.export_state() == fleet.router.export_state()
+    assert (fresh.autoscaler.export_state()
+            == fleet.autoscaler.export_state())
+    for a, b in zip(fleet.replicas, fresh.replicas):
+        assert b.chunk_idx == a.chunk_idx
+        for leaf in ("mu", "lam", "logdet", "sp", "v", "active"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.state, leaf)),
+                np.asarray(getattr(b.state, leaf)), err_msg=leaf)
+    # both fleets continue IDENTICALLY: same routing, same decisions
+    n_before = len(fleet.telemetry.scale_events)
+    fleet.ingest(x[800:])
+    fresh.ingest(x[800:])
+    assert fresh.replica_ids == fleet.replica_ids
+
+    def key(ev):                     # wall_s is timing, not semantics
+        return (ev.round_idx, ev.epoch, ev.action, ev.rid, ev.peer,
+                ev.n_replicas, ev.active_moved, ev.sp_mass_before,
+                ev.sp_mass_after, ev.merges, ev.reason)
+    assert ([key(e) for e in fresh.telemetry.scale_events]
+            == [key(e) for e in fleet.telemetry.scale_events[n_before:]])
+    for a, b in zip(fleet.replicas, fresh.replicas):
+        np.testing.assert_array_equal(np.asarray(a.state.lam),
+                                      np.asarray(b.state.lam))
+    fleet.close()
+    fresh.close()
+
+
+# ---------------------------------------------------------------------------
+# FleetTelemetry: immutable snapshots under concurrency  (the race fix)
+# ---------------------------------------------------------------------------
+
+def _cev(i):
+    return ConsolidationEvent(round_idx=i, version=i + 1, topology="star",
+                              n_states_in=2, active_in=4, active_out=4,
+                              merges=1, sp_mass=1.0)
+
+
+def test_telemetry_readers_never_see_half_applied_events():
+    """One writer appends events; reader threads hammer summary().  Every
+    snapshot must be internally consistent: the event count equals the
+    last event's version (they are updated in ONE atomic swap — the old
+    read-modify-write fields could disagree mid-update)."""
+    tel = FleetTelemetry(capacity=4096)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            s = tel.summary([], {})
+            if s["consolidations"] != s["snapshot_version"]:
+                errors.append((s["consolidations"],
+                               s["snapshot_version"]))
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for i in range(2000):
+        tel.record_consolidation(_cev(i))
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, f"inconsistent snapshots observed: {errors[:3]}"
+    assert tel.total_consolidations == 2000
+
+
+def test_telemetry_concurrent_writers_lose_no_updates():
+    tel = FleetTelemetry(capacity=64)
+    n_threads, per = 8, 250
+
+    def writer(tid):
+        for i in range(per):
+            tel.record_consolidation(_cev(tid * per + i))
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = tel.snapshot()
+    assert snap.total_consolidations == n_threads * per
+    assert snap.total_merges == n_threads * per      # 1 merge per event
+    assert len(snap.events) == 64                    # capacity bound held
+
+
+def test_telemetry_snapshot_is_frozen():
+    tel = FleetTelemetry()
+    tel.record_consolidation(_cev(0))
+    snap = tel.snapshot()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        snap.total_consolidations = 99
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        snap.events[0].merges = 99
+    assert isinstance(snap.events, tuple)
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants (hypothesis; shared strategies in conftest.py)
+#
+# NOT a module-level importorskip: the example-based conformance tests
+# above must run even where hypothesis is absent (requirements-dev.txt
+# installs it in CI's `property` job).
+# ---------------------------------------------------------------------------
+
+if not conftest.HAVE_HYPOTHESIS:
+    @pytest.mark.property
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_fleet_invariants():
+        """Placeholder so the skipped property suite stays visible."""
+else:
+    from hypothesis import HealthCheck, given, settings
+
+    _SETTINGS = dict(max_examples=8, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow,
+                                            HealthCheck.data_too_large])
+
+
+    @pytest.mark.property
+    @given(data=conftest.fleet_streams(), schedule=conftest.scale_schedules())
+    @settings(**_SETTINGS)
+    def test_property_scale_schedule_conserves_mass(data, schedule):
+        """For ANY stream and ANY interleaved scale-event schedule: every
+        scale-up conserves the fleet-wide active-sp multiset exactly, every
+        scale-down conserves fsum(sp) to ≤1e-6 relative, and membership
+        bookkeeping (ids unique, router counts total) stays consistent."""
+        x, _ = data
+        cfg = _cfg(x, kmax=8)
+        fleet = FleetCoordinator(
+            cfg, FleetConfig(n_replicas=1, consolidate_every=0),
+            RuntimeConfig(chunk=48))
+        seg = max(x.shape[0] // (len(schedule) + 1), 1)
+        try:
+            fleet.ingest(x[:seg])
+            for k, (action, sel) in enumerate(schedule):
+                n = fleet.n_replicas
+                before_set = _active_sp_multiset(
+                    [r.state for r in fleet.replicas])
+                before_sum = _fleet_mass(fleet)
+                if action == "up" and n < 5:
+                    if fleet.scale_up(fleet.replica_ids[sel % n]):
+                        np.testing.assert_array_equal(
+                            before_set, _active_sp_multiset(
+                                [r.state for r in fleet.replicas]))
+                elif action == "down" and n > 1:
+                    rid = fleet.replica_ids[sel % n]
+                    peer = fleet.replica_ids[(sel + 1) % n]
+                    fleet.scale_down(rid, peer)
+                    np.testing.assert_allclose(
+                        _fleet_mass(fleet), before_sum, rtol=1e-6)
+                assert len(set(fleet.replica_ids)) == fleet.n_replicas
+                assert sum(fleet.router.counts()) == (k + 1) * seg
+                fleet.ingest(x[(k + 1) * seg:(k + 2) * seg])
+        finally:
+            fleet.close()
+
+
+    @pytest.mark.property
+    @given(data=conftest.fleet_streams(min_points=200))
+    @settings(**_SETTINGS)
+    def test_property_decisions_deterministic(data):
+        """Seeded determinism: identical stream + config ⇒ identical decision
+        sequence and final membership, for hypothesis-drawn streams."""
+        x, _ = data
+        cfg = _cfg(x)
+        traces = []
+        for _ in range(2):
+            fleet = _autoscaled(cfg, max_replicas=4, cooldown=0)
+            try:
+                for lo in range(0, x.shape[0], 80):
+                    fleet.ingest(x[lo:lo + 80])
+                traces.append((
+                    [(e.round_idx, e.action, e.rid, e.peer)
+                     for e in fleet.telemetry.scale_events],
+                    list(fleet.replica_ids)))
+            finally:
+                fleet.close()
+        assert traces[0] == traces[1]
+
+
+    @pytest.mark.property
+    @given(data=conftest.fleet_streams(min_points=240, max_modes=3))
+    @settings(max_examples=4, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_property_autoscaled_ll_within_tolerance_of_single(data):
+        """Held-out LL of an autoscaled fleet tracks the fixed 1-replica run
+        for arbitrary hypothesis-drawn clustered streams."""
+        x, _ = data
+        # hold out the stream's own tail — same distribution by
+        # construction, whatever centers the strategy drew
+        x, held = x[:-80], x[-80:]
+        cfg = _cfg(x)
+        fixed = FleetCoordinator(
+            cfg, FleetConfig(n_replicas=1, consolidate_every=1),
+            RuntimeConfig(chunk=64))
+        auto = _autoscaled(cfg)
+        try:
+            for lo in range(0, x.shape[0], 80):
+                fixed.ingest(x[lo:lo + 80])
+                auto.ingest(x[lo:lo + 80])
+            ll_fixed = float(jnp.mean(fixed.score(held)))
+            ll_auto = float(jnp.mean(auto.score(held)))
+        finally:
+            fixed.close()
+            auto.close()
+        assert np.isfinite(ll_auto)
+        assert abs(ll_auto - ll_fixed) < 0.75, (ll_auto, ll_fixed)

@@ -9,7 +9,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import figmn, igmn_ref
+pytestmark = pytest.mark.property          # CI `property` job
+
+from repro.core import figmn, igmn_ref  # noqa: E402
 from repro.core.types import FIGMNConfig
 
 _settings = dict(max_examples=25, deadline=None)

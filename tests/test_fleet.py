@@ -15,6 +15,8 @@ from repro.fleet import (FleetConfig, FleetCoordinator, RouterConfig,
                          ShardRouter, sp_mass)
 from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
 
+pytestmark = pytest.mark.fleet             # CI `fleet` job
+
 
 def _stream(n=1200, d=4, modes=3, seed=0, spread=6.0, centers_seed=0):
     """Points from a fixed mixture: centers_seed pins the distribution,

@@ -1,0 +1,209 @@
+"""Router conformance: the properties each policy guarantees, parametrized
+across replica counts AND across the membership changes autoscaling
+introduces (grow/shrink remaps).
+
+  hash         content-addressed (stable under arrival-order permutation),
+               stable across coordinator restarts (export/load round-trip),
+               and — the consistent-hashing contract — membership changes
+               remap ONLY the arcs the new/removed replica owns.
+  round_robin  exactly balanced, including the batches after a grow or a
+               shrink.
+  affinity     bounded load skew on clustered streams; centroid handoff on
+               grow routes the handed-off region to the new replica.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet import RouterConfig, ShardRouter
+
+pytestmark = pytest.mark.fleet
+
+NS = [2, 3, 5, 8]
+
+
+def _points(n=256, d=3, seed=0, spread=1.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, spread, (n, d)).astype(np.float32)
+
+
+def _assign(router: ShardRouter, x: np.ndarray) -> np.ndarray:
+    """Flatten route()'s per-replica index lists back to one (N,) map."""
+    out = np.full(x.shape[0], -1, np.int64)
+    for pos, idx in enumerate(router.route(x)):
+        out[idx] = pos
+    assert (out >= 0).all()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# hash: content addressing, restart stability, minimal remap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", NS)
+def test_hash_stable_under_arrival_order_permutation(n):
+    x = _points(seed=1)
+    perm = np.random.default_rng(2).permutation(x.shape[0])
+    a1 = _assign(ShardRouter(RouterConfig(policy="hash", seed=3), n), x)
+    a2 = _assign(ShardRouter(RouterConfig(policy="hash", seed=3), n),
+                 x[perm].copy())
+    np.testing.assert_array_equal(a1[perm], a2)
+
+
+@pytest.mark.parametrize("n", NS)
+def test_hash_stable_across_coordinator_restart(n):
+    """A restarted router (fresh object + load_state) must route the rest
+    of the stream exactly as the uninterrupted one would."""
+    x = _points(seed=4)
+    r1 = ShardRouter(RouterConfig(policy="hash", seed=5), n)
+    a_first = _assign(r1, x[:128])
+    r2 = ShardRouter(RouterConfig(policy="hash", seed=5), n)
+    r2.load_state(r1.export_state())
+    np.testing.assert_array_equal(_assign(r1, x[128:]),
+                                  _assign(r2, x[128:]))
+    assert r1.export_state() == r2.export_state()
+    # and restart stability survives a membership change
+    r1.grow(rid=n)
+    r3 = ShardRouter(RouterConfig(policy="hash", seed=5), n)
+    r3.load_state(r1.export_state())
+    np.testing.assert_array_equal(_assign(r1, x), _assign(r3, x))
+
+
+@pytest.mark.parametrize("n", NS)
+def test_hash_grow_remaps_only_to_the_new_replica(n):
+    """THE consistent-hashing property: adding a replica may only move a
+    point TO the new replica — no existing-to-existing churn — and the
+    moved fraction stays near 1/(n+1), not the ~n/(n+1) a fixed modulus
+    reshuffles."""
+    x = _points(n=512, seed=6)
+    r = ShardRouter(RouterConfig(policy="hash", seed=7), n)
+    before = _assign(r, x)
+    new_pos = r.grow(rid=n)
+    after = _assign(r, x)
+    moved = before != after
+    assert (after[moved] == new_pos).all(), \
+        "a grow remapped traffic between PRE-EXISTING replicas"
+    frac = moved.mean()
+    assert 0 < frac < 3.0 / (n + 1), frac
+
+
+@pytest.mark.parametrize("n", [2, 3, 5])
+def test_hash_shrink_remaps_only_the_removed_replicas_points(n):
+    x = _points(n=512, seed=8)
+    r = ShardRouter(RouterConfig(policy="hash", seed=9), n)
+    before = _assign(r, x)
+    removed = r.n - 1                     # drop the LAST position: other
+    r.shrink(removed, into=0)             # positions keep their indices
+    after = _assign(r, x)
+    untouched = before != removed
+    np.testing.assert_array_equal(before[untouched], after[untouched])
+    # the removed replica's keys actually existed and were redistributed
+    # across the survivors
+    orphaned = before == removed
+    assert orphaned.any()
+    assert ((after[orphaned] >= 0) & (after[orphaned] < r.n)).all()
+
+
+@pytest.mark.parametrize("n", NS)
+def test_hash_counts_fold_on_shrink(n):
+    x = _points(n=200, seed=10)
+    r = ShardRouter(RouterConfig(policy="hash", seed=11), n)
+    r.route(x)
+    total = sum(r.counts())
+    cold = r.n - 1
+    absorbed = r.counts()[cold]
+    into_before = r.counts()[0]
+    r.shrink(cold, into=0)
+    assert sum(r.counts()) == total == x.shape[0]
+    assert r.counts()[0] == into_before + absorbed
+
+
+# ---------------------------------------------------------------------------
+# round_robin: exact balance through membership changes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", NS)
+def test_round_robin_exactly_balanced(n):
+    r = ShardRouter(RouterConfig(policy="round_robin"), n)
+    r.route(_points(n=7 * n + 3, seed=12))
+    r.route(_points(n=5 * n + 1, seed=13))
+    counts = r.counts()
+    assert sum(counts) == 12 * n + 4
+    assert max(counts) - min(counts) <= 1
+
+
+@pytest.mark.parametrize("n", [2, 3, 5])
+@pytest.mark.parametrize("change", ["grow", "shrink"])
+def test_round_robin_balanced_after_membership_change(n, change):
+    r = ShardRouter(RouterConfig(policy="round_robin"), n)
+    r.route(_points(n=4 * n + 2, seed=14))
+    base = np.asarray(r.counts() + [0]) if change == "grow" else None
+    if change == "grow":
+        r.grow(rid=n)
+    else:
+        r.shrink(r.n - 1, into=0)
+        base = np.asarray(r.counts())
+    m = r.n
+    r.route(_points(n=6 * m + 1, seed=15))
+    delta = np.asarray(r.counts()) - base
+    assert delta.sum() == 6 * m + 1
+    assert delta.max() - delta.min() <= 1     # the NEW batch is balanced
+
+
+# ---------------------------------------------------------------------------
+# affinity: bounded skew on clustered traffic + centroid handoff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8])
+def test_affinity_load_skew_bounded_on_clustered_stream(n):
+    """n equal-mass, well-separated clusters: every replica should own
+    ~one cluster, so max load stays within 1.6× the mean."""
+    rng = np.random.default_rng(16)
+    centers = rng.normal(0, 40.0, (n, 3))
+    lab = rng.integers(0, n, 240 * n)
+    x = (centers[lab] + rng.normal(0, 1.0, (lab.size, 3))).astype(
+        np.float32)
+    r = ShardRouter(RouterConfig(policy="affinity"), n)
+    r.route(x)
+    counts = np.asarray(r.counts(), np.float64)
+    assert counts.max() / counts.mean() <= 1.6, counts
+
+
+def test_affinity_grow_centroid_handoff_routes_region():
+    """After a grow with a handed-off centroid, traffic from that region
+    must flow to the new replica (the split pool's data keeps landing on
+    the runtime that now owns those components)."""
+    rng = np.random.default_rng(17)
+    a, b = np.array([-30.0, 0, 0]), np.array([30.0, 0, 0])
+    x0 = np.concatenate([a + rng.normal(0, 1, (60, 3)),
+                         b + rng.normal(0, 1, (60, 3))]).astype(np.float32)
+    r = ShardRouter(RouterConfig(policy="affinity"), 2)
+    r.route(x0)                      # seed centroids near a and b
+    c = np.array([0.0, 50.0, 0.0])   # a NEW region appears
+    pos = r.grow(rid=2, centroid=c)
+    xc = (c + rng.normal(0, 1, (80, 3))).astype(np.float32)
+    assign = _assign(r, xc)
+    assert (assign == pos).mean() > 0.95
+    # the old regions keep flowing to their original owners
+    xa = (a + rng.normal(0, 1, (40, 3))).astype(np.float32)
+    assert (_assign(r, xa) == 0).mean() > 0.95
+
+
+def test_affinity_grow_requires_centroid_once_seeded():
+    r = ShardRouter(RouterConfig(policy="affinity"), 2)
+    r.route(_points(n=32, seed=18))          # centroids now seeded
+    with pytest.raises(ValueError, match="centroid"):
+        r.grow(rid=2)
+    r2 = ShardRouter(RouterConfig(policy="affinity"), 2)
+    r2.grow(rid=2)                           # unseeded: allowed (defers)
+    assert r2.n == 3
+
+
+def test_shrink_guards():
+    r = ShardRouter(RouterConfig(policy="round_robin"), 1)
+    with pytest.raises(ValueError):
+        r.shrink(0, into=0)
+    r2 = ShardRouter(RouterConfig(policy="round_robin"), 2)
+    with pytest.raises(ValueError):
+        r2.shrink(1, into=1)
+    with pytest.raises(ValueError, match="already routed"):
+        r2.grow(rid=0)

@@ -8,7 +8,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.models import ssm, xlstm
+pytestmark = pytest.mark.property          # CI `property` job
+
+from repro.models import ssm, xlstm  # noqa: E402
 
 
 def test_ssm_scan_matches_naive_recurrence():
