@@ -23,13 +23,16 @@ N_POINTS = 24
 
 
 def _bench(mod, cfg, x) -> float:
-    state = mod.init_state(cfg)
-    fit = lambda: jax.block_until_ready(mod.fit(cfg, state, x))
-    fit()
+    # figmn.fit donates its state (the chunk-ingest jits reuse the Λ buffer
+    # in place), so each call consumes a pre-built state from this pool —
+    # timing stays free of init_state overhead
+    states = [mod.init_state(cfg) for _ in range(4)]
+    fit = lambda s: jax.block_until_ready(mod.fit(cfg, s, x))
+    fit(states[0])
     ts = []
-    for _ in range(3):
+    for s in states[1:]:
         t0 = time.perf_counter()
-        fit()
+        fit(s)
         ts.append(time.perf_counter() - t0)
     return min(ts) / x.shape[0]
 

@@ -1,0 +1,216 @@
+"""Top-C shortlist vs dense hot paths → BENCH_sparse.json.
+
+Measures BOTH sublinear paths against their dense counterparts at each
+(K, D, C):
+
+  ingest   points/sec of ``core.shortlist.fit_sparse`` (O(K·D + C·D²) per
+           point) vs ``core.figmn.fit`` (the dense scan, O(K·D²));
+  serving  scores/sec of ``core.shortlist.score_batch_sparse`` (tiled
+           (B, K) bound pass + (B, C) exact pass) vs ``figmn.score_batch``
+           (the dense batched pass);
+
+plus the fidelity witnesses the speedup is conditional on: held-out mean
+log-likelihood of the sparse-ingested model under the sparse scorer vs the
+dense pipeline (the acceptance bar is |Δ| ≤ 1e-2 nats at K=256, D=32,
+C=8), and a C=K bit-identity check against the dense scan on a short
+segment (the exactness contract, also pinned in tests/test_shortlist.py).
+
+The committed smoke baseline (benchmarks/baselines/) gates CI: a >2×
+regression of the smoke sparse-ingest rate fails the build (``--check``).
+
+Run:    PYTHONPATH=src python -m benchmarks.figmn_sparse [--smoke]
+Gate:   PYTHONPATH=src python -m benchmarks.figmn_sparse \
+            --check BENCH_sparse.json \
+            --baseline benchmarks/baselines/BENCH_sparse_smoke.json
+(or via ``python -m benchmarks.run figmn_sparse [--smoke]``)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn, shortlist
+from repro.core.types import FIGMNConfig
+from repro.stream import ingest
+
+#: (K, D, [C...]) sweep; the acceptance point is (256, 32, C=8).
+SWEEP = [(64, 16, (4, 8)), (256, 32, (4, 8, 16))]
+SMOKE_SWEEP = [(32, 8, (4,))]
+N_POINTS = 1024
+N_SMOKE = 256
+N_SERVE = 4096
+N_SERVE_SMOKE = 512
+N_HELD = 512
+N_BITIDENT = 192
+
+
+def _stream(n: int, d: int, modes: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 8.0, (modes, d))
+    x = centers[rng.integers(0, modes, n)] + rng.normal(0, 1.0, (n, d))
+    return x.astype(np.float32)
+
+
+def _cfg(x: np.ndarray, kmax: int, c: int = 0) -> FIGMNConfig:
+    return FIGMNConfig(kmax=kmax, dim=x.shape[1], beta=0.1, delta=1.0,
+                       vmin=1e9, spmin=0.0, update_mode="exact",
+                       shortlist_c=c,
+                       sigma_ini=figmn.sigma_from_data(jnp.asarray(x), 1.0))
+
+
+def _time_fit(fit_fn, cfg, x, reps: int = 3) -> float:
+    """Best-of-reps wall time for one full single-pass fit.  The fit jits
+    DONATE their state, so every call consumes a fresh init_state (built
+    outside the timed region)."""
+    states = [figmn.init_state(cfg) for _ in range(reps + 1)]
+    jax.block_until_ready(fit_fn(cfg, states[0], x))     # compile
+    ts = []
+    for s in states[1:]:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fit_fn(cfg, s, x))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _time_score(score_fn, cfg, state, xs, reps: int = 3) -> float:
+    jax.block_until_ready(score_fn(cfg, state, xs))      # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(score_fn(cfg, state, xs))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(out_path: str = "BENCH_sparse.json", quick: bool = False) -> Dict:
+    sweep = SMOKE_SWEEP if quick else SWEEP
+    n = N_SMOKE if quick else N_POINTS
+    n_serve = N_SERVE_SMOKE if quick else N_SERVE
+    rows: List[Dict] = []
+    for kmax, d, cs in sweep:
+        # enough points per mode that both pipelines converge to the same
+        # mixture — the LL-gap witness measures truncation error, not
+        # creation-order noise on an underfit pool
+        modes = min(max(kmax // 4, 2), 16)
+        x = _stream(n, d, modes)
+        held = jnp.asarray(_stream(N_HELD, d, modes, seed=7))
+        serve = jnp.asarray(_stream(n_serve, d, modes, seed=11))
+        xj = jnp.asarray(x)
+
+        dense_cfg = _cfg(x, kmax)
+        dense_fit_s = _time_fit(
+            lambda c_, s_, x_: figmn.fit(c_, s_, x_), dense_cfg, xj)
+        dense_state = figmn.fit(dense_cfg, figmn.init_state(dense_cfg), xj)
+        # the dense serving baseline is the JITTED production read path
+        # (what ScoringFrontend/StreamRuntime.score actually run dense) —
+        # timing the eager score_batch would inflate the sparse speedup
+        dense_score_s = _time_score(ingest.score_batch_jit, dense_cfg,
+                                    dense_state, serve)
+        ll_dense = float(jnp.mean(figmn.score_batch(dense_cfg, dense_state,
+                                                    held)))
+
+        # exactness witness: C=K sparse ≡ dense scan on a short segment
+        ck_cfg = _cfg(x, kmax, c=kmax)
+        seg = xj[:N_BITIDENT]
+        ref = figmn.fit(ck_cfg, figmn.init_state(ck_cfg), seg)
+        got = shortlist.fit_sparse(ck_cfg, figmn.init_state(ck_cfg), seg)
+        ck_bitident = all(
+            np.array_equal(np.asarray(getattr(ref, f)),
+                           np.asarray(getattr(got, f)))
+            for f in ("mu", "lam", "logdet", "sp", "v", "active"))
+
+        for c in cs:
+            cfg = _cfg(x, kmax, c=c)
+            sparse_fit_s = _time_fit(shortlist.fit_sparse, cfg, xj)
+            sparse_state = shortlist.fit_sparse(
+                cfg, figmn.init_state(cfg), xj)
+            sparse_score_s = _time_score(
+                lambda c_, s_, x_: shortlist.score_batch_sparse(c_, s_, x_),
+                cfg, sparse_state, serve)
+            ll_sparse = float(jnp.mean(shortlist.score_batch_sparse(
+                cfg, sparse_state, held)))
+            row = {
+                "k": kmax, "d": d, "c": c, "n": n, "n_serve": n_serve,
+                "ingest_dense_pts_s": n / dense_fit_s,
+                "ingest_sparse_pts_s": n / sparse_fit_s,
+                "ingest_speedup": dense_fit_s / sparse_fit_s,
+                "serve_dense_scores_s": n_serve / dense_score_s,
+                "serve_sparse_scores_s": n_serve / sparse_score_s,
+                "serve_speedup": dense_score_s / sparse_score_s,
+                "ll_dense": ll_dense, "ll_sparse": ll_sparse,
+                "ll_gap": ll_sparse - ll_dense,
+                "ck_bitident": bool(ck_bitident),
+                "active_k_dense": int(dense_state.n_active),
+                "active_k_sparse": int(sparse_state.n_active),
+            }
+            rows.append(row)
+            print(f"K={kmax:4d} D={d:3d} C={c:3d}: ingest "
+                  f"{row['ingest_sparse_pts_s']:9.0f} vs dense "
+                  f"{row['ingest_dense_pts_s']:9.0f} pts/s "
+                  f"({row['ingest_speedup']:.1f}x) | serve "
+                  f"{row['serve_sparse_scores_s']:9.0f} vs "
+                  f"{row['serve_dense_scores_s']:9.0f} scores/s "
+                  f"({row['serve_speedup']:.1f}x) | ll_gap "
+                  f"{row['ll_gap']:+.4f} | C=K bitident={ck_bitident}")
+
+    doc = {"benchmark": "figmn_sparse",
+           "backend": jax.default_backend(),
+           "smoke": quick,
+           "rows": rows}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return doc
+
+
+def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
+    """CI gate: fail when the smoke sparse-ingest rate fell more than
+    ``factor``× below the committed baseline."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    brow, rrow = bench["rows"][0], base["rows"][0]
+    # the gate is only meaningful row-against-same-row: refuse to compare
+    # a full-sweep file against the smoke baseline (different K/D/C)
+    key = lambda r: (r["k"], r["d"], r["c"])
+    if key(brow) != key(rrow) or bench.get("smoke") != base.get("smoke"):
+        print(f"gate mismatch: bench row {key(brow)} "
+              f"(smoke={bench.get('smoke')}) vs baseline row {key(rrow)} "
+              f"(smoke={base.get('smoke')}) — regenerate the bench with "
+              f"--smoke before gating")
+        return False
+    got = float(brow["ingest_sparse_pts_s"])
+    ref = float(rrow["ingest_sparse_pts_s"])
+    floor = ref / factor
+    ok = got >= floor
+    verdict = "OK" if ok else "REGRESSION"
+    print(f"sparse smoke ingest: {got:.0f} pts/s vs committed baseline "
+          f"{ref:.0f} (floor {floor:.0f}) — {verdict}")
+    return ok
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="gate mode: compare BENCH_JSON against --baseline "
+                         "instead of running the benchmark")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_sparse_smoke.json")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(0 if check(args.check, args.baseline) else 1)
+    main(smoke=args.smoke)

@@ -13,6 +13,10 @@ CSV convention: ``name,us_per_call,derived``.
                     replicas-over-time, throughput, conservation-witnessed
                     scale events → BENCH_autoscale.json (CI-gated against
                     benchmarks/baselines/)
+  figmn_sparse    — top-C shortlist vs dense hot paths: ingest points/sec
+                    + serving scores/sec + held-out LL gap per (K, D, C)
+                    → BENCH_sparse.json (CI-gated against
+                    benchmarks/baselines/)
   lm_bench        — reduced-config LM substrate step times
   roofline        — §Roofline terms per (arch × shape) from the dry-run
                     artifacts (run repro.launch.dryrun --all first)
@@ -34,8 +38,8 @@ import traceback
 #: every registered benchmark module under benchmarks/; each exposes
 #: ``main(smoke: bool = False)`` where smoke runs a tiny-size subset.
 REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
-            "figmn_runtime", "figmn_fleet", "figmn_autoscale", "lm_bench",
-            "roofline")
+            "figmn_runtime", "figmn_fleet", "figmn_autoscale",
+            "figmn_sparse", "lm_bench", "roofline")
 
 
 def _section(name: str, smoke: bool) -> bool:

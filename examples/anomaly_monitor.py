@@ -19,7 +19,11 @@ layers of the same incremental-GMM machinery watch it:
     ONE replica and grows itself off its own telemetry
     (FleetConfig.autoscale): every scale event is mass-conserving (the
     event log carries sp_mass before/after as a witness), and the scaled
-    fleet still scores like the single runtime.
+    fleet still scores like the single runtime;
+  * shortlisted: the same stream once more through the top-C sparse hot
+    path (core.shortlist): cfg.shortlist_c > 0 makes both ingest and
+    score() O(K·D + C·D²) per point instead of O(K·D²) — bit-identical to
+    the dense scan at C ≥ K, tolerance-close at small C.
 
 Injected events: a gradual loss drift (must NOT alarm), one divergence
 spike (must alarm — both layers), one host turning persistently slow (must
@@ -27,6 +31,8 @@ be evicted).
 
 Run:  PYTHONPATH=src python examples/anomaly_monitor.py
 """
+import dataclasses
+
 import numpy as np
 
 from repro.ft.anomaly import AnomalyDetector
@@ -95,6 +101,31 @@ def main():
     assert all(s >= 100 for s in drift_steps), drift_steps   # decay: silent
     assert any(100 <= s <= 160 for s in drift_steps), drift_steps  # NIC
     assert any(180 <= s <= 240 for s in drift_steps), drift_steps  # spike
+
+    # -- the same stream through the TOP-C SHORTLISTED hot path -----------
+    # cfg.shortlist_c > 0 dispatches ingest to the sparse body (O(K·D)
+    # bound pass + exact work on C gathered rows) and score() to the
+    # shortlisted batched scorer.  At C >= K the shortlist contains every
+    # live component and the path is bit-identical to the dense scan;
+    # C = 2 drops only numerically-zero posterior tail mass.
+    dense_rt = StreamRuntime(fcfg, RuntimeConfig(chunk=CHUNK, path="scan"))
+    dense_rt.ingest(x)
+    exact_rt = StreamRuntime(
+        dataclasses.replace(fcfg, shortlist_c=fcfg.kmax),
+        RuntimeConfig(chunk=CHUNK))
+    exact_rt.ingest(x)
+    assert (np.asarray(exact_rt.state.lam)
+            == np.asarray(dense_rt.state.lam)).all(), \
+        "C=K shortlist must be bit-identical to the dense scan"
+    small_rt = StreamRuntime(dataclasses.replace(fcfg, shortlist_c=2),
+                             RuntimeConfig(chunk=CHUNK))
+    small_rt.ingest(x)
+    ll_dense = float(np.mean(np.asarray(dense_rt.score(x[-60:]))))
+    ll_small = float(np.mean(np.asarray(small_rt.score(x[-60:]))))
+    print(f"Shortlist: C=K bit-identical to dense; C=2 held-out logp "
+          f"{ll_small:.2f} vs dense {ll_dense:.2f} "
+          f"(O(K·D + C·D²) per point on both hot paths)")
+    assert abs(ll_dense - ll_small) < 1.0, (ll_dense, ll_small)
 
     # -- the same stream, sharded across a 2-replica fleet ---------------
     fleet = FleetCoordinator(

@@ -2,14 +2,15 @@
 
 ``figmn``    — precision-form fast algorithm (the paper, §3): O(NKD²)
 ``igmn_ref`` — covariance-form original IGMN (§2): O(NKD³) baseline
+``shortlist``— top-C sublinear hot paths: O(KD + CD²) per point/score
 ``inference``— conditional-mean supervised inference (eq. 15 / eq. 27)
 ``head``     — streaming classifier head (paper's experiments §4)
 ``sharded``  — multi-device FIGMN (components over TP axis, streams over DP)
 """
 from repro.core.types import (FIGMNConfig, FIGMNState, IGMNState,
                               chi2_quantile)
-from repro.core import figmn, igmn_ref, inference, head
+from repro.core import figmn, igmn_ref, inference, head, shortlist
 
 __all__ = ["FIGMNConfig", "FIGMNState", "IGMNState", "chi2_quantile",
-           "figmn", "igmn_ref", "inference", "head"]
+           "figmn", "igmn_ref", "inference", "head", "shortlist"]
 from repro.core import batched, merge, sharded  # noqa: F401  (public API)

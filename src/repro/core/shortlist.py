@@ -1,0 +1,372 @@
+"""Top-C component shortlists: sublinear-in-K hot paths (write AND read).
+
+The paper's precision-matrix trick (§3) got the per-point cost from
+O(K·D³) to O(K·D²), but every point still reads — and rank-one-updates —
+all K (D, D) precision blocks even though posteriors decay like
+exp(-d²/2): past a few Mahalanobis radii a component's responsibility is
+numerically zero and its "update" is the identity (ω = 0 ⇒ multiply by
+1.0, subtract 0.0 — bit-exact no-ops the dense path still pays full HBM
+traffic for).  The sublinear-GMM line (Salwig et al. 2025; Pinto & Engel
+2017) shows truncated top-C responsibility sets lose nothing statistically
+while cutting the K factor out of the heavy term.
+
+This module is that engine:
+
+  bound pass   O(K·D)   ``shortlist_scores`` — rank every slot by a cheap
+                        proxy for the unnormalised log joint: the diag(Λ)
+                        quadratic Σ_d Λ_dd (x_d - μ_d)² standing in for the
+                        full Mahalanobis form, plus the same logdet +
+                        log-prior bias the true posterior carries.  The
+                        (K, D) diag(Λ) cache rides the scan carry and is
+                        maintained by O(C·D) scatters (rebuilt O(K·D) at
+                        chunk boundaries where lifecycle may reshape Λ).
+  top-C        O(K)     ``lax.top_k`` + an index sort, so the gather is the
+                        identity permutation when C = K.
+  exact pass   O(C·D²)  the exact Mahalanobis matvec, posterior softmax and
+                        fused rank-one update (``figmn.fused_step_coeffs``)
+                        on the C gathered rows, scattered back with
+                        ``.at[idx]`` — the (K, D, D) tensor is touched on C
+                        rows instead of K.
+
+Exactness contract (tested in tests/test_shortlist.py): with C ≥ active K
+the shortlist contains every live component, the gather/scatter are
+identity permutations, and ``fit_sparse`` is BIT-IDENTICAL to the dense
+scan path (``figmn.fit``) — the same einsum signatures run on the same
+values in the same order.  For C < K the truncation zeroes exactly the
+posteriors that were already numerically zero, so held-out log-likelihood
+tracks dense within tolerance (benchmarked in benchmarks/figmn_sparse.py).
+
+The same shortlist serves the read path: ``score_batch_sparse`` runs one
+tiled (B, K) bound pass + a (B, C) exact pass, replacing the dense
+(B, K, D²) scoring sweep in ``fleet/scoring.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import figmn
+from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
+
+_LOG_2PI = figmn._LOG_2PI
+
+
+def effective_c(cfg: FIGMNConfig) -> int:
+    """The static shortlist width: cfg.shortlist_c clamped to the pool.
+
+    Also validates the config: the sparse step IS the fused formulation
+    (the shared matvec y drives gate, posterior and rank-one update), so
+    the C ≥ K bit-identity contract is stated against the dense FUSED scan
+    — cfg.fused=False (the literal eq-by-eq faithfulness knob) has no
+    sparse counterpart and is rejected rather than silently diverging.
+    """
+    if not cfg.fused:
+        raise ValueError(
+            "the shortlist path requires cfg.fused=True (its exact pass is "
+            "the fused single-matvec form; the unfused eq-by-eq "
+            "formulation exists only for the dense faithfulness tests)")
+    c = int(cfg.shortlist_c)
+    if c <= 0:
+        raise ValueError(
+            "shortlist paths need cfg.shortlist_c > 0 "
+            f"(got {cfg.shortlist_c}); 0 means 'use the dense path'")
+    return min(c, int(cfg.kmax))
+
+
+def lam_diag(state: FIGMNState) -> Array:
+    """(K, D) diag(Λ) — the bound-pass cache, O(K·D) to (re)build."""
+    return jnp.diagonal(state.lam, axis1=1, axis2=2)
+
+
+def shortlist_scores(cfg: FIGMNConfig, state: FIGMNState, diag: Array,
+                     x: Array) -> Array:
+    """(K,) proxy for the unnormalised log joint, O(K·D), -inf on inactive.
+
+    "diag" mode scores -½(log|C| + Σ_d Λ_dd δ_d²) + log sp — the true
+    posterior numerator with the diagonal quadratic standing in for the
+    full Mahalanobis form (exact when Λ is diagonal, e.g. every freshly
+    created component).  "euclid" drops the per-component bias and ranks by
+    plain squared distance.
+    """
+    diff = x[None, :] - state.mu                          # (K, D)
+    if cfg.shortlist_mode == "euclid":
+        scores = -0.5 * jnp.sum(diff * diff, axis=1)
+    elif cfg.shortlist_mode == "diag":
+        d2_diag = jnp.sum(diag * diff * diff, axis=1)
+        scores = _proxy_bias(state) - 0.5 * d2_diag
+    else:
+        raise ValueError(f"unknown shortlist_mode {cfg.shortlist_mode!r}")
+    return jnp.where(state.active, scores, -jnp.inf)
+
+
+def _proxy_bias(state: FIGMNState) -> Array:
+    """(K,) per-slot bias of the "diag" proxy: -½log|C| + log sp.
+
+    The ONE definition both rankers share — ``shortlist_scores`` (the
+    write-path gate) and ``_topc_exact_batch`` (the read-path/stats
+    shortlist) add it to their diag quadratics, so the two paths cannot
+    drift into selecting different shortlists.  (The prior's softmax
+    normaliser log Σsp is a per-state constant — rank-irrelevant, so the
+    raw log sp form is used.)
+    """
+    return -0.5 * state.logdet + jnp.log(jnp.maximum(state.sp, 1e-30))
+
+
+def topc(scores: Array, c: int) -> Array:
+    """Top-c indices, sorted ascending — at c = K the gather that follows
+    is the identity permutation, which is what makes C=K bit-identity
+    structural rather than coincidental."""
+    _, idx = jax.lax.top_k(scores, c)
+    return jnp.sort(idx)
+
+
+# ---------------------------------------------------------------------------
+# Write path: sparse learning step
+# ---------------------------------------------------------------------------
+
+def learn_one_sparse(cfg: FIGMNConfig, state: FIGMNState, diag: Array,
+                     x: Array, do_prune: bool = True
+                     ) -> Tuple[FIGMNState, Array]:
+    """One sparse learning step: O(K·D) bound pass + O(C·D²) exact work.
+
+    diag is the (K, D) diag(Λ) cache (``lam_diag``); the caller threads it
+    through the scan and rebuilds it whenever Λ changes outside this
+    function (lifecycle passes, drift responses, pool imports).
+
+    The step is deliberately BRANCH-FREE: a ``lax.cond`` over the update /
+    create bodies (the dense learn_one's structure) makes XLA materialise
+    branch-join copies of the (K, D, D) carry every point — the exact
+    full-tensor traffic the shortlist exists to avoid.  Instead both
+    outcomes are folded into predicated row writes:
+
+      * the C shortlisted rows scatter ``where(accept, updated, original)``
+        — on a gate failure the ORIGINAL GATHERED BITS are written back,
+        so the no-op is bit-exact by construction, not by arithmetic;
+      * creation (Algorithm 3) is one more predicated row write at the
+        slot figmn._create would pick — on accept it rewrites the row's
+        own post-update bits (a no-op), on failure it writes the fresh
+        (μ = x, Λ = σ_ini⁻²I) component.
+
+    Every formula is the one the dense fused path runs (posterior softmax,
+    eqs. 4–9, ``fused_step_coeffs``), so C ≥ active K stays bit-identical
+    to the dense scan.
+    """
+    c = effective_c(cfg)
+    dt = cfg.dtype
+    x = x.astype(dt)
+    thresh = chi2_quantile(cfg.dim, 1.0 - cfg.beta).astype(dt)
+    idx = topc(shortlist_scores(cfg, state, diag, x), c)
+    mu_sel = state.mu[idx]
+    diff = x[None, :] - mu_sel                            # (C, D)
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as _kops
+        y = _kops.gathered_matvec(state.lam, diff, idx)
+    else:
+        y = jnp.einsum("kde,ke->kd", state.lam[idx], diff)
+    d2 = jnp.einsum("kd,kd->k", diff, y)                  # eq. 22 on C rows
+    active_sel = state.active[idx]
+    accept = jnp.any(active_sel & (d2 < thresh))
+
+    # -- update values on the C rows (figmn._update on the gather) --------
+    logdet_sel = state.logdet[idx]
+    sp_sel = state.sp[idx]
+    logp = -0.5 * (cfg.dim * _LOG_2PI + logdet_sel + d2)
+    logw = logp + jnp.log(jnp.maximum(sp_sel, 1e-30))
+    logw = jnp.where(active_sel, logw, -jnp.inf)
+    logw = jnp.where(jnp.any(active_sel), logw, 0.0)
+    post = jax.nn.softmax(logw)
+    post = jnp.where(active_sel, post, 0.0)
+
+    sp_new_sel = sp_sel + post                            # eq. 5
+    w = post / jnp.maximum(sp_new_sel, 1e-30)             # eq. 7
+    mu_new_sel = mu_sel + w[:, None] * diff               # eqs. 8–9
+    beta, dlogdet = figmn.fused_step_coeffs(d2, w, cfg.dim, cfg.update_mode)
+    one_m_w = 1.0 - w
+    # diag(Λ) maintained analytically from the same coefficients — O(C·D),
+    # no second read of the updated rows
+    diag_sel = diag[idx]
+    yy_diag = y * y
+    if cfg.update_mode == "exact":
+        diag_new_sel = (diag_sel - beta[:, None] * yy_diag) \
+            / one_m_w[:, None]
+    else:
+        diag_new_sel = diag_sel / one_m_w[:, None] + beta[:, None] * yy_diag
+
+    # -- predicated scatter of the C rows ---------------------------------
+    acc = accept  # scalar bool broadcast below
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as _kops
+        # ω gated to 0 on failure ⇒ the kernel's a=1, b=0 row pass is a
+        # bit-exact no-op (multiply by 1.0, subtract ±0)
+        w_gated = jnp.where(acc, w, 0.0)
+        lam1, logdet1 = _kops.scatter_fused_apply(
+            state.lam, state.logdet, idx, y, d2, w_gated, cfg.dim,
+            cfg.update_mode)
+    else:
+        lam_sel = state.lam[idx]                          # (C, D, D)
+        yy = jnp.einsum("kd,ke->kde", y, y)
+        if cfg.update_mode == "exact":
+            lam_new_sel = (lam_sel - beta[:, None, None] * yy) \
+                / one_m_w[:, None, None]
+        else:
+            lam_new_sel = lam_sel / one_m_w[:, None, None] \
+                + beta[:, None, None] * yy
+        lam1 = state.lam.at[idx].set(
+            jnp.where(acc, lam_new_sel, lam_sel))
+        logdet1 = state.logdet.at[idx].set(
+            jnp.where(acc, logdet_sel + dlogdet, logdet_sel))
+    mu1 = state.mu.at[idx].set(jnp.where(acc, mu_new_sel, mu_sel))
+    sp1 = state.sp.at[idx].set(jnp.where(acc, sp_new_sel, sp_sel))
+    diag1 = diag.at[idx].set(jnp.where(acc, diag_new_sel, diag_sel))
+    v1 = state.v + jnp.where(acc, state.active.astype(dt), 0.0)  # eq. 4
+
+    # -- predicated creation write (Algorithm 3, one row) ------------------
+    free = ~state.active
+    any_free = jnp.any(free)
+    slot_weak = jnp.argmin(jnp.where(state.active, state.sp, jnp.inf))
+    slot = jnp.where(any_free, jnp.argmax(free), slot_weak)
+    sigma = jnp.broadcast_to(jnp.asarray(cfg.sigma_ini, dt), (cfg.dim,))
+    inv_var = 1.0 / (sigma * sigma)
+    lam0_row = jnp.diag(inv_var)
+    logdet0 = jnp.sum(2.0 * jnp.log(sigma))
+    mu2 = mu1.at[slot].set(jnp.where(acc, mu1[slot], x))
+    lam2 = lam1.at[slot].set(jnp.where(acc, lam1[slot], lam0_row))
+    logdet2 = logdet1.at[slot].set(jnp.where(acc, logdet1[slot], logdet0))
+    sp2 = sp1.at[slot].set(jnp.where(acc, sp1[slot], 1.0))
+    v2 = v1.at[slot].set(jnp.where(acc, v1[slot], 1.0))
+    active2 = state.active.at[slot].set(
+        jnp.where(acc, state.active[slot], True))
+    diag2 = diag1.at[slot].set(jnp.where(acc, diag1[slot], inv_var))
+    n_created2 = state.n_created + jnp.where(acc, 0, 1).astype(jnp.int32)
+
+    state = FIGMNState(mu=mu2, lam=lam2, logdet=logdet2, sp=sp2, v=v2,
+                       active=active2, n_created=n_created2)
+    if do_prune and cfg.spmin > 0:
+        state = figmn.prune(cfg, state)
+    return state, diag2
+
+
+@partial(jax.jit, static_argnames=("do_prune",), donate_argnames=("state",))
+def fit_sparse(cfg: FIGMNConfig, state: FIGMNState, xs: Array,
+               do_prune: bool = True) -> FIGMNState:
+    """Single-pass sparse fit over (N, D) — the "sparse" ingest body.
+
+    The diag(Λ) cache is built once (O(K·D)) and threaded through the scan;
+    ``state`` is donated like ``figmn.fit`` so the (K, D, D) Λ buffer is
+    reused in place across chunks.
+    """
+
+    def step(carry, x):
+        s, dg = carry
+        s, dg = learn_one_sparse(cfg, s, dg, x, do_prune=do_prune)
+        return (s, dg), None
+
+    (state, _), _ = jax.lax.scan(step, (state, lam_diag(state)),
+                                 xs.astype(cfg.dtype))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Read path: shortlisted batched scoring
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("c", "block_b"))
+def score_batch_sparse(cfg: FIGMNConfig, state: FIGMNState, xs: Array,
+                       c: int | None = None, block_b: int = 512) -> Array:
+    """(B,) mixture log-densities, O(B·K·D + B·C·D²) instead of O(B·K·D²).
+
+    One tiled (B, K) bound pass (three matmuls — no (B, K, D) intermediate)
+    ranks the slots per point; the exact Mahalanobis/log-density pass runs
+    on the (B, C) gathered rows and log-sum-exps over the shortlist.  The
+    dropped tail is exactly the numerically-zero posterior mass, so the
+    result tracks ``figmn.score_batch`` within tolerance (and matches the
+    shortlist the write path would select).  Peak memory is bounded by
+    ``block_b``·C·D² via a lax.map over B-blocks.
+    """
+    # clamp to the pool actually scored — consolidated fleet snapshots may
+    # carry global_kmax ≠ cfg.kmax slots
+    c = min(int(cfg.shortlist_c if c is None else c),
+            int(state.active.shape[0]))
+    if c <= 0:
+        raise ValueError("score_batch_sparse needs a positive shortlist "
+                         "width (cfg.shortlist_c or the c argument)")
+    xs = xs.astype(cfg.dtype)
+    n = xs.shape[0]
+    caches = _bound_caches(state)
+
+    def block(xb: Array) -> Array:
+        _, _, logjoint = _topc_exact_batch(cfg, state, caches, xb, c)
+        return jax.scipy.special.logsumexp(logjoint, axis=1)
+
+    if n <= block_b:
+        return block(xs)
+    pad = (-n) % block_b
+    xs_p = jnp.pad(xs, ((0, pad), (0, 0)))
+    out = jax.lax.map(block, xs_p.reshape(-1, block_b, xs.shape[1]))
+    return out.reshape(-1)[:n]
+
+
+def _bound_caches(state: FIGMNState
+                  ) -> Tuple[Array, Array, Array, Array, Array]:
+    """(diag(Λ), log-prior, diag·μ, Σ diag·μ², proxy bias) — the O(K·D)
+    precompute the batched bound pass shares across B-blocks."""
+    diag = lam_diag(state)
+    logprior = jnp.log(state.sp / jnp.maximum(jnp.sum(state.sp), 1e-30)
+                       + 1e-30)
+    dmu = diag * state.mu                                 # (K, D)
+    m2 = jnp.sum(dmu * state.mu, axis=1)                  # (K,)
+    return diag, logprior, dmu, m2, _proxy_bias(state)
+
+
+def _topc_exact_batch(cfg: FIGMNConfig, state: FIGMNState,
+                      caches: Tuple[Array, Array, Array, Array],
+                      xb: Array, c: int) -> Tuple[Array, Array, Array]:
+    """The ONE batched shortlisted pass every reader shares (the sparse
+    twin of ``figmn.log_joint_batch``): (B, K) bound pass → top-C gather →
+    exact (B, C) Mahalanobis/log-joint.  Returns (idx (B,C), d² (B,C),
+    log-joint (B,C) with -inf on inactive) — ``score_batch_sparse``
+    reduces the log-joint, ``chunk_stats_sparse`` additionally gates on
+    d², so the two cannot silently diverge in proxy or truncation
+    semantics."""
+    diag, logprior, dmu, m2, bias = caches
+    # diag quadratic via matmuls: Σ_d Λ_dd (x_d - μ_d)²
+    d2_diag = (xb * xb) @ diag.T - 2.0 * (xb @ dmu.T) + m2[None, :]
+    if cfg.shortlist_mode == "euclid":
+        # batched-matmul spelling of shortlist_scores' squared distance
+        proxy = -0.5 * (jnp.sum(xb * xb, axis=1)[:, None]
+                        - 2.0 * (xb @ state.mu.T)
+                        + jnp.sum(state.mu * state.mu, axis=1)[None, :])
+    else:
+        proxy = bias[None, :] - 0.5 * d2_diag   # = shortlist_scores, batched
+    proxy = jnp.where(state.active[None, :], proxy, -jnp.inf)
+    idx = jnp.sort(jax.lax.top_k(proxy, c)[1], axis=1)        # (B, C)
+    diff = xb[:, None, :] - state.mu[idx]                     # (B, C, D)
+    y = jnp.einsum("bcde,bce->bcd", state.lam[idx], diff)
+    d2 = jnp.einsum("bcd,bcd->bc", diff, y)
+    logp = -0.5 * (cfg.dim * _LOG_2PI + state.logdet[idx] + d2)
+    logjoint = jnp.where(state.active[idx], logp + logprior[idx], -jnp.inf)
+    return idx, d2, logjoint
+
+
+@jax.jit
+def chunk_stats_sparse(cfg: FIGMNConfig, state: FIGMNState, xc: Array,
+                       thresh: Array) -> Tuple[Array, Array]:
+    """Shortlisted twin of ``stream.ingest.chunk_stats``: (fails (B,) bool,
+    mean mixture log-likelihood ()) with the heavy (B, K) Mahalanobis
+    sweep truncated to the top-C rows — O(B·K·D + B·C·D²), so enabling
+    drift detection on a shortlisted runtime keeps ingest sublinear in K
+    instead of re-introducing the dense pass per chunk.  Same truncation
+    semantics as the write path: the chi² gate sees the shortlist (what
+    ``learn_one_sparse`` would gate on) and the log-density drops only
+    numerically-zero posterior tail mass.
+    """
+    c = min(int(cfg.shortlist_c), int(state.active.shape[0]))
+    xc = xc.astype(cfg.dtype)
+    idx, d2, logjoint = _topc_exact_batch(cfg, state, _bound_caches(state),
+                                          xc, c)
+    fails = ~jnp.any(state.active[idx] & (d2 < thresh), axis=1)
+    ll = jax.scipy.special.logsumexp(logjoint, axis=1)
+    return fails, jnp.mean(ll)

@@ -22,7 +22,8 @@ Array = jax.Array
 @partial(jax.tree_util.register_dataclass,
          data_fields=["sigma_ini"],
          meta_fields=["kmax", "dim", "beta", "delta", "vmin", "spmin",
-                      "dtype_str", "update_mode", "backend", "fused"])
+                      "dtype_str", "update_mode", "backend", "fused",
+                      "shortlist_c", "shortlist_mode"])
 @dataclasses.dataclass(frozen=True)
 class FIGMNConfig:
     """Static configuration (hyper-parameters from §2 of the paper).
@@ -57,6 +58,15 @@ class FIGMNConfig:
     # passes over Λ instead of 4 — see figmn.fused_step_coeffs).  Off =
     # the literal eq-by-eq formulation (kept for faithfulness tests).
     fused: bool = True
+    # Top-C component shortlists (core.shortlist): 0 disables; C > 0 makes
+    # the per-point hot path O(K·D + C·D²) instead of O(K·D²) — an O(K·D)
+    # bound pass picks C candidates, the exact Mahalanobis/posterior/rank-one
+    # work touches only those rows.  Exact by construction when C ≥ active K.
+    shortlist_c: int = 0
+    # Bound-pass proxy: "diag" ranks by the diag(Λ) quadratic plus the
+    # logdet/log-prior bias (tracks the true posterior ordering); "euclid"
+    # ranks by plain squared distance (cheaper, no per-component bias).
+    shortlist_mode: str = "diag"
     # Per-dimension initial std of the dataset (eq. 13); an estimate is fine.
     sigma_ini: Any = None
 

@@ -68,7 +68,7 @@ from repro.fleet.router import RouterConfig, ShardRouter
 from repro.fleet.scoring import ScoringFrontend
 from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
                                    ScaleEvent)
-from repro.stream import RuntimeConfig, StreamRuntime
+from repro.stream import RuntimeConfig, StreamRuntime, ingest
 
 _MANIFEST = "fleet_manifest.json"
 
@@ -121,7 +121,15 @@ class FleetCoordinator:
         self.replicas: List[StreamRuntime] = [
             StreamRuntime(cfg, self._rcfg_for_id(rid))
             for rid in self.replica_ids]
-        self.scoring = ScoringFrontend(cfg, workers=fcfg.score_workers)
+        # serving mirrors the replicas' RESOLVED ingest path: a forced
+        # dense RuntimeConfig.path must score densely too, or the fleet's
+        # two read fronts (replica.score vs coordinator.score) would
+        # disagree — the sparse score is a strict lower bound
+        resolved = ingest.select_path(cfg, vmem_budget=rcfg.vmem_budget,
+                                      requested=rcfg.path)
+        self.scoring = ScoringFrontend(
+            cfg, workers=fcfg.score_workers,
+            shortlist_c=cfg.shortlist_c if resolved == "sparse" else 0)
         self.telemetry = FleetTelemetry()
         self.autoscaler = (Autoscaler(fcfg.autoscale)
                            if fcfg.autoscale is not None else None)

@@ -15,6 +15,13 @@ reference swap.
 future: the serving front door queues scores while the coordinator is mid
 ingest (XLA releases the GIL during device compute, so worker-thread
 scoring genuinely overlaps host-side routing/lifecycle work).
+
+Scoring cost: the dense read is one (B, K) Mahalanobis sweep over the full
+(K, D, D) snapshot — O(B·K·D²).  With a shortlist width C (cfg.shortlist_c
+or the ``shortlist_c`` constructor override) the read runs
+``core.shortlist.score_batch_sparse`` instead: one tiled (B, K) bound pass
++ a (B, C) exact pass — O(B·K·D + B·C·D²), the serving-side twin of the
+sparse ingest path.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState
 from repro.stream import ingest
 
@@ -31,8 +39,13 @@ from repro.stream import ingest
 class ScoringFrontend:
     """Read-only mixture scores from the last published snapshot."""
 
-    def __init__(self, cfg: FIGMNConfig, workers: int = 2):
+    def __init__(self, cfg: FIGMNConfig, workers: int = 2,
+                 shortlist_c: Optional[int] = None):
         self.cfg = cfg
+        # serving-side shortlist width: explicit override wins, else the
+        # config's; 0 ⇒ dense scoring
+        self.shortlist_c = int(cfg.shortlist_c if shortlist_c is None
+                               else shortlist_c)
         self._lock = threading.Lock()
         self._snapshot: Optional[FIGMNState] = None
         self._version = 0
@@ -71,8 +84,12 @@ class ScoringFrontend:
         state, _ = self.snapshot()
         if state is None:
             raise RuntimeError("no consolidated snapshot published yet")
-        out = ingest.score_batch_jit(
-            self.cfg, state, jnp.asarray(xs, self.cfg.dtype))
+        xs = jnp.asarray(xs, self.cfg.dtype)
+        if self.shortlist_c > 0:
+            out = shortlist.score_batch_sparse(self.cfg, state, xs,
+                                               c=self.shortlist_c)
+        else:
+            out = ingest.score_batch_jit(self.cfg, state, xs)
         with self._lock:        # += races across pool threads otherwise
             self.served += int(out.shape[0])
         return out

@@ -1,0 +1,101 @@
+"""Pallas TPU kernels for the shortlist hot path: gathered matvec +
+aliased scatter-apply.
+
+The shortlist engine (core/shortlist.py) touches C of the K (D, D)
+precision blocks per point.  The dense kernels (figmn_update.py) stream
+the whole (K, D, D) tensor; these two stream exactly the C gathered rows,
+using scalar prefetch (``PrefetchScalarGridSpec``) so the shortlist
+indices are available to the BlockSpec index_map BEFORE the grid step runs
+— each grid step DMAs lam[idx[i]] straight from HBM, no host round-trip
+and no (K, D, D) pass:
+
+  gathered_matvec   y_i = Λ[idx_i] · diff_i          (C MXU matvecs,
+                                                      C·D² HBM reads)
+  scatter_apply     Λ[idx_i] ← Λ[idx_i]·a_i − b_i y_i y_iᵀ
+                    (C read+write row passes; the output ALIASES the input
+                    via input_output_aliases, so the K−C untouched rows are
+                    never copied — they are bit-identical by construction,
+                    which is the conservation property the scatter tests
+                    pin.)
+
+Both coefficients (a, b) absorb the exact/paper fused forms (see
+core.figmn.fused_step_coeffs):
+  exact:  Λ' = (Λ − β yyᵀ)/(1−ω)  ⇒  a = 1/(1−ω), b = β/(1−ω)
+  paper:  Λ' = Λ/(1−ω) + β yyᵀ    ⇒  a = 1/(1−ω), b = −β
+
+Shortlist indices are unique per point (top-k), so grid steps never
+overlap a row and the aliased in-place schedule is race-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gathered_matvec_kernel(idx_ref, lam_ref, diff_ref, y_ref):
+    del idx_ref                         # consumed by the index_map
+    y_ref[0] = jax.lax.dot_general(
+        lam_ref[0], diff_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gathered_matvec_pallas(lam: jax.Array, diff_sel: jax.Array,
+                           idx: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """(K,D,D),(C,D),(C,) int32 → (C,D): y_i = Λ[idx_i]·diff_i."""
+    k, d, _ = lam.shape
+    c = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+            pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)))
+    return pl.pallas_call(
+        _gathered_matvec_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, d), jnp.float32),
+        interpret=interpret,
+    )(idx, lam, diff_sel)
+
+
+def _scatter_apply_kernel(idx_ref, lam_ref, y_ref, coef_ref, out_ref):
+    del idx_ref
+    y = y_ref[0]
+    out_ref[0] = lam_ref[0] * coef_ref[0, 0] \
+        - coef_ref[0, 1] * y[:, None] * y[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_apply_pallas(lam: jax.Array, y_sel: jax.Array,
+                         coefs: jax.Array, idx: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """Row-scatter rank-one apply: out = lam with rows idx_i replaced by
+    lam[idx_i]·coefs[i,0] − coefs[i,1]·y_i y_iᵀ; untouched rows alias the
+    input buffer (bit-identical, zero traffic)."""
+    k, d, _ = lam.shape
+    c = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+            pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i, idx_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d, d),
+                               lambda i, idx_ref: (idx_ref[i], 0, 0)))
+    return pl.pallas_call(
+        _scatter_apply_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, d, d), jnp.float32),
+        input_output_aliases={1: 0},     # lam (after the prefetched idx)
+        interpret=interpret,
+    )(idx, lam, y_sel, coefs)

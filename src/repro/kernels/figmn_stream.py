@@ -93,7 +93,8 @@ def _stream_kernel(xs_ref, mu0_ref, lam0_ref, logdet0_ref, sp0_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("dim", "n_points", "interpret"))
+                   static_argnames=("dim", "n_points", "interpret"),
+                   donate_argnames=("mu0", "lam0", "logdet0", "sp0"))
 def figmn_stream_pallas(xs, mu0, lam0, logdet0, sp0, active0, thresh, *,
                         dim: int, n_points: int, interpret: bool = False):
     """Run the whole stream with VMEM-resident state.
@@ -102,6 +103,9 @@ def figmn_stream_pallas(xs, mu0, lam0, logdet0, sp0, active0, thresh, *,
     Returns (mu, lam, logdet, sp, n_accepted).
     All updates use the exact (PSD-safe) mode; points failing the chi² gate
     are no-ops here (the caller segments streams at creation events).
+    The float state inputs are DONATED (chunk-ingest jit: the (K, D, D) Λ
+    buffer is reused across chunks); callers needing them afterwards must
+    pass copies.
     """
     k, d = mu0.shape
     kernel = functools.partial(_stream_kernel, n_points=n_points, dim=dim,

@@ -14,7 +14,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import figmn_update, mahalanobis
+from repro.kernels import figmn_sparse, figmn_update, mahalanobis
 
 _LANE = 128
 _VMEM_BUDGET = 4 * 1024 * 1024  # conservative per-operand bytes
@@ -155,6 +155,62 @@ def matvec(lam: jax.Array, diff: jax.Array,
         _pad_kd(jnp.zeros_like(diff, jnp.float32), dpad),
         block_d=bd, interpret=interpret)
     return y[:, :d].astype(diff.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gathered_matvec(lam: jax.Array, diff_sel: jax.Array, idx: jax.Array,
+                    interpret: bool | None = None) -> jax.Array:
+    """y_i = Λ[idx_i]·diff_i for the C shortlisted rows (scalar-prefetch
+    gather — reads C·D², not K·D², of Λ).
+
+    Shortlist-path note: padding D up to the 128-lane tile would copy the
+    whole (K, D, D) tensor and defeat the gather, so this wrapper requires
+    lane-aligned D on TPU (keep Λ padded at rest) and runs unpadded in
+    interpret mode, where no tiling constraint applies.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    c, d = diff_sel.shape
+    if not interpret and d % _LANE:
+        raise ValueError(
+            f"gathered_matvec on TPU needs lane-aligned D (got {d}); keep "
+            f"Λ padded at rest instead of per-call padding")
+    y = figmn_sparse.gathered_matvec_pallas(
+        lam.astype(jnp.float32), diff_sel.astype(jnp.float32),
+        idx.astype(jnp.int32), interpret=interpret)
+    return y.astype(diff_sel.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "update_mode",
+                                             "interpret"))
+def scatter_fused_apply(lam: jax.Array, logdet: jax.Array, idx: jax.Array,
+                        y_sel: jax.Array, d2_sel: jax.Array,
+                        w_sel: jax.Array, dim: int,
+                        update_mode: str = "paper",
+                        interpret: bool | None = None):
+    """Shortlisted fused update: rows idx of Λ get the rank-one apply from
+    the shared matvec y (core.figmn.fused_step_coeffs); the K−C untouched
+    rows alias the input buffer bit-identically.  logdet is scatter-added
+    in O(C) jnp.  Returns (Λ', logdet')."""
+    from repro.core.figmn import fused_step_coeffs
+    if interpret is None:
+        interpret = _interpret_default()
+    c, d = y_sel.shape
+    if not interpret and d % _LANE:
+        raise ValueError(
+            f"scatter_fused_apply on TPU needs lane-aligned D (got {d})")
+    in_dtype = lam.dtype
+    w32 = w_sel.astype(jnp.float32)
+    beta, dlogdet = fused_step_coeffs(d2_sel.astype(jnp.float32), w32,
+                                      dim, update_mode)
+    inv1mw = 1.0 / (1.0 - w32)
+    b = beta * inv1mw if update_mode == "exact" else -beta
+    coefs = jnp.stack([inv1mw, b], axis=1).astype(jnp.float32)   # (C, 2)
+    lam_new = figmn_sparse.scatter_apply_pallas(
+        lam.astype(jnp.float32), y_sel.astype(jnp.float32), coefs,
+        idx.astype(jnp.int32), interpret=interpret)
+    logdet_new = logdet.at[idx].add(dlogdet.astype(logdet.dtype))
+    return lam_new.astype(in_dtype), logdet_new
 
 
 @functools.partial(jax.jit, static_argnames=("dim", "update_mode",

@@ -51,6 +51,12 @@ def main() -> None:
                     help="let the OOD fleet autoscale from 1 replica up "
                          "to --ood-replicas off its own telemetry "
                          "(load skew / budget pressure / drift rate)")
+    ap.add_argument("--score-shortlist", type=int, default=0,
+                    metavar="C",
+                    help="top-C component shortlist for the OOD monitor "
+                         "(0 = dense): both the ingest hot path and the "
+                         "serving score() drop from O(K·D²) to "
+                         "O(K·D + C·D²) per point, exact when C >= K")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -101,6 +107,10 @@ def main() -> None:
     feats = np.stack([emb[r.prompt].mean(0)[:16] for r in reqs])
     gcfg = FIGMNConfig(kmax=8, dim=16, beta=0.1, delta=1.0, vmin=1e9,
                        spmin=0.0, update_mode="exact",
+                       # C > 0 flips BOTH hot paths sublinear: ingest
+                       # dispatches to the "sparse" body and the scoring
+                       # frontend runs the shortlisted batched scorer
+                       shortlist_c=max(args.score_shortlist, 0),
                        sigma_ini=figmn.sigma_from_data(
                            jnp.asarray(feats), 1.0))
     monitor = FleetCoordinator(
@@ -122,8 +132,11 @@ def main() -> None:
     # for callers that also want to get off their own thread)
     scores = monitor.score(feats)
     monitor.close()
+    shortcut = (f"shortlist C={gcfg.shortlist_c}, "
+                if gcfg.shortlist_c > 0 else "")
     print(f"FIGMN OOD fleet active ({summary['replicas']} replicas, "
-          f"router load {summary['router_load']}): in-dist logp median "
+          f"{shortcut}router load {summary['router_load']}): "
+          f"in-dist logp median "
           f"{float(jnp.median(scores)):.1f} over {len(reqs)} requests "
           f"({summary['points_per_s']:.0f} feats/s, "
           f"global K={summary['global_active_k']}, "

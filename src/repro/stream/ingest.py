@@ -15,12 +15,20 @@ consumes a chunk.  Two bodies exist:
             lineage in the kernel's module docstring).  Creation events are
             no-ops inside the kernel; gate-failing points are surfaced to
             the caller for the lifecycle spawn buffer.
+  "sparse"— the top-C shortlist body (``core.shortlist.fit_sparse``):
+            per point an O(K·D) bound pass selects C candidate components
+            and the exact O(D²) work (matvec, posterior, fused rank-one
+            update) runs on the C gathered rows only — O(K·D + C·D²)
+            instead of O(K·D²).  Handles creation and pruning inline like
+            "scan" and is BIT-IDENTICAL to it when C ≥ active K.
 
-``select_path`` picks between them with a VMEM-budget heuristic: the vmem
-kernel is only profitable (and only correct to launch) when the working set
-K·D²·4B fits the budget, the update mode is the PSD-safe "exact" one, and
-we are actually on a TPU (in interpret mode the kernel is a correctness
-path, not a fast path).
+``select_path`` picks between them: the sparse body whenever the config
+enables a shortlist (cfg.shortlist_c > 0 — the biggest K-scaling lever),
+else the vmem kernel under a VMEM-budget heuristic (only profitable — and
+only correct to launch — when the working set K·D²·4B fits the budget, the
+update mode is the PSD-safe "exact" one, and we are actually on a TPU; in
+interpret mode the kernel is a correctness path, not a fast path), else
+the scan reference.
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import figmn
+from repro.core import figmn, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
 from repro.kernels import figmn_stream
 
@@ -41,10 +49,18 @@ DEFAULT_VMEM_BUDGET = 12 * 2 ** 20
 
 def select_path(cfg: FIGMNConfig, *, vmem_budget: int = DEFAULT_VMEM_BUDGET,
                 requested: str = "auto") -> str:
-    """Choose the per-chunk dispatch path ("scan" | "vmem").
+    """Choose the per-chunk dispatch path ("scan" | "vmem" | "sparse").
 
-    requested: "scan"/"vmem" force a path; "auto" applies the heuristic.
+    requested: "scan"/"vmem"/"sparse" force a path; "auto" applies the
+    heuristic.  A forced "sparse" requires cfg.shortlist_c > 0 (the width
+    is a config property, not a runtime knob — jitted shapes depend on it).
     """
+    if requested == "sparse" or (requested == "auto"
+                                 and cfg.shortlist_c > 0):
+        if cfg.shortlist_c <= 0:
+            raise ValueError(
+                "path 'sparse' requires cfg.shortlist_c > 0")
+        return "sparse"
     if requested in ("scan", "vmem"):
         return requested
     if requested != "auto":
@@ -96,17 +112,32 @@ class DoubleBufferedLoader:
 
 def fit_chunk_scan(cfg: FIGMNConfig, state: FIGMNState, xc: Array,
                    do_prune: bool) -> FIGMNState:
-    """Reference path: lax.scan of learn_one — identical math to figmn.fit."""
+    """Reference path: lax.scan of learn_one — identical math to figmn.fit.
+
+    ``figmn.fit`` donates the state, so the (K, D, D) Λ buffer is reused
+    in place across chunks; callers must rebind (the runtime does).
+    """
     return figmn.fit(cfg, state, xc, do_prune=do_prune)
 
 
+def fit_chunk_sparse(cfg: FIGMNConfig, state: FIGMNState, xc: Array,
+                     do_prune: bool) -> FIGMNState:
+    """Shortlist path: top-C sparse scan — bit-identical to "scan" when
+    cfg.shortlist_c ≥ active K, O(K·D + C·D²) per point otherwise.  Also
+    donates the state like the scan body."""
+    return shortlist.fit_sparse(cfg, state, xc, do_prune=do_prune)
+
+
 def fit_chunk_vmem(cfg: FIGMNConfig, state: FIGMNState, xc: Array
-                   ) -> Tuple[FIGMNState, int]:
+                   ) -> Tuple[FIGMNState, Array]:
     """VMEM-resident path: whole chunk in one pallas_call.
 
     Creation events are no-ops inside the kernel (gate-failing points leave
-    the state untouched); the caller collects them via ``gate_failures`` for
-    the lifecycle spawn buffer.  Returns (state', n_accepted).
+    the state untouched); the caller collects them via ``chunk_stats`` for
+    the lifecycle spawn buffer.  Returns (state', n_accepted) with the
+    accept counter left ON DEVICE — pulling it here would block the host
+    on every chunk; the runtime folds it into telemetry at lifecycle
+    boundaries instead.
     """
     n = int(xc.shape[0])
     thresh = jnp.asarray(
@@ -124,33 +155,22 @@ def fit_chunk_vmem(cfg: FIGMNConfig, state: FIGMNState, xc: Array
         # eq. 4: every active component ages once per point
         v=state.v + n * state.active.astype(dt),
         active=state.active, n_created=state.n_created)
-    return new, int(nacc[0])
-
-
-_LOG_2PI = 1.8378770664093453
+    return new, nacc[0]
 
 
 @jax.jit
-def chunk_stats(state: FIGMNState, xc: Array, thresh: Array
-                ) -> Tuple[Array, Array]:
+def chunk_stats(cfg: FIGMNConfig, state: FIGMNState, xc: Array,
+                thresh: Array) -> Tuple[Array, Array]:
     """(fails (B,) bool, mean mixture log-likelihood ()) vs frozen params.
 
-    ONE batched pass over Λ yields d² (B, K), which feeds BOTH the chi²
-    gate (→ lifecycle spawn buffer / novelty rate) and the mixture
-    log-density (→ drift CUSUM): enabling drift detection costs a single
-    extra Λ read per chunk, not one per statistic.  Same math as
-    figmn.mahalanobis_sq + figmn.log_likelihood.
+    ONE batched pass over Λ (``figmn.log_joint_batch`` — the same
+    implementation ``figmn.score_batch`` reduces) yields d² (B, K), which
+    feeds BOTH the chi² gate (→ lifecycle spawn buffer / novelty rate) and
+    the mixture log-density (→ drift CUSUM): enabling drift detection
+    costs a single extra Λ read per chunk, not one per statistic.
     """
-    diff = xc[:, None, :] - state.mu[None, :, :]          # (B, K, D)
-    y = jnp.einsum("kde,bke->bkd", state.lam, diff)
-    d2 = jnp.einsum("bkd,bkd->bk", diff, y)
+    d2, logjoint = figmn.log_joint_batch(cfg, state, xc)
     fails = ~jnp.any(state.active[None, :] & (d2 < thresh), axis=1)
-    dim = xc.shape[1]
-    logp = -0.5 * (dim * _LOG_2PI + state.logdet[None, :] + d2)
-    logprior = jnp.log(state.sp / jnp.maximum(jnp.sum(state.sp), 1e-30)
-                       + 1e-30)
-    logjoint = jnp.where(state.active[None, :], logp + logprior[None, :],
-                         -jnp.inf)
     ll = jax.scipy.special.logsumexp(logjoint, axis=1)
     return fails, jnp.mean(ll)
 

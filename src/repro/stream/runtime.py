@@ -21,8 +21,10 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.checkpoint import CheckpointManager
-from repro.core import figmn
+from repro.core import figmn, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
 from repro.stream import drift as drift_mod
 from repro.stream import ingest, lifecycle, telemetry
@@ -34,7 +36,10 @@ class RuntimeConfig:
     """Orchestration knobs (the FIGMN hyper-parameters live in FIGMNConfig).
 
     chunk:            micro-batch size (points per dispatch).
-    path:             "auto" | "scan" | "vmem" (see ingest.select_path).
+    path:             "auto" | "scan" | "vmem" | "sparse" (see
+                      ingest.select_path; "sparse" — the top-C shortlist
+                      body — needs cfg.shortlist_c > 0 and is what "auto"
+                      picks whenever the config enables a shortlist).
     lifecycle:        pool-management policy; None disables (creation and
                       §2.3 pruning then happen inline in the scan body,
                       matching one-shot figmn.fit exactly).
@@ -81,6 +86,12 @@ class StreamRuntime:
                      if rcfg.checkpoint_dir else None)
         self._thresh = jnp.asarray(
             [float(chi2_quantile(cfg.dim, 1.0 - cfg.beta))], jnp.float32)
+        # Deferred device→host syncs (see _ingest_chunk): the vmem accept
+        # counter stays a device scalar between lifecycle boundaries, and
+        # gate-failure masks wait device-side until the spawn pass needs
+        # their host rows.
+        self._accepted_dev = jnp.zeros((), jnp.int32)
+        self._pending_fails = []
 
     # ------------------------------------------------------------------
     # ingestion
@@ -99,12 +110,18 @@ class StreamRuntime:
             self._ingest_chunk(xc_dev, xc_host)
         if rc.lifecycle is not None:
             self._run_lifecycle(final=True)
+        self._fold_accept_counter()
         if self.ckpt is not None:
             self.checkpoint()
         return self.telemetry.summary()
 
     def _ingest_chunk(self, xc: Array, xc_host: np.ndarray) -> None:
         rc, cfg = self.rcfg, self.cfg
+        # Host-side per-chunk consumers (drift CUSUM, ft.anomaly) genuinely
+        # need floats every chunk; everything else (vmem accept counter,
+        # gate-failure rows for the spawn buffer) stays device-side until a
+        # lifecycle boundary — a per-chunk int()/float() pull would block
+        # the host on the device and serialise the double-buffered feed.
         need_stats = self.detector is not None or rc.telemetry_anomaly
         t0 = time.perf_counter()
         n_created0 = int(self.state.n_created)
@@ -112,30 +129,51 @@ class StreamRuntime:
         path = self.path
         if path == "vmem" and not formed:
             path = "scan"            # kernel cannot create the first slot
+        need_fails = path == "vmem" and rc.lifecycle is not None
 
         # Prequential stats: the chunk is scored against the PRE-update
         # mixture ("does the incoming data match what we learned so far").
         # Post-update stats are useless for drift — the single-pass learner
         # adapts within the very chunk that drifted.
+        # novelty_rate is a host-side statistic: NaN (like mean_ll) when no
+        # per-chunk host consumer exists — on the vmem path the failure
+        # mask then stays device-side until the lifecycle boundary, and a
+        # fake 0.0 would read as "no novelty observed"
         mean_ll = float("nan")
-        novelty_rate = 0.0
-        if (need_stats or path == "vmem") and formed:
-            fails_dev, mean_ll_dev = ingest.chunk_stats(
-                self.state, xc, self._thresh[0])
-            fails = np.asarray(fails_dev)
-            novelty_rate = float(fails.mean())
+        novelty_rate = float("nan")
+        fails = fails_dev = None
+        if (need_stats or need_fails) and formed:
+            # shortlisted runtimes keep the stats pass sublinear too — a
+            # dense (B, K) sweep here would re-introduce the O(K·D²)
+            # per-point cost the sparse body just removed.  Keyed on the
+            # RESOLVED path (not cfg.shortlist_c): a forced dense path
+            # must see dense gate stats or the spawn buffer would collect
+            # points the dense gate actually accepted.
+            stats = (shortlist.chunk_stats_sparse if self.path == "sparse"
+                     else ingest.chunk_stats)
+            fails_dev, mean_ll_dev = stats(
+                cfg, self.state, xc, self._thresh[0])
             if need_stats:
+                fails = np.asarray(fails_dev)
+                novelty_rate = float(fails.mean())
                 mean_ll = float(mean_ll_dev)
 
         if path == "vmem":
-            self.state, _ = ingest.fit_chunk_vmem(cfg, self.state, xc)
-            if rc.lifecycle is not None and fails.any():
-                self.buffer.push(xc_host[fails])
+            self.state, nacc = ingest.fit_chunk_vmem(cfg, self.state, xc)
+            self._accepted_dev = self._accepted_dev + nacc   # device add
+            if need_fails:
+                if fails is not None:        # already pulled for stats
+                    if fails.any():
+                        self.buffer.push(xc_host[fails])
+                elif fails_dev is not None:  # defer to lifecycle boundary
+                    self._pending_fails.append((fails_dev, xc_host))
         else:
             # inline creation/§2.3 pruning ⇔ identical to one-shot fit;
             # with lifecycle enabled, pruning is deferred to the pool pass
             do_prune = rc.lifecycle is None and cfg.spmin > 0
-            self.state = ingest.fit_chunk_scan(cfg, self.state, xc, do_prune)
+            body = (ingest.fit_chunk_sparse if path == "sparse"
+                    else ingest.fit_chunk_scan)
+            self.state = body(cfg, self.state, xc, do_prune)
 
         drift_score, alarm = 0.0, False
         if self.detector is not None and mean_ll == mean_ll:
@@ -144,10 +182,16 @@ class StreamRuntime:
             if alarm:
                 self._respond_to_drift()
 
+        # the active_k pull doubles as the latency fence: it blocks on this
+        # chunk's (donated, async-dispatched) fit, so latency_s includes
+        # the device compute on every path — this is the ONE per-chunk
+        # device sync the telemetry schema requires (chunk-granular
+        # active_k/latency records cannot be deferred without losing them)
+        active_k = int(self.state.n_active)
         latency = time.perf_counter() - t0
         self.telemetry.record(telemetry.ChunkMetrics(
             idx=self.chunk_idx, n_points=int(xc.shape[0]),
-            active_k=int(self.state.n_active),
+            active_k=active_k,
             created=int(self.state.n_created) - n_created0,
             mean_ll=mean_ll, novelty_rate=novelty_rate,
             drift_score=float(drift_score), drift_alarm=alarm,
@@ -165,8 +209,27 @@ class StreamRuntime:
     # lifecycle / drift plumbing
     # ------------------------------------------------------------------
 
+    def _drain_pending_fails(self) -> None:
+        """Materialise the deferred gate-failure masks into the spawn
+        buffer (the one place their host rows are actually consumed)."""
+        for fails_dev, xc_host in self._pending_fails:
+            fails = np.asarray(fails_dev)
+            if fails.any():
+                self.buffer.push(xc_host[fails])
+        self._pending_fails.clear()
+
+    def _fold_accept_counter(self) -> None:
+        """Pull the device-side vmem accept counter into telemetry — called
+        at lifecycle boundaries and end-of-ingest, never per chunk."""
+        n = int(self._accepted_dev)
+        if n:
+            self.telemetry.add_accepted(n)
+            self._accepted_dev = jnp.zeros((), jnp.int32)
+
     def _run_lifecycle(self, final: bool = False) -> None:
         del final  # the pass is identical; the flag only documents intent
+        self._drain_pending_fails()
+        self._fold_accept_counter()
         self.state, rep = lifecycle.run_pass(
             self.cfg, self.rcfg.lifecycle, self.state, self.buffer)
         self.telemetry.add_lifecycle(rep.pruned, rep.merged, rep.spawned)
@@ -184,9 +247,12 @@ class StreamRuntime:
 
     def export_pool(self) -> FIGMNState:
         """The live mixture, for mass-conserving pool moves (fleet
-        autoscaling).  The returned leaves are immutable jax arrays, so the
-        caller can hold them across further ingestion."""
-        return self.state
+        autoscaling).  Returns a COPY: the chunk-ingest jits donate the
+        live state's buffers (Λ reused in place), so handing out the live
+        leaves would let the next ingest invalidate them under the holder
+        — the copy keeps the documented promise that an exported pool
+        survives further ingestion, bit-identically."""
+        return jax.tree_util.tree_map(jnp.copy, self.state)
 
     def import_pool(self, state: FIGMNState) -> None:
         """Replace the live mixture wholesale (fleet scale events: a split
@@ -202,7 +268,12 @@ class StreamRuntime:
         got = tuple(int(s) for s in state.mu.shape)
         if got != want:
             raise ValueError(f"pool shape {got} != configured {want}")
-        self.state = state
+        # Defensive copy: the chunk-ingest jits DONATE their state buffers
+        # (Λ reused in place across chunks), so the runtime must own every
+        # buffer privately — an imported pool may alias the exporter's
+        # arrays (e.g. the kept half of an autoscale split), and donating a
+        # shared buffer would invalidate it under the other holder.
+        self.state = jax.tree_util.tree_map(jnp.copy, state)
         if self.detector is not None:
             self.detector.reset_baseline()
 
@@ -211,9 +282,17 @@ class StreamRuntime:
     # ------------------------------------------------------------------
 
     def score(self, xs) -> Array:
-        """(N,) mixture log-densities under the current state (read-only)."""
-        return ingest.score_batch_jit(self.cfg, self.state,
-                                      jnp.asarray(xs, self.cfg.dtype))
+        """(N,) mixture log-densities under the current state (read-only).
+
+        On a shortlisted runtime (resolved path "sparse") the read path is
+        sublinear in K too: one (B, K) bound pass + a (B, C) exact pass
+        (core.shortlist.score_batch_sparse) instead of the dense (B, K)
+        Mahalanobis sweep.  A forced dense ingest path scores densely —
+        reads and writes stay consistent."""
+        xs = jnp.asarray(xs, self.cfg.dtype)
+        if self.path == "sparse":
+            return shortlist.score_batch_sparse(self.cfg, self.state, xs)
+        return ingest.score_batch_jit(self.cfg, self.state, xs)
 
     def _payload(self) -> Dict[str, object]:
         """Everything a resumed runtime needs to continue bit-identically:
@@ -235,6 +314,10 @@ class StreamRuntime:
     def checkpoint(self) -> None:
         if self.ckpt is None:
             raise RuntimeError("no checkpoint_dir configured")
+        # deferred device-side residue must land before the payload export
+        # (the spawn buffer and telemetry counters are part of it)
+        self._drain_pending_fails()
+        self._fold_accept_counter()
         self.ckpt.save(self.chunk_idx, self._payload())
         self.ckpt.wait()
 

@@ -28,8 +28,11 @@ class ChunkMetrics:
     pruned: int = 0
     merged: int = 0
     spawned: int = 0
+    # mean_ll / novelty_rate are prequential host-side statistics: NaN when
+    # no per-chunk host consumer (drift CUSUM / ft.anomaly) required the
+    # device pull — 0.0 would masquerade as "no novelty observed"
     mean_ll: float = float("nan")
-    novelty_rate: float = 0.0
+    novelty_rate: float = float("nan")
     drift_score: float = 0.0
     drift_alarm: bool = False
     path: str = "scan"
@@ -58,6 +61,10 @@ class Telemetry:
         self.total_chunks = 0
         self.totals: Dict[str, int] = {k: 0 for k in self._COUNTERS}
         self.total_drift_alarms = 0
+        # vmem-path accept counter: accumulated on DEVICE by the runtime
+        # and folded in here only at lifecycle boundaries (no per-chunk
+        # host sync)
+        self.total_accepted = 0
 
     def record(self, m: ChunkMetrics) -> None:
         self.history.append(m)
@@ -78,6 +85,11 @@ class Telemetry:
             })
             if verdict.get("anomalous"):
                 self.anomalies.append(m.idx)
+
+    def add_accepted(self, n: int) -> None:
+        """Fold a batch of vmem-path gate accepts into the running total
+        (the runtime defers the device pull to lifecycle boundaries)."""
+        self.total_accepted += int(n)
 
     def add_lifecycle(self, pruned: int, merged: int, spawned: int) -> None:
         """Fold an off-chunk lifecycle pass into totals + the last record."""
@@ -101,7 +113,8 @@ class Telemetry:
                "total_time_s": np.asarray(self.total_time_s, np.float64),
                "total_chunks": np.asarray(self.total_chunks, np.int64),
                "total_drift_alarms": np.asarray(self.total_drift_alarms,
-                                                np.int64)}
+                                                np.int64),
+               "total_accepted": np.asarray(self.total_accepted, np.int64)}
         for k in self._COUNTERS:
             out[k] = np.asarray(self.totals[k], np.int64)
         return out
@@ -111,6 +124,8 @@ class Telemetry:
         self.total_time_s = float(payload["total_time_s"])
         self.total_chunks = int(payload["total_chunks"])
         self.total_drift_alarms = int(payload["total_drift_alarms"])
+        # pre-shortlist checkpoints restore via missing="template" ⇒ zeros
+        self.total_accepted = int(payload.get("total_accepted", 0))
         for k in self._COUNTERS:
             self.totals[k] = int(payload[k])
 
@@ -119,7 +134,8 @@ class Telemetry:
         out = {"total_points": np.zeros((), np.int64),
                "total_time_s": np.zeros((), np.float64),
                "total_chunks": np.zeros((), np.int64),
-               "total_drift_alarms": np.zeros((), np.int64)}
+               "total_drift_alarms": np.zeros((), np.int64),
+               "total_accepted": np.zeros((), np.int64)}
         for k in cls._COUNTERS:
             out[k] = np.zeros((), np.int64)
         return out
@@ -133,6 +149,7 @@ class Telemetry:
                              if self.total_time_s > 0 else 0.0),
             "active_k": last.active_k if last else 0,
             **dict(self.totals),
+            "accepted": self.total_accepted,
             "drift_alarms": self.total_drift_alarms,
             "telemetry_anomalies": list(self.anomalies),
         }
