@@ -1,0 +1,170 @@
+"""Conditional serving (eq. 27) — dense vs shortlisted → BENCH_predict.json.
+
+The paper's headline workload is conditional reconstruction ("any element
+predicts any other element" — its classification and regression
+experiments), so this benchmark measures the SERVING side of that
+estimator surface at each (K, D, o, C):
+
+  dense    predictions/sec of ``inference.predict_batch`` — the one
+           jitted (B, ·) kernel (per-component W⁻¹Z / Schur factors
+           computed once per call), O(K·D²·o) per point;
+  sparse   predictions/sec of ``inference.predict_batch_sparse`` — the
+           PR-4 bound pass on the known-block marginal + the exact pass
+           on C gathered rows, O(K·D + C·D²·o) per point;
+
+plus the fidelity witnesses the speedup is conditional on: bit-identity
+dense-vs-sparse at C = K (the exactness contract, also pinned in
+tests/test_api.py) and max |Δ| at the small serving C.  The acceptance
+point is (K=256, D=32, C=8, o=1): sparse must clear ≥ 3× dense.
+
+The committed smoke baseline (benchmarks/baselines/) gates CI: a >2×
+regression of the smoke sparse-predict rate fails the build (``--check``).
+
+Run:    PYTHONPATH=src python -m benchmarks.figmn_predict [--smoke]
+Gate:   PYTHONPATH=src python -m benchmarks.figmn_predict \
+            --check BENCH_predict.json \
+            --baseline benchmarks/baselines/BENCH_predict_smoke.json
+(or via ``python -m benchmarks.run figmn_predict [--smoke]``)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn, inference
+from repro.core.types import FIGMNConfig
+
+#: (K, D, o, [C...]) sweep; the acceptance point is (256, 32, 1, C=8).
+SWEEP = [(64, 16, 1, (4, 8)), (256, 32, 1, (8, 16)), (256, 32, 4, (8,))]
+SMOKE_SWEEP = [(32, 8, 1, (4,))]
+N_FIT = 1024
+N_FIT_SMOKE = 256
+N_SERVE = 4096
+N_SERVE_SMOKE = 512
+
+
+def _stream(n: int, d: int, modes: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 8.0, (modes, d))
+    x = centers[rng.integers(0, modes, n)] + rng.normal(0, 1.0, (n, d))
+    return x.astype(np.float32)
+
+
+def _cfg(x: np.ndarray, kmax: int) -> FIGMNConfig:
+    return FIGMNConfig(kmax=kmax, dim=x.shape[1], beta=0.1, delta=1.0,
+                       vmin=1e9, spmin=0.0, update_mode="exact",
+                       sigma_ini=figmn.sigma_from_data(jnp.asarray(x), 1.0))
+
+
+def _time(fn, reps: int = 3) -> float:
+    jax.block_until_ready(fn())                           # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(out_path: str = "BENCH_predict.json", quick: bool = False) -> Dict:
+    sweep = SMOKE_SWEEP if quick else SWEEP
+    n_fit = N_FIT_SMOKE if quick else N_FIT
+    n_serve = N_SERVE_SMOKE if quick else N_SERVE
+    rows: List[Dict] = []
+    for kmax, d, o, cs in sweep:
+        modes = min(max(kmax // 4, 2), 16)
+        x = _stream(n_fit, d, modes)
+        cfg = _cfg(x, kmax)
+        state = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+        targets = list(range(d - o, d))
+        serve = jnp.asarray(_stream(n_serve, d, modes, seed=11)[:, :d - o])
+
+        dense_s = _time(lambda: inference.predict_batch(
+            cfg, state, serve, targets))
+        dense_out = np.asarray(inference.predict_batch(
+            cfg, state, serve, targets))
+        # exactness witness: C = K sparse ≡ dense, bit for bit
+        ck = np.asarray(inference.predict_batch_sparse(
+            cfg, state, serve, targets, c=kmax))
+        ck_bitident = bool(np.array_equal(dense_out, ck))
+
+        for c in cs:
+            sparse_s = _time(lambda: inference.predict_batch_sparse(
+                cfg, state, serve, targets, c=c))
+            sparse_out = np.asarray(inference.predict_batch_sparse(
+                cfg, state, serve, targets, c=c))
+            row = {
+                "k": kmax, "d": d, "o": o, "c": c, "n_serve": n_serve,
+                "predict_dense_pts_s": n_serve / dense_s,
+                "predict_sparse_pts_s": n_serve / sparse_s,
+                "predict_speedup": dense_s / sparse_s,
+                "max_abs_gap": float(np.max(np.abs(dense_out
+                                                   - sparse_out))),
+                "ck_bitident": ck_bitident,
+                "active_k": int(state.n_active),
+            }
+            rows.append(row)
+            print(f"K={kmax:4d} D={d:3d} o={o} C={c:3d}: sparse "
+                  f"{row['predict_sparse_pts_s']:9.0f} vs dense "
+                  f"{row['predict_dense_pts_s']:9.0f} pts/s "
+                  f"({row['predict_speedup']:.1f}x) | max|gap| "
+                  f"{row['max_abs_gap']:.2e} | C=K bitident={ck_bitident}")
+
+    doc = {"benchmark": "figmn_predict",
+           "backend": jax.default_backend(),
+           "smoke": quick,
+           "rows": rows}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+    return doc
+
+
+def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
+    """CI gate: fail when the smoke sparse-predict rate fell more than
+    ``factor``× below the committed baseline."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    brow, rrow = bench["rows"][0], base["rows"][0]
+    key = lambda r: (r["k"], r["d"], r["o"], r["c"])
+    if key(brow) != key(rrow) or bench.get("smoke") != base.get("smoke"):
+        print(f"gate mismatch: bench row {key(brow)} "
+              f"(smoke={bench.get('smoke')}) vs baseline row {key(rrow)} "
+              f"(smoke={base.get('smoke')}) — regenerate the bench with "
+              f"--smoke before gating")
+        return False
+    got = float(brow["predict_sparse_pts_s"])
+    ref = float(rrow["predict_sparse_pts_s"])
+    floor = ref / factor
+    ok = got >= floor
+    verdict = "OK" if ok else "REGRESSION"
+    print(f"sparse smoke predict: {got:.0f} pts/s vs committed baseline "
+          f"{ref:.0f} (floor {floor:.0f}) — {verdict}")
+    return ok
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="gate mode: compare BENCH_JSON against --baseline "
+                         "instead of running the benchmark")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_predict_smoke.json")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(0 if check(args.check, args.baseline) else 1)
+    main(smoke=args.smoke)

@@ -17,6 +17,10 @@ CSV convention: ``name,us_per_call,derived``.
                     + serving scores/sec + held-out LL gap per (K, D, C)
                     → BENCH_sparse.json (CI-gated against
                     benchmarks/baselines/)
+  figmn_predict   — conditional serving (eq. 27): dense vs shortlisted
+                    predictions/sec + C=K bit-identity witness per
+                    (K, D, o, C) → BENCH_predict.json (CI-gated against
+                    benchmarks/baselines/)
   lm_bench        — reduced-config LM substrate step times
   roofline        — §Roofline terms per (arch × shape) from the dry-run
                     artifacts (run repro.launch.dryrun --all first)
@@ -39,7 +43,7 @@ import traceback
 #: ``main(smoke: bool = False)`` where smoke runs a tiny-size subset.
 REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
             "figmn_runtime", "figmn_fleet", "figmn_autoscale",
-            "figmn_sparse", "lm_bench", "roofline")
+            "figmn_sparse", "figmn_predict", "lm_bench", "roofline")
 
 
 def _section(name: str, smoke: bool) -> bool:

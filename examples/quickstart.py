@@ -1,40 +1,46 @@
-"""Quickstart: the Fast IGMN in 60 seconds.
+"""Quickstart: the Fast IGMN in 60 seconds — through the unified API.
 
-Fits a streaming Gaussian mixture to 2-D blobs through the production
-StreamRuntime (chunked single-pass ingestion — identical math to one
-figmn.fit call), shows that the precision-form fast algorithm (the paper)
-matches the covariance-form baseline exactly, and reconstructs a missing
-dimension via the conditional mean (eq. 27).
+One ``Mixture`` handle covers the whole estimator surface: single-pass
+streaming fit (the production StreamRuntime underneath — identical math to
+one figmn.fit call), density scoring, eq. 27 conditional reconstruction
+("any element predicts any other element"), sampling, and the same checks
+against the covariance-form baseline the paper's Table 4 makes.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--smoke]
 """
+import argparse
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import figmn, igmn_ref, inference
+from repro.api import Mixture, MixtureSpec
+from repro.core import figmn, igmn_ref
 from repro.core.types import FIGMNConfig
-from repro.stream import RuntimeConfig, StreamRuntime
+from repro.stream import RuntimeConfig
 
 
-def main():
+def main(smoke: bool = False):
     rng = np.random.default_rng(0)
     centers = np.array([[-6.0, -6.0], [0.0, 6.0], [6.0, -2.0]])
-    x = np.concatenate([rng.normal(c, 1.0, (200, 2)) for c in centers])
+    per_mode = 40 if smoke else 200
+    x = np.concatenate([rng.normal(c, 1.0, (per_mode, 2)) for c in centers])
     rng.shuffle(x)
     x = jnp.asarray(x, jnp.float32)
 
     cfg = FIGMNConfig(kmax=16, dim=2, beta=0.1, delta=1.0, vmin=20.0,
                       spmin=3.0, sigma_ini=figmn.sigma_from_data(x, 1.0))
 
-    # the production ingestion path: micro-batched, double-buffered H2D —
-    # and bit-identical to a one-shot figmn.fit over the same stream
-    runtime = StreamRuntime(cfg, RuntimeConfig(chunk=128))
+    # ONE handle: spec resolves the engine tier ("runtime" here; "fleet" /
+    # "autoscaled" scale the same API out), ingestion stays the production
+    # path (micro-batched, double-buffered H2D) — and bit-identical to a
+    # one-shot figmn.fit over the same stream
+    mix = Mixture(MixtureSpec(model=cfg, runtime=RuntimeConfig(chunk=128)))
     t0 = time.perf_counter()
-    summary = runtime.ingest(x)
+    mix.partial_fit(x)
     t_fast = time.perf_counter() - t0
-    state = runtime.state
+    state = mix.state
+    summary = mix.summary()
     print(f"FIGMN: single pass over {x.shape[0]} points in {t_fast*1e3:.0f}ms"
           f" ({summary['chunks']} chunks)"
           f" → {int(state.n_active)} components "
@@ -48,6 +54,15 @@ def main():
         print(f"  component {k}: mu={np.asarray(state.mu[k]).round(2)} "
               f"sp={float(state.sp[k]):.1f}")
 
+    # density query: in-distribution points outscore far-away ones
+    probe_in = x[:4]
+    probe_out = jnp.asarray([[40.0, 40.0]], jnp.float32)
+    ll_in = float(jnp.mean(mix.score_samples(probe_in)))
+    ll_out = float(mix.score_samples(probe_out)[0])
+    print(f"log p(x): in-dist {ll_in:.1f} vs far-OOD {ll_out:.1f} "
+          f"(density query ✓)")
+    assert ll_in > ll_out
+
     # equivalence with the O(D^3) covariance-form baseline (paper Table 4)
     s_ref = igmn_ref.fit(cfg, igmn_ref.init_state(cfg), x)
     cov_fast = jnp.linalg.inv(state.lam)
@@ -55,12 +70,22 @@ def main():
                                           cov_fast - s_ref.cov, 0.0))))
     print(f"max |C_fast − C_baseline| = {err:.2e}  (identical results ✓)")
 
-    # supervised mode: reconstruct x1 from x0 (eq. 27)
+    # conditional query (eq. 27): reconstruct x1 from x0
     probe = jnp.asarray([[-6.0], [0.0], [6.0]], jnp.float32)
-    recon = inference.predict_batch(cfg, state, probe, idx_out=[1])
+    recon = mix.predict(probe, targets=[1])
     for p, r in zip(np.asarray(probe)[:, 0], np.asarray(recon)[:, 0]):
         print(f"  p(x1 | x0={p:+.0f}) → x̂1 = {r:+.2f}")
 
+    # sample query: draws live where the mixture lives
+    draws = mix.sample(64 if smoke else 256, seed=1)
+    ll_draws = float(jnp.mean(mix.score_samples(draws)))
+    print(f"sampled {draws.shape[0]} points, mean log p = {ll_draws:.1f} "
+          f"(sample query ✓)")
+    assert abs(ll_draws - ll_in) < 4.0
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI examples-smoke)")
+    main(smoke=ap.parse_args().smoke)

@@ -2,7 +2,15 @@
 as a first-class feature of a production-grade multi-pod JAX framework.
 
 Packages:
-  core         the paper's algorithm (precision-form FIGMN + IGMN baseline)
+  core         the paper's algorithm (precision-form FIGMN + IGMN baseline,
+               top-C shortlist engine, eq. 27 inference, classifier head)
+  stream       StreamRuntime: chunked ingestion (scan/vmem/sparse dispatch),
+               component lifecycle, drift detection, telemetry, resume
+  fleet        sharded multi-replica scale-out: routing, exact
+               consolidation, autoscaling, snapshot serving frontend
+  api          the unified estimator + query surface: Mixture / MixtureSpec
+               over every engine tier, Query (density | conditional |
+               label | sample) over live states and fleet snapshots
   kernels      Pallas TPU kernels + jnp oracles
   models       10-architecture LM model zoo (scan-over-layers)
   configs      assigned architectures x input shapes + paper configs

@@ -1,0 +1,18 @@
+"""repro.api — the unified estimator + query surface for the Fast IGMN.
+
+One ``Mixture`` handle (fit / score / predict / sample / save / load) over
+a declarative ``MixtureSpec`` that resolves to the right engine tier —
+in-process ``StreamRuntime``, sharded ``FleetCoordinator``, or an
+autoscaled fleet — and one ``Query`` abstraction (density | conditional |
+label | sample) executed identically against a live runtime state or a
+published fleet snapshot, through whichever read path (dense or top-C
+shortlisted) the engine resolved.
+
+  query.py    Query + execute() + sample() — the state-level query layer
+  mixture.py  MixtureSpec + the Mixture session façade
+"""
+from repro.api.mixture import Mixture, MixtureSpec
+from repro.api.query import Query, execute, sample, to_proba
+
+__all__ = ["Mixture", "MixtureSpec", "Query", "execute", "sample",
+           "to_proba"]

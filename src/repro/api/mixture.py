@@ -1,0 +1,209 @@
+"""``Mixture`` — ONE handle over every engine tier and every read path.
+
+The estimator surface of this repo (fit / score / predict / sample — the
+product Pinto & Engel's 2017 follow-up frames) over a declarative spec:
+
+    spec = MixtureSpec(model=FIGMNConfig(...), tier="runtime")
+    mix = Mixture(spec)
+    mix.partial_fit(stream)              # single-pass online learning
+    mix.score_samples(xs)                # log p(x)         (density)
+    mix.predict(xs, targets=[D - 1])     # eq. 27           (conditional)
+    mix.predict_proba(xs, targets=...)   # label block      (classification)
+    mix.sample(64)                       # generation
+    mix.save(); Mixture.load(spec)       # checkpoint round-trip
+
+The spec resolves to an engine tier — in-process ``StreamRuntime``
+("runtime"), sharded ``FleetCoordinator`` ("fleet"), or a telemetry-
+autoscaled fleet ("autoscaled") — while the scan/vmem/sparse ingest-path
+selection and the dense/shortlisted read-path selection stay exactly what
+those engines already do: the façade never reimplements dispatch, it only
+routes.  Reads on the fleet tiers go through the published snapshot
+(snapshot-atomic, never blocking ingestion); reads on the runtime tier see
+the live state.  Every read is one of the four ``api.query.Query`` kinds,
+executed identically on either (tests/test_api.py pins engine-vs-query
+bit-identity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import query as query_mod
+from repro.api.query import Query
+from repro.core.types import Array, FIGMNConfig, FIGMNState
+from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
+from repro.stream import RuntimeConfig, StreamRuntime
+from repro.stream import ingest as ingest_mod
+
+TIERS = ("runtime", "fleet", "autoscaled")
+
+
+@dataclasses.dataclass(frozen=True)
+class MixtureSpec:
+    """Declarative mixture session spec.
+
+    model:    the FIGMN hyper-parameters (incl. shortlist_c — the knob
+              that flips BOTH hot paths sublinear).
+    tier:     "runtime"    — one in-process StreamRuntime (live-state
+                             reads, the single-stream production engine);
+              "fleet"      — N sharded StreamRuntime replicas behind a
+                             FleetCoordinator (snapshot reads);
+              "autoscaled" — a fleet whose replica count tracks its own
+                             telemetry (fleet.autoscale).
+    runtime:  per-runtime knobs (chunking, lifecycle, drift, checkpoints);
+              on fleet tiers this is the per-REPLICA config.
+    fleet:    fleet-level knobs (routing, consolidation cadence, fleet
+              checkpoint root); None ⇒ FleetConfig() defaults on fleet
+              tiers, ignored on "runtime".
+    """
+    model: FIGMNConfig
+    tier: str = "runtime"
+    runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+    fleet: Optional[FleetConfig] = None
+
+
+def _build_engine(spec: MixtureSpec):
+    if spec.tier == "runtime":
+        return StreamRuntime(spec.model, spec.runtime)
+    if spec.tier not in TIERS:
+        raise ValueError(f"unknown tier {spec.tier!r}; expected one of "
+                         f"{TIERS}")
+    fcfg = spec.fleet if spec.fleet is not None else FleetConfig()
+    if spec.tier == "autoscaled":
+        if fcfg.autoscale is None:
+            fcfg = dataclasses.replace(fcfg, autoscale=AutoscaleConfig())
+    elif fcfg.autoscale is not None:
+        raise ValueError("tier 'fleet' is fixed-membership; use tier "
+                         "'autoscaled' for an AutoscaleConfig'd fleet")
+    return FleetCoordinator(spec.model, fcfg, spec.runtime)
+
+
+class Mixture:
+    """One mixture session: estimator + query API over a resolved engine."""
+
+    def __init__(self, spec: MixtureSpec):
+        self.spec = spec
+        self.cfg = spec.model
+        self.engine = _build_engine(spec)
+        self._is_fleet = isinstance(self.engine, FleetCoordinator)
+
+    # ------------------------------------------------------------------
+    # estimator side
+    # ------------------------------------------------------------------
+
+    def partial_fit(self, xs) -> "Mixture":
+        """Single-pass online learning over an (N, D) stream segment.
+
+        Callable repeatedly — the engine carries state, lifecycle clocks,
+        drift baselines and telemetry across calls.  Returns self
+        (estimator chaining).  The stream is handed to the engine as-is:
+        each engine does its own dtype normalisation (the runtime's loader
+        casts per chunk to cfg.dtype — a float32 cast here would silently
+        quantise float64 sessions)."""
+        self.engine.ingest(xs)
+        return self
+
+    # ------------------------------------------------------------------
+    # query side — the four kinds, each routed through the engine's
+    # read front (live state on "runtime", published snapshot on fleets)
+    # ------------------------------------------------------------------
+
+    def score_samples(self, xs) -> Array:
+        """(N,) mixture log-densities (the density query)."""
+        return self.engine.score(xs)
+
+    def predict(self, xs, targets) -> Array:
+        """(N, o) eq. 27 conditional means of ``targets`` given the rest."""
+        return self.engine.predict(xs, targets)
+
+    def predict_proba(self, xs, targets) -> Array:
+        """(N, o) label-block reconstruction renormalised to a
+        distribution (the label query — the classification read)."""
+        return query_mod.to_proba(self.engine.predict(xs, targets))
+
+    def sample(self, n: int, seed: int = 0) -> Array:
+        """(n, D) draws from the mixture (components ∝ sp)."""
+        return query_mod.sample(self.cfg, self.state, n, seed)
+
+    def query(self, q: Query, xs=None) -> Array:
+        """Execute any ``api.query.Query`` against this session's state
+        through the engine's resolved read path."""
+        if q.kind == "density":
+            return self.score_samples(xs)
+        if q.kind == "conditional":
+            return self.predict(xs, q.targets)
+        if q.kind == "label":
+            return self.predict_proba(xs, q.targets)
+        return self.sample(q.n, q.seed)
+
+    # ------------------------------------------------------------------
+    # state / introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def state(self) -> FIGMNState:
+        """The queryable mixture state: live on the runtime tier, the
+        published consolidated snapshot on fleet tiers (consolidating
+        once if nothing was published yet)."""
+        if not self._is_fleet:
+            return self.engine.state
+        if not self.engine.scoring.ready:
+            self.engine.consolidate()
+        return self.engine.global_state
+
+    @property
+    def read_shortlist_c(self) -> int:
+        """The read path's resolved shortlist width (0 = dense) — what the
+        engine actually serves with, for query-layer parity."""
+        if self._is_fleet:
+            return self.engine.scoring.shortlist_c
+        return self.cfg.shortlist_c if self.engine.path == "sparse" else 0
+
+    @property
+    def n_active(self) -> int:
+        return int(self.state.n_active)
+
+    def summary(self) -> Dict[str, object]:
+        """The engine's telemetry summary (schema differs per tier)."""
+        return (self.engine.summary() if self._is_fleet
+                else self.engine.telemetry.summary())
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+
+    def save(self) -> None:
+        """Checkpoint the whole session through the engine's own
+        machinery (runtime payload / fleet manifest + replica payloads);
+        the spec must configure a checkpoint dir."""
+        self.engine.checkpoint()
+
+    @classmethod
+    def load(cls, spec: MixtureSpec) -> "Mixture":
+        """Rebuild a session from ``spec``'s checkpoint dir — bit-identical
+        resume (states, chunk clocks, drift baselines, fleet membership).
+        Configs are code, not data: pass the same spec that saved."""
+        mix = cls(spec)
+        if not mix.engine.resume():
+            root = (spec.fleet.checkpoint_dir if spec.fleet is not None
+                    else None) or spec.runtime.checkpoint_dir
+            raise FileNotFoundError(
+                f"no checkpoint to load under {root!r} for tier "
+                f"{spec.tier!r}")
+        return mix
+
+    def close(self) -> None:
+        if self._is_fleet:
+            self.engine.close()
+
+    def __repr__(self) -> str:
+        path = (self.engine.path if not self._is_fleet
+                else ingest_mod.select_path(
+                    self.cfg, vmem_budget=self.spec.runtime.vmem_budget,
+                    requested=self.spec.runtime.path))
+        return (f"Mixture(tier={self.spec.tier!r}, dim={self.cfg.dim}, "
+                f"kmax={self.cfg.kmax}, path={path!r}, "
+                f"shortlist_c={self.cfg.shortlist_c})")

@@ -1,0 +1,124 @@
+"""The unified query layer: one ``Query``, executed against any mixture state.
+
+A FIGMN answers four kinds of question (the paper's §4 workloads):
+
+  density      log p(x) under the mixture               (OOD / anomaly)
+  conditional  E[x_targets | x_rest]  — eq. 27          (regression /
+               reconstruction: "any element predicts any other element")
+  label        the conditional over a trailing one-hot block, clipped and
+               renormalised to a distribution            (classification)
+  sample       draws from the mixture                    (generation)
+
+``execute`` runs a query against a raw ``(cfg, FIGMNState)`` pair — which
+is the point: a *live* ``StreamRuntime`` state and a *published* fleet
+snapshot are the same pytree, so the engine tiers differ only in which
+state they hand over (and which shortlist width their read path resolved).
+``StreamRuntime.predict``/``score`` and ``ScoringFrontend.predict``/
+``score`` are the tier bindings of exactly these four dispatch arms;
+tests/test_api.py pins that executing a query here against an engine's
+state is bit-identical to asking the engine itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import figmn, inference, shortlist
+from repro.core.types import Array, FIGMNConfig, FIGMNState
+
+KINDS = ("density", "conditional", "label", "sample")
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One declarative read against a mixture.
+
+    kind:     "density" | "conditional" | "label" | "sample".
+    targets:  dimension indices to reconstruct (conditional / label kinds);
+              inputs then carry the REMAINING dims in index order.
+    n:        number of draws (sample kind).
+    seed:     PRNG seed (sample kind).
+    """
+    kind: str
+    targets: Optional[Tuple[int, ...]] = None
+    n: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown query kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.kind in ("conditional", "label") and self.targets is None:
+            raise ValueError(f"{self.kind!r} queries need targets")
+
+
+def execute(cfg: FIGMNConfig, state: FIGMNState, query: Query,
+            xs: Optional[Array] = None, shortlist_c: int = 0) -> Array:
+    """Run ``query`` against a state (live or snapshot — identical math).
+
+    shortlist_c > 0 routes density/conditional through the sublinear top-C
+    read paths (``shortlist.score_batch_sparse`` /
+    ``inference.predict_batch_sparse``); 0 is the dense read.  The width is
+    the ENGINE's resolved one, passed in by the caller, so a query through
+    ``api.Mixture`` scores exactly like the engine's own front door.
+    """
+    if query.kind == "sample":
+        return sample(cfg, state, query.n, query.seed)
+    if xs is None:
+        raise ValueError(f"{query.kind!r} queries need input points")
+    xs = jnp.asarray(xs, cfg.dtype)
+    if query.kind == "density":
+        if shortlist_c > 0:
+            return shortlist.score_batch_sparse(cfg, state, xs,
+                                                c=shortlist_c)
+        return figmn.score_batch(cfg, state, xs)
+    rec = inference.predict_batch_routed(cfg, state, xs, query.targets,
+                                         c=shortlist_c)
+    if query.kind == "conditional":
+        return rec
+    return to_proba(rec)
+
+
+def to_proba(rec: Array) -> Array:
+    """Clip + renormalise a reconstructed one-hot block to a distribution.
+
+    The ONE definition of the label-query post-processing — the classifier
+    head and every tier's ``predict_proba`` share it, so their outputs
+    cannot drift.
+    """
+    rec = jnp.clip(rec, 1e-6, None)
+    return rec / jnp.sum(rec, axis=-1, keepdims=True)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _sample_jit(cfg: FIGMNConfig, state: FIGMNState, n: int,
+                seed: Array) -> Array:
+    key_c, key_z = jax.random.split(jax.random.PRNGKey(seed))
+    logw = jnp.where(state.active,
+                     jnp.log(jnp.maximum(state.sp, 1e-30)), -jnp.inf)
+    comp = jax.random.categorical(key_c, logw, shape=(n,))    # prior ∝ sp
+    z = jax.random.normal(key_z, (n, cfg.dim), cfg.dtype)
+    # C = Λ⁻¹ = L⁻ᵀL⁻¹ for Λ = LLᵀ ⇒ x = μ + L⁻ᵀ z has covariance C.
+    # Cholesky runs on the gathered rows only: comp never selects inactive
+    # slots (logw = -inf), and a pruned slot's stale Λ may be non-PSD.
+    lam_sel = state.lam[comp]                                  # (n, D, D)
+    chol_t = jnp.swapaxes(jnp.linalg.cholesky(lam_sel), -1, -2)
+    x = jax.scipy.linalg.solve_triangular(chol_t, z[..., None],
+                                          lower=False)[..., 0]
+    return state.mu[comp] + x
+
+
+def sample(cfg: FIGMNConfig, state: FIGMNState, n: int,
+           seed: int = 0) -> Array:
+    """(n, D) draws from the mixture (components ∝ sp, eq. 12).
+
+    Requires PSD precisions — guaranteed in "exact" update mode; the
+    printed eq. 11 ("paper" mode) can leave non-PSD components in extreme
+    regimes (see FIGMNConfig), which would surface here as NaN rows.
+    """
+    inference.require_nonempty(state)
+    return _sample_jit(cfg, state, int(n), jnp.asarray(int(seed)))

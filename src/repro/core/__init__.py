@@ -3,8 +3,10 @@
 ``figmn``    — precision-form fast algorithm (the paper, §3): O(NKD²)
 ``igmn_ref`` — covariance-form original IGMN (§2): O(NKD³) baseline
 ``shortlist``— top-C sublinear hot paths: O(KD + CD²) per point/score
-``inference``— conditional-mean supervised inference (eq. 15 / eq. 27)
-``head``     — streaming classifier head (paper's experiments §4)
+``inference``— conditional-mean inference (eq. 15 / eq. 27): batched dense
+               + shortlisted kernels behind ``repro.api``'s query layer
+``head``     — streaming classifier head (paper's experiments §4), a thin
+               adapter over ``repro.api.Mixture``
 ``sharded``  — multi-device FIGMN (components over TP axis, streams over DP)
 """
 from repro.core.types import (FIGMNConfig, FIGMNState, IGMNState,

@@ -90,17 +90,33 @@ def _log_density(cfg: FIGMNConfig, state: FIGMNState, d2: Array) -> Array:
     return -0.5 * (cfg.dim * _LOG_2PI + state.logdet + d2)
 
 
+def masked_posteriors(logp: Array, sp: Array, active: Array) -> Array:
+    """THE masked log-posterior softmax (eq. 3 over a slot pool).
+
+    The one shared definition of p(j|x) from per-slot log-densities: prior
+    p(j) ∝ sp_j (eq. 12 — the normaliser cancels in the softmax), inactive
+    slots forced to exactly 0, and the all-inactive case guarded (softmax
+    of all -inf would NaN; callers that must fail loudly on an empty pool
+    check n_active host-side BEFORE calling — see core.inference).
+
+    Component slots live on the LAST axis; leading axes are batch
+    (``logp`` may be (K,) or (B, K); ``sp``/``active`` broadcast).  Every
+    consumer — the dense learning step (``posteriors``), the sparse step
+    (``shortlist.learn_one_sparse`` on its C gathered rows) and both
+    eq. 27 conditional paths (``inference``) — runs these exact ops in
+    this exact order, so the paths cannot drift apart bit-wise.
+    """
+    logw = logp + jnp.log(jnp.maximum(sp, 1e-30))
+    logw = jnp.where(active, logw, -jnp.inf)
+    logw = jnp.where(jnp.any(active, axis=-1, keepdims=True), logw, 0.0)
+    post = jax.nn.softmax(logw, axis=-1)
+    return jnp.where(active, post, 0.0)
+
+
 def posteriors(cfg: FIGMNConfig, state: FIGMNState, d2: Array) -> Array:
     """p(j|x) over the pool (eq. 3); inactive slots get exactly 0."""
     logp = _log_density(cfg, state, d2)
-    # prior p(j) ∝ sp_j (eq. 12) — the normaliser cancels in the softmax.
-    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
-    logw = jnp.where(state.active, logw, -jnp.inf)
-    # Guard the all-inactive case (softmax of all -inf).
-    any_active = jnp.any(state.active)
-    logw = jnp.where(any_active, logw, 0.0)
-    post = jax.nn.softmax(logw)
-    return jnp.where(state.active, post, 0.0)
+    return masked_posteriors(logp, state.sp, state.active)
 
 
 def log_likelihood(cfg: FIGMNConfig, state: FIGMNState, x: Array) -> Array:

@@ -5,28 +5,51 @@ classifies by reconstructing the label block via the conditional mean
 (eq. 27) from the feature block — exactly how the paper runs its Table 1/4
 classification experiments (any element predicts any other element).
 
-Used in this framework both standalone (paper benchmarks) and as a streaming
-classifier/OOD head over frozen LM backbone features (see examples/).
+Since the unified estimator API landed, this head is a THIN ADAPTER over
+``repro.api.Mixture``: the joint-encoding and label-block bookkeeping live
+here, while fitting runs through the production engine tiers (streaming
+lifecycle, checkpoint/resume, fleet sharding) and inference through the
+unified query layer (label queries, dense or shortlisted).  The historical
+constructor keeps working unchanged; the appended ``tier`` /
+``shortlist_c`` / ``runtime`` / ``fleet`` knobs opt a classifier into any
+engine tier and the sublinear read/write paths.
+
+``fast=False`` remains the covariance-form IGMN baseline (O(D³)/point) —
+a faithfulness oracle, deliberately NOT routed through the engines.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import figmn, igmn_ref, inference
-from repro.core.types import Array, FIGMNConfig, FIGMNState, IGMNState
+from repro.core import igmn_ref, inference
+from repro.core.types import Array, FIGMNConfig
+
+_SIDECAR = "classifier.json"
+
+#: constructor fields persisted by save() and replayed by load()
+_CTOR_KEYS = ("n_features", "n_classes", "kmax", "beta", "delta", "vmin",
+              "spmin", "fast", "dtype", "tier", "shortlist_c")
 
 
 @dataclasses.dataclass
 class FIGMNClassifier:
     """Streaming classifier over D_feat features and n_classes labels.
 
-    fast=True  → precision-form FIGMN (the paper's contribution, O(D²)/point)
-    fast=False → covariance-form IGMN baseline (O(D³)/point)
+    fast=True  → precision-form FIGMN (the paper's contribution,
+                 O(D²)/point), running as a ``Mixture`` session.
+    fast=False → covariance-form IGMN baseline (O(D³)/point).
+    tier:        Mixture engine tier ("runtime" | "fleet" | "autoscaled").
+    shortlist_c: top-C component shortlist width (0 = dense) — flips both
+                 the ingest and the label-query hot paths sublinear in K.
+    runtime/fleet: optional RuntimeConfig / FleetConfig overrides
+                 (checkpointing, chunking, sharding).
     """
     n_features: int
     n_classes: int
@@ -39,15 +62,39 @@ class FIGMNClassifier:
     dtype: str = "float32"
     cfg: Optional[FIGMNConfig] = None
     state: object = None
+    tier: str = "runtime"
+    shortlist_c: int = 0
+    runtime: Optional[object] = None     # stream.RuntimeConfig
+    fleet: Optional[object] = None       # fleet.FleetConfig
 
     def __post_init__(self):
         self.dim = self.n_features + self.n_classes
-        self._mod = figmn if self.fast else igmn_ref
         self._idx_out = np.arange(self.n_features, self.dim, dtype=np.int32)
+        self._mix = None
+
+    @property
+    def mixture(self):
+        """The underlying ``api.Mixture`` session (fast=True, post-init)."""
+        return self._mix
 
     def _joint(self, x: Array, y: Array) -> Array:
         onehot = jax.nn.one_hot(y, self.n_classes, dtype=x.dtype)
         return jnp.concatenate([x, onehot], axis=-1)
+
+    def _model_config(self, sigma: Array) -> FIGMNConfig:
+        return FIGMNConfig(kmax=self.kmax, dim=self.dim, beta=self.beta,
+                           delta=self.delta, vmin=self.vmin,
+                           spmin=self.spmin, dtype_str=self.dtype,
+                           shortlist_c=self.shortlist_c, sigma_ini=sigma)
+
+    def _attach(self) -> None:
+        """Resolve the Mixture session for the current cfg (fast=True)."""
+        from repro.api import Mixture, MixtureSpec     # core stays a leaf
+        from repro.stream import RuntimeConfig
+        spec = MixtureSpec(model=self.cfg, tier=self.tier,
+                           runtime=self.runtime or RuntimeConfig(),
+                           fleet=self.fleet)
+        self._mix = Mixture(spec)
 
     def initialise(self, x_sample: Array) -> None:
         """Derive sigma_ini from a data sample (or estimate) per eq. 13."""
@@ -57,32 +104,103 @@ class FIGMNClassifier:
         # the conservative estimate the paper permits for online operation.
         label_std = jnp.ones((self.n_classes,), x_sample.dtype)
         sigma = self.delta * jnp.concatenate([feat_std, label_std])
-        self.cfg = FIGMNConfig(kmax=self.kmax, dim=self.dim, beta=self.beta,
-                               delta=self.delta, vmin=self.vmin,
-                               spmin=self.spmin, dtype_str=self.dtype,
-                               sigma_ini=sigma)
-        self.state = self._mod.init_state(self.cfg)
+        self.cfg = self._model_config(sigma)
+        if self.fast:
+            self._attach()
+            self.state = self._mix.engine.state if self.tier == "runtime" \
+                else None
+        else:
+            self.state = igmn_ref.init_state(self.cfg)
 
     def partial_fit(self, x: Array, y: Array) -> None:
         """Single-pass learning over a (batch of) labelled points."""
         if self.cfg is None:
             self.initialise(x)
         xs = self._joint(jnp.atleast_2d(x), jnp.atleast_1d(y))
-        self.state = self._mod.fit(self.cfg, self.state, xs)
+        if self.fast:
+            self._mix.partial_fit(xs)
+            self.state = self._mix.state
+        else:
+            self.state = igmn_ref.fit(self.cfg, self.state, xs)
 
     def predict_proba(self, x: Array) -> Array:
+        """(N, n_classes) label distributions — the unified label query."""
+        from repro.api import query as query_mod
         xs = jnp.atleast_2d(x)
         if self.fast:
-            rec = inference.predict_batch(self.cfg, self.state, xs,
+            return self._mix.predict_proba(xs, targets=self._idx_out)
+        rec = inference.predict_ref_batch(self.cfg, self.state, xs,
                                           self._idx_out)
-        else:
-            rec = inference.predict_ref_batch(self.cfg, self.state, xs,
-                                              self._idx_out)
-        rec = jnp.clip(rec, 1e-6, None)
-        return rec / jnp.sum(rec, axis=-1, keepdims=True)
+        return query_mod.to_proba(rec)
 
     def predict(self, x: Array) -> Array:
         return jnp.argmax(self.predict_proba(x), axis=-1)
 
     def score(self, x: Array, y: Array) -> float:
         return float(jnp.mean(self.predict(x) == jnp.asarray(y)))
+
+    # ------------------------------------------------------------------
+    # persistence — rides Mixture.save/load, plus a sidecar so load()
+    # can rebuild the derived FIGMNConfig (sigma_ini is data-derived)
+    # ------------------------------------------------------------------
+
+    def _ckpt_root(self) -> str:
+        root = None
+        if self.fleet is not None:
+            root = self.fleet.checkpoint_dir
+        if root is None and self.runtime is not None:
+            root = self.runtime.checkpoint_dir
+        if root is None:
+            raise RuntimeError("no checkpoint_dir configured (set one on "
+                               "the runtime/fleet config)")
+        return root
+
+    def save(self) -> None:
+        """Checkpoint the whole classifier session (fast=True only)."""
+        if not self.fast or self._mix is None:
+            raise RuntimeError("save() needs a fitted fast=True classifier "
+                               "(the baseline path has no engine)")
+        self._mix.save()
+        doc = {k: getattr(self, k) for k in _CTOR_KEYS}
+        doc["sigma_ini"] = np.asarray(self.cfg.sigma_ini,
+                                      np.float64).tolist()
+        doc["update_mode"] = self.cfg.update_mode
+        with open(os.path.join(self._ckpt_root(), _SIDECAR), "w") as f:
+            json.dump(doc, f)
+
+    @classmethod
+    def load(cls, checkpoint_dir: str, runtime: Optional[object] = None,
+             fleet: Optional[object] = None) -> "FIGMNClassifier":
+        """Rebuild a saved classifier from its checkpoint dir.
+
+        Engine configs are code, not data (the ``Mixture.load``
+        convention): the sidecar replays the constructor scalars and the
+        data-derived sigma_ini, but a non-default session must re-pass
+        its ``runtime``/``fleet`` configs.  A fleet-tier load REFUSES to
+        guess (router/global_kmax/membership change the consolidated
+        snapshot — silent defaults would resume a different model); a
+        runtime-tier load without ``runtime`` resumes the mixture state
+        bit-identically and continues ingesting with default chunking."""
+        from repro.stream import RuntimeConfig
+        with open(os.path.join(checkpoint_dir, _SIDECAR)) as f:
+            doc = json.load(f)
+        if doc["tier"] != "runtime" and fleet is None:
+            raise ValueError(
+                f"saved classifier ran tier {doc['tier']!r}: pass the "
+                f"original FleetConfig (incl. its checkpoint_dir) — "
+                f"engine configs are code, not data, and guessed fleet "
+                f"defaults would resume a different consolidated model")
+        clf = cls(**{k: doc[k] for k in _CTOR_KEYS},
+                  runtime=runtime, fleet=fleet)
+        if clf.runtime is None and clf.fleet is None:
+            clf.runtime = RuntimeConfig(checkpoint_dir=checkpoint_dir)
+        sigma = jnp.asarray(doc["sigma_ini"], jnp.dtype(doc["dtype"]))
+        clf.cfg = dataclasses.replace(clf._model_config(sigma),
+                                      update_mode=doc["update_mode"])
+        from repro.api import Mixture, MixtureSpec
+        spec = MixtureSpec(model=clf.cfg, tier=clf.tier,
+                           runtime=clf.runtime or RuntimeConfig(),
+                           fleet=clf.fleet)
+        clf._mix = Mixture.load(spec)
+        clf.state = clf._mix.state
+        return clf

@@ -19,16 +19,35 @@ precision matrix Λ via the block decomposition
 Only W (o×o, o = #targets ≪ D) is ever inverted ⇒ O(KD²·o + Ko³) per query,
 versus the baseline's O(KD³).  For o = 1 (the paper's Weka setting) the
 "inversion" is a scalar reciprocal.
+
+Serving shape: ``predict_batch`` is ONE jitted (B, ·) kernel — the
+per-component factors (W⁻¹Z, the Schur-complement marginal precision, the
+marginal log-determinant) are computed ONCE per (state, targets) call and
+shared across the whole batch, instead of the former vmap-over-per-point-jit.
+``predict_batch_sparse`` is its shortlisted twin (the PR-4 bound pass run on
+the known-block marginal): an O(K·i) diag proxy ranks the slots per point
+and the exact O(D²·o) work runs on the C gathered rows —
+O(K·D + C·D²·o) per point instead of O(K·D²·o), bit-identical to the dense
+kernel when C covers the pool (the shortlist would be the identity
+permutation, so the sparse jit short-circuits to the SAME dense block
+body — see ``predict_batch_sparse`` for the full exactness contract).
+
+Empty-mixture contract: eq. 27 is undefined over zero active components —
+the masked softmax would return an all-zero posterior and the "prediction"
+would be a silent zero vector.  Every public entry point here checks
+``n_active`` HOST-SIDE and raises instead (the one deliberate device sync
+of the read path; jitted internals stay branch-free).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import figmn
 from repro.core.types import Array, FIGMNConfig, FIGMNState, IGMNState
 
 _LOG_2PI = 1.8378770664093453
@@ -40,46 +59,224 @@ def _split_indices(dim: int, idx_out) -> Tuple[np.ndarray, np.ndarray]:
     return idx_in, idx_out
 
 
-@partial(jax.jit, static_argnames=("idx_out_t",))
-def _predict_fast(cfg: FIGMNConfig, state: FIGMNState, x_in: Array,
-                  idx_out_t: Tuple[int, ...]) -> Array:
-    idx_in, idx_out = _split_indices(cfg.dim, np.asarray(idx_out_t))
+def _as_targets(idx_out) -> Tuple[int, ...]:
+    return tuple(int(i) for i in np.asarray(idx_out).reshape(-1))
+
+
+def require_nonempty(state) -> None:
+    """Host-side guard at the inference API boundary.
+
+    With no active components the masked posterior is all-zero and the
+    conditional mean degenerates to a zero vector — silent garbage.  A
+    mixture you can query must have been fitted first; fail loudly.
+    """
+    if int(jax.device_get(state.n_active)) == 0:
+        raise ValueError(
+            "cannot run inference on an empty mixture: no active "
+            "components (the eq. 27 posterior is undefined and would "
+            "silently return zeros) — fit data first")
+
+
+class _CondFactors(NamedTuple):
+    """Per-component eq. 27 factors, computed once per (state, targets)."""
+    mu_in: Array      # (K, i)
+    mu_out: Array     # (K, o)
+    winv_z: Array     # (K, o, i)  W⁻¹Z — the conditional-mean operator
+    prec_in: Array    # (K, i, i)  C_i⁻¹ = X − Y W⁻¹ Z (Schur complement)
+    logdet_in: Array  # (K,)       log|C_i| = log|C| + log|W|
+
+
+def _conditional_factors(state: FIGMNState, idx_in: np.ndarray,
+                         idx_out: np.ndarray) -> _CondFactors:
     lam = state.lam
     X = lam[:, idx_in[:, None], idx_in[None, :]]        # (K, i, i)
     Y = lam[:, idx_in[:, None], idx_out[None, :]]       # (K, i, o)
     W = lam[:, idx_out[:, None], idx_out[None, :]]      # (K, o, o)
     Z = jnp.swapaxes(Y, -1, -2)                         # (K, o, i)
-    diff = x_in[None, :] - state.mu[:, idx_in]          # (K, i)
+    winv_z = jnp.linalg.solve(W, Z)                     # o×o solve only
+    prec_in = X - jnp.einsum("kio,koj->kij", Y, winv_z)
+    _, logdet_w = jnp.linalg.slogdet(W)                 # o×o
+    return _CondFactors(mu_in=state.mu[:, idx_in],
+                        mu_out=state.mu[:, idx_out],
+                        winv_z=winv_z, prec_in=prec_in,
+                        logdet_in=state.logdet + logdet_w)
 
-    WinvZ = jnp.linalg.solve(W, Z)                      # (K, o, i)  o×o solve
-    xhat_j = state.mu[:, idx_out] \
-        - jnp.einsum("koi,ki->ko", WinvZ, diff)         # eq. 27 per component
 
-    # Marginal density of the known slice, from Λ blocks only.
-    prec_i = X - jnp.einsum("kio,koj->kij", Y, WinvZ)   # C_i⁻¹ (K, i, i)
-    d2 = jnp.einsum("ki,kij,kj->k", diff, prec_i, diff)
-    _, logdetW = jnp.linalg.slogdet(W)                  # o×o
-    logdet_ci = state.logdet + logdetW
+def _dense_block(f: _CondFactors, ni: int, sp: Array, active: Array,
+                 xb: Array) -> Array:
+    """The dense eq. 27 block body — THE one implementation both read
+    paths run: ``_predict_batch_jit`` maps it over every block, and
+    ``_predict_sparse_jit`` short-circuits to it whenever C covers the
+    pool (the shortlist would be the identity permutation), which is what
+    makes the C ≥ K case bit-identical BY CONSTRUCTION rather than by
+    lowering coincidence.  The W⁻¹Z·diff contraction is spelled as
+    multiply + last-axis reduce (not a dot_general) so the gathered twin
+    reduces over the same extents."""
+    diff = xb[:, None, :] - f.mu_in[None, :, :]          # (B, K, i)
+    xhat = f.mu_out[None, :, :] \
+        - jnp.sum(f.winv_z[None] * diff[:, :, None, :], axis=-1)
+    t = jnp.einsum("kij,bkj->bki", f.prec_in, diff)
+    d2 = jnp.einsum("bki,bki->bk", diff, t)
+    logp = -0.5 * (ni * _LOG_2PI + f.logdet_in[None, :] + d2)
+    post = figmn.masked_posteriors(logp, sp, active)
+    return jnp.einsum("bk,bko->bo", post, xhat)
+
+
+def _map_blocks(block, xs: Array, o: int, block_b: int) -> Array:
+    """Fixed-shape serving blocking (shared by BOTH eq. 27 read paths).
+
+    XLA's lowering of a big (B, K) contraction is batch-size dependent —
+    a 4096-row GEMM and a 512-row one may reassociate reductions
+    differently — so large requests are mapped over fixed (block_b, ·)
+    tiles, which bounds peak memory and keeps every above-block_b request
+    size numerically identical tile-for-tile.  What matters for the
+    exactness contract is that dense and sparse share THIS function with
+    the same block_b: whatever shape a request takes, both paths reduce
+    over identical extents, so their bit-identity holds at every request
+    size.  (A request with n ≤ block_b runs one (n, ·) kernel — its bits
+    may differ from the same points inside a full tile, on both paths
+    equally.)"""
+    n = xs.shape[0]
+    if n <= block_b:
+        return block(xs)
+    pad = (-n) % block_b
+    xs_p = jnp.pad(xs, ((0, pad), (0, 0)))
+    out = jax.lax.map(block, xs_p.reshape(-1, block_b, xs.shape[1]))
+    return out.reshape(-1, o)[:n]
+
+
+@partial(jax.jit, static_argnames=("idx_out_t", "block_b"))
+def _predict_batch_jit(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
+                       idx_out_t: Tuple[int, ...],
+                       block_b: int = 512) -> Array:
+    """The dense batched eq. 27 kernel: factors once, blocked (B, K)
+    sweeps."""
+    idx_in, idx_out = _split_indices(cfg.dim, np.asarray(idx_out_t))
+    f = _conditional_factors(state, idx_in, idx_out)
     ni = idx_in.shape[0]
-    logp = -0.5 * (ni * _LOG_2PI + logdet_ci + d2)
-    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
-    logw = jnp.where(state.active, logw, -jnp.inf)
-    post = jax.nn.softmax(jnp.where(jnp.any(state.active), logw, 0.0))
-    post = jnp.where(state.active, post, 0.0)
-    return jnp.einsum("k,ko->o", post, xhat_j)
+
+    def block(xb: Array) -> Array:
+        return _dense_block(f, ni, state.sp, state.active, xb)
+
+    return _map_blocks(block, xs_in, len(idx_out_t), block_b)
 
 
 def predict(cfg: FIGMNConfig, state: FIGMNState, x_in: Array,
             idx_out) -> Array:
     """Reconstruct x[idx_out] from x_in (the remaining dims, in index order)."""
-    return _predict_fast(cfg, state, x_in,
-                         tuple(int(i) for i in np.asarray(idx_out)))
+    require_nonempty(state)
+    return _predict_batch_jit(cfg, state, jnp.asarray(x_in)[None, :],
+                              _as_targets(idx_out))[0]
 
 
 def predict_batch(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
                   idx_out) -> Array:
-    idx = tuple(int(i) for i in np.asarray(idx_out))
-    return jax.vmap(lambda x: _predict_fast(cfg, state, x, idx))(xs_in)
+    """(B, o) conditional means — one jitted batched kernel (see module
+    docstring), not a vmap of per-point calls."""
+    require_nonempty(state)
+    return _predict_batch_jit(cfg, state, jnp.asarray(xs_in),
+                              _as_targets(idx_out))
+
+
+def predict_batch_routed(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
+                         idx_out, c: int = 0) -> Array:
+    """THE dense/sparse conditional dispatch every read front shares.
+
+    c > 0 routes through the shortlisted kernel, c <= 0 through the dense
+    one.  ``StreamRuntime.predict``, ``ScoringFrontend.predict`` and
+    ``api.query.execute`` all call this one switch with their resolved
+    width, so the tiers cannot drift apart in dispatch semantics — their
+    equivalence is structural, not merely test-enforced."""
+    if c > 0:
+        return predict_batch_sparse(cfg, state, xs_in, idx_out, c=c)
+    return predict_batch(cfg, state, xs_in, idx_out)
+
+
+# ---------------------------------------------------------------------------
+# Shortlisted conditional path — the PR-4 bound pass on the known-block
+# marginal: O(K·D + C·D²·o) per point instead of O(K·D²·o).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("idx_out_t", "c", "block_b"))
+def _predict_sparse_jit(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
+                        idx_out_t: Tuple[int, ...], c: int,
+                        block_b: int = 512) -> Array:
+    idx_in, idx_out = _split_indices(cfg.dim, np.asarray(idx_out_t))
+    f = _conditional_factors(state, idx_in, idx_out)
+    ni = idx_in.shape[0]
+    kpool = int(state.active.shape[0])
+    # Bound pass on the KNOWN-BLOCK MARGINAL (same proxy family as
+    # core.shortlist): diag of the Schur-complement precision stands in for
+    # the full marginal Mahalanobis form, plus the marginal logdet +
+    # log-prior bias the true posterior carries.  All O(K·i) per point,
+    # matmul-spelled like shortlist._topc_exact_batch.
+    diag_in = jnp.diagonal(f.prec_in, axis1=1, axis2=2)   # (K, i)
+    bias = -0.5 * f.logdet_in + jnp.log(jnp.maximum(state.sp, 1e-30))
+    dmu = diag_in * f.mu_in                               # (K, i)
+    m2 = jnp.sum(dmu * f.mu_in, axis=1)                   # (K,)
+    mu2 = jnp.sum(f.mu_in * f.mu_in, axis=1)              # (K,) (euclid)
+
+    def block_sparse(xb: Array) -> Array:
+        if cfg.shortlist_mode == "euclid":
+            proxy = -0.5 * (jnp.sum(xb * xb, axis=1)[:, None]
+                            - 2.0 * (xb @ f.mu_in.T) + mu2[None, :])
+        else:
+            d2_diag = (xb * xb) @ diag_in.T - 2.0 * (xb @ dmu.T) \
+                + m2[None, :]
+            proxy = bias[None, :] - 0.5 * d2_diag
+        proxy = jnp.where(state.active[None, :], proxy, -jnp.inf)
+        idx = jnp.sort(jax.lax.top_k(proxy, c)[1], axis=1)    # (B, C)
+        diff = xb[:, None, :] - f.mu_in[idx]                  # (B, C, i)
+        # same multiply+reduce spelling as the dense block (bit-identity)
+        xhat = f.mu_out[idx] \
+            - jnp.sum(f.winv_z[idx] * diff[:, :, None, :], axis=-1)
+        t = jnp.einsum("bcij,bcj->bci", f.prec_in[idx], diff)
+        d2 = jnp.einsum("bci,bci->bc", diff, t)
+        logp = -0.5 * (ni * _LOG_2PI + f.logdet_in[idx] + d2)
+        post = figmn.masked_posteriors(logp, state.sp[idx],
+                                       state.active[idx])
+        return jnp.einsum("bc,bco->bo", post, xhat)
+
+    def block_dense(xb: Array) -> Array:
+        return _dense_block(f, ni, state.sp, state.active, xb)
+
+    # C covering the pool ⇒ the sorted shortlist IS the identity
+    # permutation: skip the bound pass + gather and run the shared dense
+    # block body — bit-identity with predict_batch by construction (and
+    # strictly faster than gathering every row).
+    block = block_dense if c >= kpool else block_sparse
+    return _map_blocks(block, xs_in, len(idx_out_t), block_b)
+
+
+def predict_batch_sparse(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
+                         idx_out, c: int | None = None,
+                         block_b: int = 512) -> Array:
+    """(B, o) conditional means with a top-C component shortlist.
+
+    An O(K·i) bound pass on the known-block marginal ranks the slots per
+    point; the exact eq. 27 work (conditional mean, Schur-complement
+    Mahalanobis, masked posterior) runs on the C gathered rows only.
+
+    Exactness contract (tests/test_api.py, same pattern as the shortlisted
+    score/fit paths): with C covering the pool the shortlist is the
+    identity permutation and the SAME dense block body runs —
+    BIT-IDENTICAL to ``predict_batch`` by construction, at any batch size.
+    With active K ≤ C < K the bound pass selects every live component
+    (its -inf masking guarantees actives outrank the inactive tail), so
+    no posterior mass is dropped: bit-identical at golden-stream scale
+    (pinned), float-tolerance-identical in general (the gathered einsums
+    reduce in a different order, which large Mahalanobis distances
+    amplify).  Below active K the truncation drops only numerically-zero
+    posterior tail mass.
+    """
+    require_nonempty(state)
+    kpool = int(state.active.shape[0])
+    c = min(int(cfg.shortlist_c if c is None else c), kpool)
+    if c <= 0:
+        raise ValueError("predict_batch_sparse needs a positive shortlist "
+                         "width (cfg.shortlist_c or the c argument)")
+    return _predict_sparse_jit(cfg, state, jnp.asarray(xs_in),
+                               _as_targets(idx_out), c, block_b)
 
 
 # ---------------------------------------------------------------------------
@@ -87,35 +284,35 @@ def predict_batch(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("idx_out_t",))
-def _predict_ref(cfg: FIGMNConfig, state: IGMNState, x_in: Array,
-                 idx_out_t: Tuple[int, ...]) -> Array:
+def _predict_ref_batch_jit(cfg: FIGMNConfig, state: IGMNState, xs_in: Array,
+                           idx_out_t: Tuple[int, ...]) -> Array:
     idx_in, idx_out = _split_indices(cfg.dim, np.asarray(idx_out_t))
     cov = state.cov
     C_i = cov[:, idx_in[:, None], idx_in[None, :]]      # (K, i, i)
     C_ti = cov[:, idx_out[:, None], idx_in[None, :]]    # (K, o, i)
-    diff = x_in[None, :] - state.mu[:, idx_in]
+    diff = xs_in[:, None, :] - state.mu[None, :, idx_in]
 
-    sol = jnp.linalg.solve(C_i, diff[..., None])[..., 0]   # O(D³)
-    xhat_j = state.mu[:, idx_out] + jnp.einsum("koi,ki->ko", C_ti, sol)
+    sol = jnp.linalg.solve(C_i[None], diff[..., None])[..., 0]   # O(D³)
+    xhat = state.mu[None, :, idx_out] \
+        + jnp.einsum("koi,bki->bko", C_ti, sol)
 
-    d2 = jnp.einsum("ki,ki->k", diff, sol)
-    _, logdet_ci = jnp.linalg.slogdet(C_i)                  # O(D³)
+    d2 = jnp.einsum("bki,bki->bk", diff, sol)
+    _, logdet_ci = jnp.linalg.slogdet(C_i)                       # O(D³)
     ni = idx_in.shape[0]
-    logp = -0.5 * (ni * _LOG_2PI + logdet_ci + d2)
-    logw = logp + jnp.log(jnp.maximum(state.sp, 1e-30))
-    logw = jnp.where(state.active, logw, -jnp.inf)
-    post = jax.nn.softmax(jnp.where(jnp.any(state.active), logw, 0.0))
-    post = jnp.where(state.active, post, 0.0)
-    return jnp.einsum("k,ko->o", post, xhat_j)
+    logp = -0.5 * (ni * _LOG_2PI + logdet_ci[None, :] + d2)
+    post = figmn.masked_posteriors(logp, state.sp, state.active)
+    return jnp.einsum("bk,bko->bo", post, xhat)
 
 
 def predict_ref(cfg: FIGMNConfig, state: IGMNState, x_in: Array,
                 idx_out) -> Array:
-    return _predict_ref(cfg, state, x_in,
-                        tuple(int(i) for i in np.asarray(idx_out)))
+    require_nonempty(state)
+    return _predict_ref_batch_jit(cfg, state, jnp.asarray(x_in)[None, :],
+                                  _as_targets(idx_out))[0]
 
 
 def predict_ref_batch(cfg: FIGMNConfig, state: IGMNState, xs_in: Array,
                       idx_out) -> Array:
-    idx = tuple(int(i) for i in np.asarray(idx_out))
-    return jax.vmap(lambda x: _predict_ref(cfg, state, x, idx))(xs_in)
+    require_nonempty(state)
+    return _predict_ref_batch_jit(cfg, state, jnp.asarray(xs_in),
+                                  _as_targets(idx_out))

@@ -174,11 +174,7 @@ def learn_one_sparse(cfg: FIGMNConfig, state: FIGMNState, diag: Array,
     logdet_sel = state.logdet[idx]
     sp_sel = state.sp[idx]
     logp = -0.5 * (cfg.dim * _LOG_2PI + logdet_sel + d2)
-    logw = logp + jnp.log(jnp.maximum(sp_sel, 1e-30))
-    logw = jnp.where(active_sel, logw, -jnp.inf)
-    logw = jnp.where(jnp.any(active_sel), logw, 0.0)
-    post = jax.nn.softmax(logw)
-    post = jnp.where(active_sel, post, 0.0)
+    post = figmn.masked_posteriors(logp, sp_sel, active_sel)
 
     sp_new_sel = sp_sel + post                            # eq. 5
     w = post / jnp.maximum(sp_new_sel, 1e-30)             # eq. 7

@@ -225,6 +225,20 @@ class FleetCoordinator:
             self.consolidate()
         return self.scoring.score_async(xs)
 
+    def predict(self, xs, targets) -> Array:
+        """Serving conditional read (eq. 27): (N, o) reconstructions of
+        ``targets`` under the published snapshot (consolidates first if
+        nothing was published yet) — same snapshot contract as score."""
+        if not self.scoring.ready:
+            self.consolidate()
+        return self.scoring.predict(xs, targets)
+
+    def predict_async(self, xs, targets):
+        """Non-blocking conditional read; Future of predict(xs, targets)."""
+        if not self.scoring.ready:
+            self.consolidate()
+        return self.scoring.predict_async(xs, targets)
+
     # ------------------------------------------------------------------
     # autoscaling
     # ------------------------------------------------------------------

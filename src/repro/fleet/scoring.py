@@ -1,6 +1,10 @@
-"""Serving-path scoring from a read-only consolidated snapshot.
+"""Serving-path reads from a read-only consolidated snapshot.
 
-The serving contract: ``score()`` NEVER touches a live replica.  Replicas
+Two read families share one contract: ``score``/``score_async`` (mixture
+log-densities) and ``predict``/``predict_async`` (eq. 27 conditional
+reconstruction — the unified query layer's conditional/label kinds).
+
+The serving contract: a read NEVER touches a live replica.  Replicas
 mutate their states on every chunk; a scorer reading them mid-stream would
 see a half-drifted mixture and, worse, would serialise reads against
 ingestion.  Instead the coordinator *publishes* each consolidated global
@@ -31,7 +35,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.core import shortlist
+from repro.core import inference, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState
 from repro.stream import ingest
 
@@ -98,6 +102,32 @@ class ScoringFrontend:
         """Queue a score; the returned future resolves off the caller's
         thread, against whichever snapshot is current when it runs."""
         return self._pool.submit(self.score, xs)
+
+    def predict(self, xs, targets) -> Array:
+        """(N, o) eq. 27 conditional means under the current snapshot.
+
+        Same serving contract as ``score``: snapshot-atomic (the state is
+        captured once under the swap lock; a concurrent publish cannot
+        tear the read), never blocks or mutates ingesting replicas, and
+        honours the frontend's resolved read path — a shortlist width C
+        serves the conditional sublinearly (O(K·D + C·D²·o) per point,
+        bit-identical to dense at C ≥ active K)."""
+        state, _ = self.snapshot()
+        if state is None:
+            raise RuntimeError("no consolidated snapshot published yet")
+        xs = jnp.asarray(xs, self.cfg.dtype)
+        out = inference.predict_batch_routed(self.cfg, state, xs, targets,
+                                             c=self.shortlist_c)
+        with self._lock:        # += races across pool threads otherwise
+            self.served += int(out.shape[0])
+        return out
+
+    def predict_async(self, xs, targets) -> "Future[Array]":
+        """Queue a conditional read; resolves off the caller's thread
+        against whichever snapshot is current when it runs — the serving
+        front door keeps answering eq. 27 while the coordinator is mid
+        ingest."""
+        return self._pool.submit(self.predict, xs, targets)
 
     def close(self) -> None:
         self._pool.shutdown(wait=True)

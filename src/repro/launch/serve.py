@@ -24,10 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.api import Mixture, MixtureSpec
 from repro.checkpoint import CheckpointManager
 from repro.core import figmn
 from repro.core.types import FIGMNConfig
-from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
+from repro.fleet import AutoscaleConfig, FleetConfig
 from repro.models import transformer as tr
 from repro.serve.engine import Request, ServeEngine
 from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
@@ -98,39 +99,48 @@ def main() -> None:
     print(f"latency p50={ls[len(ls) // 2] * 1e3:.0f}ms "
           f"p95={ls[int(len(ls) * 0.95) - 1] * 1e3:.0f}ms")
 
-    # FIGMN OOD monitor over prompt-embedding means (first 16 dims), run as
-    # the stream FLEET a serving deployment keeps open: request features
-    # hash-sharded across replicas (each with chunked ingest, a fixed
-    # component budget and drift detection), consolidated into one global
-    # mixture, and scored from the read-only serving snapshot.
+    # FIGMN OOD monitor over prompt-embedding means (first 16 dims), run
+    # through the unified estimator API as the mixture session a serving
+    # deployment keeps open: the spec resolves to a hash-sharded fleet
+    # (or a telemetry-autoscaled one), request features stream through
+    # chunked per-replica ingest with lifecycle budgets and drift
+    # detection, and every read — density scores AND eq. 27 conditional
+    # reconstructions — is served from the read-only consolidated
+    # snapshot without ever blocking ingestion.
     emb = np.asarray(params["embed"], np.float32)
     feats = np.stack([emb[r.prompt].mean(0)[:16] for r in reqs])
     gcfg = FIGMNConfig(kmax=8, dim=16, beta=0.1, delta=1.0, vmin=1e9,
                        spmin=0.0, update_mode="exact",
-                       # C > 0 flips BOTH hot paths sublinear: ingest
-                       # dispatches to the "sparse" body and the scoring
-                       # frontend runs the shortlisted batched scorer
+                       # C > 0 flips ALL hot paths sublinear: ingest
+                       # dispatches to the "sparse" body and the serving
+                       # frontend shortlists both score() and predict()
                        shortlist_c=max(args.score_shortlist, 0),
                        sigma_ini=figmn.sigma_from_data(
                            jnp.asarray(feats), 1.0))
-    monitor = FleetCoordinator(
-        gcfg,
-        FleetConfig(n_replicas=1 if args.ood_autoscale
-                    else args.ood_replicas,
-                    router="hash", consolidate_every=1, global_kmax=8,
-                    autoscale=AutoscaleConfig(
-                        min_replicas=1,
-                        max_replicas=max(args.ood_replicas, 1),
-                        cooldown=1) if args.ood_autoscale else None),
-        RuntimeConfig(
+    monitor = Mixture(MixtureSpec(
+        model=gcfg,
+        tier="autoscaled" if args.ood_autoscale else "fleet",
+        runtime=RuntimeConfig(
             chunk=max(args.requests // 4, 4),
             lifecycle=LifecycleConfig(k_budget=8, every=4),
             drift=DriftConfig(window=8, threshold=8.0,
-                              response="inflate")))
-    summary = monitor.ingest(feats)
-    # snapshot read — non-blocking w.r.t. ingestion (score_async exists
-    # for callers that also want to get off their own thread)
-    scores = monitor.score(feats)
+                              response="inflate")),
+        fleet=FleetConfig(
+            n_replicas=1 if args.ood_autoscale else args.ood_replicas,
+            router="hash", consolidate_every=1, global_kmax=8,
+            autoscale=AutoscaleConfig(
+                min_replicas=1,
+                max_replicas=max(args.ood_replicas, 1),
+                cooldown=1) if args.ood_autoscale else None)))
+    monitor.partial_fit(feats)
+    summary = monitor.summary()
+    # snapshot reads — non-blocking w.r.t. ingestion (score_async /
+    # predict_async exist for callers that also want off their own thread)
+    scores = monitor.score_samples(feats)
+    # eq. 27 on the serving path: reconstruct the last embedding feature
+    # from the rest — the residual is a per-request drift/corruption probe
+    recon = monitor.predict(feats[:, :-1], targets=[gcfg.dim - 1])
+    resid = float(jnp.mean(jnp.abs(recon[:, 0] - feats[:, -1])))
     monitor.close()
     shortcut = (f"shortlist C={gcfg.shortlist_c}, "
                 if gcfg.shortlist_c > 0 else "")
@@ -143,7 +153,8 @@ def main() -> None:
           f"snapshot v{summary['snapshot_version']}, "
           f"drift alarms={summary['drift_alarms']}, "
           f"scale events={summary['scale_ups']}+{summary['scale_downs']} "
-          f"epoch={summary['epoch']})")
+          f"epoch={summary['epoch']}, "
+          f"eq27 |x̂₁₅−x₁₅| = {resid:.3f})")
 
 
 if __name__ == "__main__":

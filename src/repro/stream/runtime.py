@@ -24,7 +24,7 @@ import numpy as np
 import jax
 
 from repro.checkpoint import CheckpointManager
-from repro.core import figmn, shortlist
+from repro.core import figmn, inference, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
 from repro.stream import drift as drift_mod
 from repro.stream import ingest, lifecycle, telemetry
@@ -293,6 +293,19 @@ class StreamRuntime:
         if self.path == "sparse":
             return shortlist.score_batch_sparse(self.cfg, self.state, xs)
         return ingest.score_batch_jit(self.cfg, self.state, xs)
+
+    def predict(self, xs, targets) -> Array:
+        """(N, o) eq. 27 conditional means of ``targets`` given the rest,
+        under the current state (read-only; raises on an empty pool).
+
+        Same path contract as ``score``: a shortlisted runtime serves the
+        conditional through ``inference.predict_batch_sparse`` (O(K·D +
+        C·D²·o) per point, bit-identical to dense at C ≥ active K), a
+        dense one through the batched dense kernel."""
+        xs = jnp.asarray(xs, self.cfg.dtype)
+        return inference.predict_batch_routed(
+            self.cfg, self.state, xs, targets,
+            c=self.cfg.shortlist_c if self.path == "sparse" else 0)
 
     def _payload(self) -> Dict[str, object]:
         """Everything a resumed runtime needs to continue bit-identically:
