@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import figmn
+from repro.obs import export as obs_export
 from repro.core.types import FIGMNConfig
 from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
 from repro.stream import LifecycleConfig, RuntimeConfig
@@ -154,8 +155,7 @@ def run(out_path: str = "BENCH_autoscale.json", quick: bool = False
            "ll_gap": results["autoscaled"]["ll_held"]
            - results["fixed"]["ll_held"],
            **results}
-    with open(out_path, "w") as f:
-        json.dump(doc, f, indent=1)
+    obs_export.to_json(out_path, doc)
     print(f"wrote {out_path} "
           f"(autoscaled {results['autoscaled']['scale_ups']} ups / "
           f"{results['autoscaled']['scale_downs']} downs, "

@@ -22,7 +22,6 @@ Run:  PYTHONPATH=src python -m benchmarks.figmn_fleet
 """
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, List
 
@@ -31,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import figmn
+from repro.obs import export as obs_export
 from repro.core.types import FIGMNConfig
 from repro.fleet import FleetConfig, FleetCoordinator, sp_mass
 from repro.stream import LifecycleConfig, RuntimeConfig
@@ -105,11 +105,10 @@ def run(out_path: str = "BENCH_fleet.json", quick: bool = False
                   f"({row['rate_sum']:9.0f} pts/s summed), "
                   f"ll_gap={row['ll_gap']:+.3f}, "
                   f"K={row['global_active_k']}")
-    with open(out_path, "w") as f:
-        json.dump({"benchmark": "figmn_fleet",
-                   "backend": jax.default_backend(),
-                   "ll_single_stream": ll_ref,
-                   "rows": rows}, f, indent=1)
+    obs_export.to_json(out_path, {"benchmark": "figmn_fleet",
+                                  "backend": jax.default_backend(),
+                                  "ll_single_stream": ll_ref,
+                                  "rows": rows})
     print(f"wrote {out_path} ({len(rows)} rows)")
     return rows
 

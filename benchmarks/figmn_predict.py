@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import figmn, inference
+from repro.obs import export as obs_export
 from repro.core.types import FIGMNConfig
 
 #: (K, D, o, [C...]) sweep; the acceptance point is (256, 32, 1, C=8).
@@ -121,8 +122,7 @@ def run(out_path: str = "BENCH_predict.json", quick: bool = False) -> Dict:
            "backend": jax.default_backend(),
            "smoke": quick,
            "rows": rows}
-    with open(out_path, "w") as f:
-        json.dump(doc, f, indent=1)
+    obs_export.to_json(out_path, doc)
     print(f"wrote {out_path} ({len(rows)} rows)")
     return doc
 

@@ -12,7 +12,6 @@ Run:  PYTHONPATH=src python -m benchmarks.figmn_runtime
 """
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, List
 
@@ -21,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import figmn
+from repro.obs import export as obs_export
 from repro.core.types import FIGMNConfig
 from repro.stream import LifecycleConfig, RuntimeConfig, StreamRuntime
 
@@ -71,10 +71,9 @@ def run(out_path: str = "BENCH_stream.json", quick: bool = False
                   f"{row['points_per_s']:9.0f} pts/s "
                   f"({row['mean_chunk_latency_ms']:.1f} ms/chunk, "
                   f"K_active={row['active_k']})")
-    with open(out_path, "w") as f:
-        json.dump({"benchmark": "figmn_stream_runtime",
-                   "backend": jax.default_backend(),
-                   "rows": rows}, f, indent=1)
+    obs_export.to_json(out_path, {"benchmark": "figmn_stream_runtime",
+                                  "backend": jax.default_backend(),
+                                  "rows": rows})
     print(f"wrote {out_path} ({len(rows)} rows)")
     return rows
 

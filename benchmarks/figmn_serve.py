@@ -1,0 +1,218 @@
+"""Closed-loop serving benchmark → BENCH_serve.json.
+
+The loop ISSUE/ROADMAP item 4 asked for, demonstrated end to end: the
+ScoringFrontend's latency histogram (obs.metrics — every request, queue
+wait included) feeds the autoscaler as a windowed p99/QPS pressure term,
+and the policy scales the fleet up in response to SERVING load alone.
+
+Scenario: an autoscaled fleet with every ingest-side trigger disabled
+(skew/pressure/drift thresholds unreachable, scale-down off) and only
+``up_serve_p99`` armed, calibrated at ``P99_FACTOR`` × the measured warm
+service time.  Phases submit open-loop bursts of async score requests of
+GROWING concurrency against the fixed 2-thread worker pool — queue wait
+ramps the measured p99 — while every phase ingests the IDENTICAL small
+batch (constant ingest pressure, just enough to reach the consolidation
+boundary where decisions happen).  Any scale-up is therefore attributable
+to the serving signal: the closed loop, recorded per phase as
+(requests, windowed p50/p99, qps, replicas-after-decision).
+
+The committed smoke baseline (benchmarks/baselines/) gates CI
+(``--check``): a >2× regression of the LOW-concurrency phase's p99 (pure
+warm service latency, the stable quantity) fails the build, as does a
+smoke run whose ramp no longer triggers at least one serving scale-up.
+
+Run:    PYTHONPATH=src python -m benchmarks.figmn_serve [--smoke]
+Gate:   PYTHONPATH=src python -m benchmarks.figmn_serve \
+            --check BENCH_serve.json \
+            --baseline benchmarks/baselines/BENCH_serve_smoke.json
+(or via ``python -m benchmarks.run figmn_serve [--smoke]`` /
+``python -m benchmarks.run --check``)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
+from repro.obs import export as obs_export
+from repro.obs import registry as obs_registry
+from repro.stream import LifecycleConfig, RuntimeConfig
+
+D, KMAX, K_BUDGET = 8, 12, 8
+BATCH = 64              # points per score request
+INGEST_N = 96           # constant ingest batch per phase (pressure ctrl)
+BURSTS = (8, 24, 64, 128, 192)
+SMOKE_BURSTS = (6, 16, 48, 96)
+P99_FACTOR = 4.0        # up_serve_p99 = factor x warm low-burst p99
+MAX_REPLICAS = 4
+WORKERS = 2
+
+
+def _mk_data(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6.0, (4, D))
+    def draw(n):
+        x = centers[rng.integers(0, 4, n)] + rng.normal(0, 1.0, (n, D))
+        return x.astype(np.float32)
+    return draw
+
+
+def _build(cfg: FIGMNConfig, p99_s: float,
+           registry: obs_registry.Registry) -> FleetCoordinator:
+    # serving-pressure-only policy: every ingest trigger unreachable
+    # (skew/drift thresholds absurd, budget pressure > max possible 1.0,
+    # negative down_share disables scale-down), so the replicas curve in
+    # the output is the serving loop's doing alone
+    auto = AutoscaleConfig(min_replicas=1, max_replicas=MAX_REPLICAS,
+                           up_skew=1e9, up_pressure=2.0, up_drift=1e9,
+                           down_share=-1.0, cooldown=1,
+                           up_serve_p99=p99_s, serve_min_requests=4)
+    return FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=1, router="round_robin",
+                    consolidate_every=1, global_kmax=KMAX, autoscale=auto,
+                    score_workers=WORKERS),
+        RuntimeConfig(chunk=INGEST_N,
+                      lifecycle=LifecycleConfig(k_budget=K_BUDGET,
+                                                every=4)),
+        registry=registry)
+
+
+def _drive(fleet: FleetCoordinator, draw, bursts) -> List[Dict]:
+    probe = draw(BATCH)
+    prev = fleet.scoring.latency.snapshot()
+    rows = []
+    for p, burst in enumerate(bursts):
+        t0 = time.perf_counter()
+        futs = [fleet.scoring.score_async(probe) for _ in range(burst)]
+        for f in futs:
+            f.result()
+        wall = time.perf_counter() - t0
+        snap = fleet.scoring.latency.snapshot()
+        win = snap.delta(prev)
+        prev = snap
+        # the decision boundary: the SAME ingest batch size every phase,
+        # so ingest-side deltas are constant while serving load ramps
+        fleet.ingest(draw(INGEST_N))
+        rows.append({
+            "phase": p, "requests": burst,
+            "p50_ms": win.quantile(0.5) * 1e3,
+            "p99_ms": win.quantile(0.99) * 1e3,
+            "qps": burst / wall,
+            "replicas_after": fleet.n_replicas,
+        })
+    return rows
+
+
+def run(out_path: str = "BENCH_serve.json", quick: bool = False) -> Dict:
+    draw = _mk_data()
+    bursts = SMOKE_BURSTS if quick else BURSTS
+    sample = draw(2048)
+    cfg = FIGMNConfig(kmax=KMAX, dim=D, beta=0.1, delta=1.0, vmin=50.0,
+                      spmin=1.0, update_mode="exact",
+                      sigma_ini=figmn.sigma_from_data(
+                          jnp.asarray(sample), 1.0))
+
+    # warm-up fleet: compiles ingest/score shapes AND calibrates the
+    # threshold off the p99 of a LOW-concurrency async burst — the same
+    # traffic shape as the measured phases, so the lowest phase sits under
+    # the threshold and only the concurrency RAMP can cross it (own
+    # registry — process metrics must not mix warm-up with the measured
+    # run)
+    warm = _build(cfg, 1e9, obs_registry.Registry())
+    warm.ingest(draw(INGEST_N))
+    probe = draw(BATCH)
+    for f in [warm.scoring.score_async(probe) for _ in range(bursts[0])]:
+        f.result()                                   # compile + JIT warm
+    base_snap = warm.scoring.latency.snapshot()
+    for f in [warm.scoring.score_async(probe) for _ in range(bursts[0])]:
+        f.result()
+    warm_win = warm.scoring.latency.snapshot().delta(base_snap)
+    warm.close()
+    t_svc = warm_win.quantile(0.99)
+    p99_thresh = P99_FACTOR * t_svc
+
+    reg = obs_registry.Registry()
+    fleet = _build(cfg, p99_thresh, reg)
+    fleet.ingest(draw(INGEST_N))        # publish the first snapshot
+    phase_rows = _drive(fleet, draw, bursts)
+    summary = fleet.summary()
+    events = [dataclasses.asdict(e) for e in fleet.telemetry.scale_events]
+    lat = fleet.scoring.latency.snapshot()
+    fleet.close()
+
+    curve = " -> ".join(str(r["replicas_after"]) for r in phase_rows)
+    serving_ups = sum(1 for e in events
+                      if e["action"] == "up" and "serving" in e["reason"])
+    doc = {"benchmark": "figmn_serve",
+           "backend": jax.default_backend(),
+           "smoke": quick,
+           "workers": WORKERS,
+           "batch": BATCH,
+           "ingest_points_per_phase": INGEST_N,
+           "warm_low_burst_p99_ms": t_svc * 1e3,
+           "up_serve_p99_ms": p99_thresh * 1e3,
+           "requests_total": int(lat.total),
+           "overall_p50_ms": lat.quantile(0.5) * 1e3,
+           "overall_p99_ms": lat.quantile(0.99) * 1e3,
+           "scale_ups": int(summary["scale_ups"]),
+           "serving_scale_ups": serving_ups,
+           "replicas_final": int(summary["replicas"]),
+           "phases": phase_rows,
+           "scale_events": events}
+    obs_export.to_json(out_path, doc)
+    print(f"wrote {out_path} (warm p99 {t_svc * 1e3:.1f}ms, threshold "
+          f"{p99_thresh * 1e3:.1f}ms, replicas/phase {curve}, "
+          f"{serving_ups} serving-triggered scale-up(s))")
+    return doc
+
+
+def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
+    """CI gate: the low-concurrency phase's p99 (warm service latency) may
+    not regress more than ``factor``× against the committed smoke
+    baseline, and the ramp must still close the loop (≥1 serving-
+    triggered scale-up)."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    got = float(bench["phases"][0]["p99_ms"])
+    ref = float(base["phases"][0]["p99_ms"])
+    ceil = ref * factor
+    ok_lat = got <= ceil
+    ok_loop = int(bench.get("serving_scale_ups", 0)) >= 1
+    print(f"serve smoke p99 (low load): {got:.1f}ms vs committed baseline "
+          f"{ref:.1f}ms (ceiling {ceil:.1f}ms) — "
+          f"{'OK' if ok_lat else 'REGRESSION'}")
+    print(f"closed loop: {bench.get('serving_scale_ups', 0)} "
+          f"serving-triggered scale-up(s) — "
+          f"{'OK' if ok_loop else 'LOOP BROKEN'}")
+    return ok_lat and ok_loop
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="gate mode: compare BENCH_JSON against --baseline "
+                         "instead of running the benchmark")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_serve_smoke.json")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(0 if check(args.check, args.baseline) else 1)
+    main(smoke=args.smoke)

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import figmn, shortlist
+from repro.obs import export as obs_export
 from repro.core.types import FIGMNConfig
 from repro.stream import ingest
 
@@ -165,8 +166,7 @@ def run(out_path: str = "BENCH_sparse.json", quick: bool = False) -> Dict:
            "backend": jax.default_backend(),
            "smoke": quick,
            "rows": rows}
-    with open(out_path, "w") as f:
-        json.dump(doc, f, indent=1)
+    obs_export.to_json(out_path, doc)
     print(f"wrote {out_path} ({len(rows)} rows)")
     return doc
 

@@ -21,6 +21,11 @@ CSV convention: ``name,us_per_call,derived``.
                     predictions/sec + C=K bit-identity witness per
                     (K, D, o, C) → BENCH_predict.json (CI-gated against
                     benchmarks/baselines/)
+  figmn_serve     — closed-loop serving: async request bursts ramp the
+                    obs latency histogram's windowed p99 until the
+                    autoscaler adds a replica off the serving signal
+                    alone → BENCH_serve.json (CI-gated against
+                    benchmarks/baselines/)
   lm_bench        — reduced-config LM substrate step times
   roofline        — §Roofline terms per (arch × shape) from the dry-run
                     artifacts (run repro.launch.dryrun --all first)
@@ -30,6 +35,10 @@ Subset:          PYTHONPATH=src python -m benchmarks.run figmn_scaling ...
 CI smoke:        PYTHONPATH=src python -m benchmarks.run --smoke
                  (every registered benchmark at a tiny size; any failure
                  exits non-zero so benchmark scripts cannot rot silently)
+CI gates:        PYTHONPATH=src python -m benchmarks.run --check
+                 (every CI-gated benchmark's fresh BENCH_*.json compared
+                 against its committed benchmarks/baselines/ smoke
+                 baseline; any regression exits non-zero)
 """
 from __future__ import annotations
 
@@ -43,7 +52,21 @@ import traceback
 #: ``main(smoke: bool = False)`` where smoke runs a tiny-size subset.
 REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
             "figmn_runtime", "figmn_fleet", "figmn_autoscale",
-            "figmn_sparse", "figmn_predict", "lm_bench", "roofline")
+            "figmn_sparse", "figmn_predict", "figmn_serve", "lm_bench",
+            "roofline")
+
+#: CI-gated benchmarks: module -> (fresh bench json, committed baseline);
+#: each module exposes ``check(bench_path, baseline_path) -> bool``.
+GATES = {
+    "figmn_autoscale": ("BENCH_autoscale.json",
+                        "benchmarks/baselines/BENCH_autoscale_smoke.json"),
+    "figmn_sparse": ("BENCH_sparse.json",
+                     "benchmarks/baselines/BENCH_sparse_smoke.json"),
+    "figmn_predict": ("BENCH_predict.json",
+                      "benchmarks/baselines/BENCH_predict_smoke.json"),
+    "figmn_serve": ("BENCH_serve.json",
+                    "benchmarks/baselines/BENCH_serve_smoke.json"),
+}
 
 
 def _section(name: str, smoke: bool) -> bool:
@@ -59,6 +82,18 @@ def _section(name: str, smoke: bool) -> bool:
         return False
 
 
+def _gate(name: str) -> bool:
+    bench, baseline = GATES[name]
+    print(f"# --- gate {name} " + "-" * max(1, 55 - len(name)))
+    try:
+        return bool(importlib.import_module(f"benchmarks.{name}")
+                    .check(bench, baseline))
+    except Exception as e:                                 # keep harness alive
+        print(f"# gate {name} FAILED: {type(e).__name__}: {e}")
+        traceback.print_exc()
+        return False
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("names", nargs="*",
@@ -66,10 +101,24 @@ def main() -> None:
                          f"{', '.join(REGISTRY)})")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for every benchmark; fail loudly")
+    ap.add_argument("--check", action="store_true",
+                    help="gate mode: compare each CI-gated benchmark's "
+                         "fresh BENCH json against its committed smoke "
+                         "baseline (no benchmarks are run)")
     args = ap.parse_args()
     unknown = set(args.names) - set(REGISTRY)
     if unknown:
         ap.error(f"unknown benchmarks: {', '.join(sorted(unknown))}")
+    if args.check:
+        want = args.names or list(GATES)
+        not_gated = set(want) - set(GATES)
+        if not_gated:
+            ap.error(f"not CI-gated: {', '.join(sorted(not_gated))}")
+        failed = [n for n in GATES if n in want and not _gate(n)]
+        if failed:
+            print(f"# FAILED gates: {', '.join(failed)}")
+            sys.exit(1)
+        return
     want = args.names or list(REGISTRY)
     failed = [n for n in REGISTRY if n in want
               and not _section(n, args.smoke)]

@@ -17,10 +17,13 @@ import numpy as np
 from repro.api import Mixture, MixtureSpec
 from repro.core import figmn, igmn_ref
 from repro.core.types import FIGMNConfig
+from repro.obs import trace as obs_trace
 from repro.stream import RuntimeConfig
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, trace: str = None):
+    if trace:
+        obs_trace.enable()
     rng = np.random.default_rng(0)
     centers = np.array([[-6.0, -6.0], [0.0, 6.0], [6.0, -2.0]])
     per_mode = 40 if smoke else 200
@@ -83,9 +86,22 @@ def main(smoke: bool = False):
           f"(sample query ✓)")
     assert abs(ll_draws - ll_in) < 4.0
 
+    if trace:
+        tracer = obs_trace.disable()
+        if trace.endswith(".json"):
+            tracer.export_chrome(trace)
+        else:
+            tracer.export_jsonl(trace)
+        print(f"wrote {len(tracer.spans())} spans to {trace} "
+              f"(structured tracing ✓)")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes (CI examples-smoke)")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record obs spans; .json => Chrome trace_event "
+                         "(chrome://tracing / Perfetto), else JSONL")
+    args = ap.parse_args()
+    main(smoke=args.smoke, trace=args.trace)

@@ -35,6 +35,7 @@ from repro.api import query as query_mod
 from repro.api.query import Query
 from repro.core.types import Array, FIGMNConfig, FIGMNState
 from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
+from repro.obs.trace import span
 from repro.stream import RuntimeConfig, StreamRuntime
 from repro.stream import ingest as ingest_mod
 
@@ -103,7 +104,9 @@ class Mixture:
         each engine does its own dtype normalisation (the runtime's loader
         casts per chunk to cfg.dtype — a float32 cast here would silently
         quantise float64 sessions)."""
-        self.engine.ingest(xs)
+        with span("api.partial_fit", tier=self.spec.tier,
+                  n=int(np.shape(xs)[0])):
+            self.engine.ingest(xs)
         return self
 
     # ------------------------------------------------------------------
@@ -113,20 +116,24 @@ class Mixture:
 
     def score_samples(self, xs) -> Array:
         """(N,) mixture log-densities (the density query)."""
-        return self.engine.score(xs)
+        with span("api.score_samples", tier=self.spec.tier):
+            return self.engine.score(xs)
 
     def predict(self, xs, targets) -> Array:
         """(N, o) eq. 27 conditional means of ``targets`` given the rest."""
-        return self.engine.predict(xs, targets)
+        with span("api.predict", tier=self.spec.tier):
+            return self.engine.predict(xs, targets)
 
     def predict_proba(self, xs, targets) -> Array:
         """(N, o) label-block reconstruction renormalised to a
         distribution (the label query — the classification read)."""
-        return query_mod.to_proba(self.engine.predict(xs, targets))
+        with span("api.predict_proba", tier=self.spec.tier):
+            return query_mod.to_proba(self.engine.predict(xs, targets))
 
     def sample(self, n: int, seed: int = 0) -> Array:
         """(n, D) draws from the mixture (components ∝ sp)."""
-        return query_mod.sample(self.cfg, self.state, n, seed)
+        with span("api.sample", tier=self.spec.tier, n=int(n)):
+            return query_mod.sample(self.cfg, self.state, n, seed)
 
     def query(self, q: Query, xs=None) -> Array:
         """Execute any ``api.query.Query`` against this session's state

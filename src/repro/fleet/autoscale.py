@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import figmn
 from repro.core.types import FIGMNConfig, FIGMNState
+from repro.obs.metrics import HistSnapshot
 
 ACTIONS = ("hold", "up", "down")
 
@@ -69,6 +70,20 @@ class AutoscaleConfig:
                  can live in a peer).
     cooldown:    decisions to skip after any scale event (let the router
                  deltas re-baseline before judging the new membership).
+
+    Serving-side pressure (the read path's half of the loop — ISSUE 6):
+    the coordinator hands ``observe`` a ``ServingSignal`` built from the
+    ScoringFrontend's cumulative latency histogram; the policy diffs it
+    against the previous decision's snapshot, so the p99/QPS it judges is
+    the serving load of THIS window, not since process start.
+
+    up_serve_p99: scale up when windowed serving p99 latency (seconds)
+                 ≥ this (0 disables).  In production more replicas means
+                 more serving pods; in-process it is the same signal.
+    up_serve_qps: scale up when windowed requests/sec per live replica
+                 ≥ this (0 disables).
+    serve_min_requests: ignore serving pressure below this many requests
+                 in the window (a p99 over three requests is noise).
     """
     min_replicas: int = 1
     max_replicas: int = 8
@@ -77,6 +92,9 @@ class AutoscaleConfig:
     up_drift: float = 0.2
     down_share: float = 0.35
     cooldown: int = 2
+    up_serve_p99: float = 0.0
+    up_serve_qps: float = 0.0
+    serve_min_requests: int = 8
 
     def __post_init__(self):
         if not 1 <= self.min_replicas <= self.max_replicas:
@@ -92,6 +110,26 @@ class ReplicaSignal:
     drift_alarms: int        # cumulative drift alarms
     active_k: int            # live components after the last lifecycle pass
     budget: int              # lifecycle k_budget (or cfg.kmax)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSignal:
+    """The serving front door's slice of the loop, as CUMULATIVE state:
+    total completed requests, the cumulative latency-histogram bucket
+    counts (``obs.metrics.Histogram`` snapshot), and the wall seconds the
+    window spans.  The policy keeps the previous snapshot and diffs —
+    same delta discipline as the per-replica ingest counters."""
+    requests: int                     # cumulative completed requests
+    window_s: float                   # wall seconds since previous decision
+    bounds: Tuple[float, ...] = ()    # histogram bucket upper edges
+    counts: Tuple[int, ...] = ()      # cumulative bucket counts
+
+    @classmethod
+    def from_histogram(cls, snap, requests: int,
+                       window_s: float) -> "ServingSignal":
+        """Build from an ``obs.metrics.HistSnapshot``."""
+        return cls(requests=int(requests), window_s=float(window_s),
+                   bounds=tuple(snap.bounds), counts=tuple(snap.counts))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,16 +153,49 @@ class Autoscaler:
         self.cfg = cfg
         self._last: Dict[int, Tuple[int, int, int]] = {}  # rid -> (routed,
         self._cooldown = 0                                #  chunks, alarms)
+        self._serve_last: Optional[Tuple[int, Tuple[int, ...]]] = None
         self.decisions = 0
 
     # ------------------------------------------------------------------
 
-    def observe(self, signals: Sequence[ReplicaSignal]) -> ScaleDecision:
+    def _serve_window(self, serving: Optional[ServingSignal]
+                      ) -> Tuple[Optional[float], Optional[float]]:
+        """(p99_s, qps) of the serving window since the previous decision,
+        or (None, None) when there is no usable serving signal.  Always
+        advances the serving baseline — the FIRST observation only anchors
+        it (a cumulative histogram predating this policy must not read as
+        one giant burst)."""
+        if serving is None:
+            return None, None
+        base = self._serve_last
+        self._serve_last = (int(serving.requests), tuple(serving.counts))
+        if base is None:
+            return None, None
+        dreq = max(int(serving.requests) - base[0], 0)
+        if dreq < self.cfg.serve_min_requests:
+            return None, None
+        p99 = None
+        if serving.counts and len(base[1]) == len(serving.counts):
+            dcounts = tuple(max(a - b, 0)
+                            for a, b in zip(serving.counts, base[1]))
+            dtotal = sum(dcounts)
+            if dtotal > 0:
+                p99 = HistSnapshot(bounds=tuple(serving.bounds),
+                                   counts=dcounts,
+                                   total=dtotal).quantile(0.99)
+        qps = (dreq / serving.window_s if serving.window_s > 0 else None)
+        return p99, qps
+
+    def observe(self, signals: Sequence[ReplicaSignal],
+                serving: Optional[ServingSignal] = None) -> ScaleDecision:
         """One decision from the current cumulative telemetry.
 
         Deltas are taken against the previous ``observe`` call (a replica
         id never seen before baselines at zero — correct for a replica
         spawned since the last decision, whose counters started at zero).
+        ``serving``, when provided, adds the read path's windowed p99/QPS
+        as one more scale-up pressure term; hysteresis (cooldown, bounds,
+        decision cadence) is unchanged.
         """
         c = self.cfg
         self.decisions += 1
@@ -136,6 +207,7 @@ class Autoscaler:
                            max(s.drift_alarms - base[2], 0)))
         self._last = {s.rid: (s.routed, s.chunks, s.drift_alarms)
                       for s in signals}
+        serve_p99, serve_qps = self._serve_window(serving)
         if self._cooldown > 0:
             self._cooldown -= 1
             return ScaleDecision(reason="cooldown")
@@ -143,11 +215,14 @@ class Autoscaler:
         n = len(signals)
         routed = np.asarray([d[0] for d in deltas], np.float64)
         total = float(routed.sum())
-        if total <= 0:
+        serve_pressure = ((serve_p99 is not None and c.up_serve_p99 > 0)
+                          or (serve_qps is not None and c.up_serve_qps > 0))
+        if total <= 0 and not serve_pressure:
+            # no ingest AND no serving load this window: nothing to judge
             return ScaleDecision(reason="idle")
         chunks = sum(d[1] for d in deltas)
         alarms = sum(d[2] for d in deltas)
-        skew = float(routed.max()) * n / total
+        skew = float(routed.max()) * n / total if total > 0 else 0.0
         drift_rate = alarms / max(chunks, 1)
         pressure = np.asarray(
             [s.active_k / max(s.budget, 1) for s in signals], np.float64)
@@ -166,13 +241,21 @@ class Autoscaler:
                           f" >= {c.up_pressure}")
             elif drift_rate >= c.up_drift:
                 reason = f"drift rate {drift_rate:.2f} >= {c.up_drift}"
+            elif (c.up_serve_p99 > 0 and serve_p99 is not None
+                    and serve_p99 >= c.up_serve_p99):
+                reason = (f"serving p99 {serve_p99 * 1e3:.1f}ms >= "
+                          f"{c.up_serve_p99 * 1e3:.1f}ms")
+            elif (c.up_serve_qps > 0 and serve_qps is not None
+                    and serve_qps / n >= c.up_serve_qps):
+                reason = (f"serving qps/replica {serve_qps / n:.1f} >= "
+                          f"{c.up_serve_qps}")
             if reason is not None and signals[hot].active_k >= 2:
                 self._cooldown = c.cooldown
                 return ScaleDecision("up", rid=signals[hot].rid,
                                      reason=reason)
 
         # -- scale DOWN: drain the coldest replica into the next-coldest
-        if n > c.min_replicas and alarms == 0:
+        if n > c.min_replicas and alarms == 0 and total > 0:
             order = np.argsort(routed, kind="stable")
             cold = int(order[0])
             share = float(routed[cold]) * n / total
@@ -202,13 +285,21 @@ class Autoscaler:
         return {"cooldown": self._cooldown,
                 "decisions": self.decisions,
                 "last": {str(rid): list(v)
-                         for rid, v in self._last.items()}}
+                         for rid, v in self._last.items()},
+                "serve_last": (None if self._serve_last is None else
+                               [self._serve_last[0],
+                                list(self._serve_last[1])])}
 
     def load_state(self, payload: Dict[str, object]) -> None:
         self._cooldown = int(payload["cooldown"])
         self.decisions = int(payload["decisions"])
         self._last = {int(rid): tuple(int(x) for x in v)
                       for rid, v in payload["last"].items()}
+        # manifests written before the serving signal existed lack the key
+        serve = payload.get("serve_last")
+        self._serve_last = (None if serve is None else
+                            (int(serve[0]),
+                             tuple(int(x) for x in serve[1])))
 
 
 # ---------------------------------------------------------------------------

@@ -51,16 +51,18 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.types import Array, FIGMNConfig, FIGMNState
 from repro.fleet import autoscale as autoscale_mod
 from repro.fleet.autoscale import (Autoscaler, AutoscaleConfig,
-                                   ReplicaSignal, ScaleDecision)
+                                   ReplicaSignal, ScaleDecision,
+                                   ServingSignal)
 from repro.fleet.consolidate import consolidate as _consolidate
 from repro.fleet.consolidate import drain as _drain
 from repro.fleet.consolidate import sp_mass
@@ -68,7 +70,12 @@ from repro.fleet.router import RouterConfig, ShardRouter
 from repro.fleet.scoring import ScoringFrontend
 from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
                                    ScaleEvent)
+from repro.ft.straggler import StragglerConfig, StragglerMonitor
+from repro.obs import registry as obs_registry
+from repro.obs.trace import span
 from repro.stream import RuntimeConfig, StreamRuntime, ingest
+
+_log = logging.getLogger(__name__)
 
 _MANIFEST = "fleet_manifest.json"
 
@@ -109,17 +116,20 @@ class FleetCoordinator:
     """Owns the replicas, the router, the merge clock and the snapshot."""
 
     def __init__(self, cfg: FIGMNConfig, fcfg: FleetConfig = FleetConfig(),
-                 rcfg: RuntimeConfig = RuntimeConfig()):
+                 rcfg: RuntimeConfig = RuntimeConfig(),
+                 registry: Optional[obs_registry.Registry] = None):
         self.cfg = cfg
         self.fcfg = fcfg
         self.rcfg = rcfg
+        self._registry = registry or obs_registry.default_registry()
         self.router = ShardRouter(
             RouterConfig(policy=fcfg.router, seed=fcfg.router_seed),
             fcfg.n_replicas)
         self.replica_ids: List[int] = list(range(fcfg.n_replicas))
         self._next_id = fcfg.n_replicas
         self.replicas: List[StreamRuntime] = [
-            StreamRuntime(cfg, self._rcfg_for_id(rid))
+            StreamRuntime(cfg, self._rcfg_for_id(rid),
+                          registry=self._registry)
             for rid in self.replica_ids]
         # serving mirrors the replicas' RESOLVED ingest path: a forced
         # dense RuntimeConfig.path must score densely too, or the fleet's
@@ -129,12 +139,42 @@ class FleetCoordinator:
                                       requested=rcfg.path)
         self.scoring = ScoringFrontend(
             cfg, workers=fcfg.score_workers,
-            shortlist_c=cfg.shortlist_c if resolved == "sparse" else 0)
+            shortlist_c=cfg.shortlist_c if resolved == "sparse" else 0,
+            registry=self._registry)
         self.telemetry = FleetTelemetry()
         self.autoscaler = (Autoscaler(fcfg.autoscale)
                            if fcfg.autoscale is not None else None)
         self.rounds = 0
         self.epoch = 0          # replica-set epoch (bumps on scale events)
+        reg = self._registry
+        self._m_consol_s = reg.histogram(
+            "figmn_consolidation_seconds",
+            "wall time of one fleet consolidation + publish")
+        self._m_replicas = reg.gauge(
+            "figmn_fleet_replicas", "live replica count")
+        self._m_replicas.set(len(self.replicas))
+        self._m_scale = {
+            action: reg.counter("figmn_fleet_scale_events_total",
+                                "autoscaler-executed membership changes",
+                                {"action": action})
+            for action in ("up", "down")}
+        self._m_stragglers = reg.gauge(
+            "figmn_fleet_stragglers",
+            "replicas whose per-chunk ingest latency diverges from the "
+            "fleet median (detection only)")
+        # straggler detection (ft/straggler.py, detection-only): fed the
+        # per-replica mean chunk latency of each consolidation window
+        self.straggler = StragglerMonitor(
+            [self._host(rid) for rid in self.replica_ids],
+            StragglerConfig())
+        self._strag_last: Dict[int, Tuple[int, float]] = {}
+        # serving-window clock: ServingSignal.window_s spans consecutive
+        # autoscale decisions
+        self._serve_window_t = time.monotonic()
+
+    @staticmethod
+    def _host(rid: int) -> str:
+        return f"replica_{rid}"
 
     @property
     def n_replicas(self) -> int:
@@ -191,20 +231,49 @@ class FleetCoordinator:
     def consolidate(self) -> FIGMNState:
         """Merge all replica mixtures; publish the result for serving."""
         t0 = time.perf_counter()
-        states = [r.state for r in self.replicas]
-        active_in = sum(int(s.n_active) for s in states)
-        global_state, merges = _consolidate(
-            self.cfg, states, topology=self.fcfg.topology,
-            kmax_out=self.fcfg.global_kmax)
-        version = self.scoring.publish(global_state)
+        with span("fleet.consolidate", topology=self.fcfg.topology,
+                  replicas=len(self.replicas)) as sp:
+            states = [r.state for r in self.replicas]
+            active_in = sum(int(s.n_active) for s in states)
+            global_state, merges = _consolidate(
+                self.cfg, states, topology=self.fcfg.topology,
+                kmax_out=self.fcfg.global_kmax)
+            version = self.scoring.publish(global_state)
+            sp.set(version=version, merges=merges,
+                   active_out=int(global_state.n_active))
+        wall = time.perf_counter() - t0
         self.telemetry.record_consolidation(ConsolidationEvent(
             round_idx=self.rounds, version=version,
             topology=self.fcfg.topology, n_states_in=len(states),
             active_in=active_in, active_out=int(global_state.n_active),
             merges=merges,
             sp_mass=sp_mass(global_state),
-            wall_s=time.perf_counter() - t0))
+            wall_s=wall))
+        self._m_consol_s.observe(wall)
+        self._update_stragglers()
         return global_state
+
+    def _update_stragglers(self) -> None:
+        """Feed the detection-only straggler monitor the mean per-chunk
+        ingest latency each replica paid since the last consolidation, and
+        surface the suspect count (gauge + log line).  Replicas that
+        ingested nothing this window report nothing — an idle replica is
+        cold, not slow."""
+        for rid, r in zip(self.replica_ids, self.replicas):
+            chunks = int(r.telemetry.total_chunks)
+            wall = float(r.telemetry.total_time_s)
+            base_c, base_w = self._strag_last.get(rid, (0, 0.0))
+            self._strag_last[rid] = (chunks, wall)
+            dc, dw = chunks - base_c, wall - base_w
+            if dc > 0 and dw > 0:
+                self.straggler.report(self._host(rid), dw / dc)
+        suspects = self.straggler.suspects()
+        self._m_stragglers.set(len(suspects))
+        if suspects:
+            _log.warning(
+                "fleet straggler(s) detected (per-chunk latency > "
+                "%.1fx fleet median): %s",
+                self.straggler.cfg.slow_factor, ", ".join(suspects))
 
     @property
     def global_state(self) -> Optional[FIGMNState]:
@@ -257,8 +326,21 @@ class FleetCoordinator:
                 active_k=int(r.state.n_active), budget=budget))
         return out
 
+    def _serving_signal(self) -> ServingSignal:
+        """Cumulative serving-side state for the autoscaler: total
+        completed requests + the latency histogram's bucket counts, plus
+        the wall seconds since the previous decision (the policy diffs the
+        cumulative parts itself)."""
+        now = time.monotonic()
+        window = now - self._serve_window_t
+        self._serve_window_t = now
+        return ServingSignal.from_histogram(
+            self.scoring.latency.snapshot(),
+            self.scoring.requests_total, window)
+
     def _maybe_autoscale(self) -> Optional[ScaleDecision]:
-        decision = self.autoscaler.observe(self._signals())
+        decision = self.autoscaler.observe(self._signals(),
+                                           self._serving_signal())
         if decision.action == "up":
             self.scale_up(decision.rid, reason=decision.reason)
         elif decision.action == "down":
@@ -289,13 +371,17 @@ class FleetCoordinator:
         mass_before = sp_mass(parent.state)
         new_id = self._next_id
         self._next_id += 1
-        child = StreamRuntime(self.cfg, self._rcfg_for_id(new_id))
+        child = StreamRuntime(self.cfg, self._rcfg_for_id(new_id),
+                              registry=self._registry)
         parent.import_pool(kept)
         child.import_pool(child_state)
         self.router.grow(new_id, centroid=centroid)
         self.replicas.append(child)
         self.replica_ids.append(new_id)
         self.epoch += 1
+        self.straggler.add_host(self._host(new_id))
+        self._m_scale["up"].inc()
+        self._m_replicas.set(len(self.replicas))
         self.telemetry.record_scale(ScaleEvent(
             round_idx=self.rounds, epoch=self.epoch, action="up",
             rid=rid, peer=new_id, n_replicas=len(self.replicas),
@@ -330,6 +416,10 @@ class FleetCoordinator:
         del self.replicas[pos]
         del self.replica_ids[pos]
         self.epoch += 1
+        self.straggler.remove_host(self._host(rid))
+        self._strag_last.pop(rid, None)
+        self._m_scale["down"].inc()
+        self._m_replicas.set(len(self.replicas))
         self.telemetry.record_scale(ScaleEvent(
             round_idx=self.rounds, epoch=self.epoch, action="down",
             rid=rid, peer=peer_rid, n_replicas=len(self.replicas),
@@ -348,6 +438,7 @@ class FleetCoordinator:
             self.router.load())
         s["epoch"] = self.epoch
         s["replica_ids"] = list(self.replica_ids)
+        s["stragglers"] = self.straggler.suspects()
         return s
 
     def checkpoint(self) -> None:
@@ -412,7 +503,8 @@ class FleetCoordinator:
             ids = list(self.replica_ids)
         ids = [int(i) for i in ids]
         rebuild = ids != self.replica_ids
-        replicas = ([StreamRuntime(self.cfg, self._rcfg_for_id(rid))
+        replicas = ([StreamRuntime(self.cfg, self._rcfg_for_id(rid),
+                                   registry=self._registry)
                      for rid in ids] if rebuild else self.replicas)
         steps = manifest.get("replica_steps", [None] * len(ids))
         # Resolve and validate the WHOLE cut before touching any replica:
@@ -447,6 +539,10 @@ class FleetCoordinator:
             self.router = ShardRouter(
                 RouterConfig(policy=self.fcfg.router,
                              seed=self.fcfg.router_seed), len(ids))
+            self.straggler = StragglerMonitor(
+                [self._host(rid) for rid in ids], self.straggler.cfg)
+            self._strag_last = {}
+            self._m_replicas.set(len(self.replicas))
         self.rounds = int(manifest["rounds"])
         self.epoch = int(manifest.get("epoch", 0))
         self._next_id = int(manifest.get("next_replica_id", len(ids)))

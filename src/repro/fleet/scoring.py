@@ -30,6 +30,7 @@ sparse ingest path.
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Optional, Tuple
 
@@ -37,14 +38,29 @@ import jax.numpy as jnp
 
 from repro.core import inference, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState
+from repro.obs import metrics as obs_metrics
+from repro.obs import registry as obs_registry
+from repro.obs.trace import span
 from repro.stream import ingest
 
 
 class ScoringFrontend:
-    """Read-only mixture scores from the last published snapshot."""
+    """Read-only mixture scores from the last published snapshot.
+
+    Observability contract (the read path's half of the serving→autoscaler
+    loop): every request lands one sample in ``latency`` — a mergeable
+    fixed-log-bucket histogram whose cumulative snapshots the coordinator
+    diffs between consolidation boundaries to hand the autoscaler a
+    *windowed* p99/QPS (``autoscale.ServingSignal``).  Async requests time
+    submit→completion, so queue wait under an overloaded worker pool is
+    part of the measured latency — exactly the signal an operator (or the
+    autoscaler) pages on.  ``staleness`` records the age of the serving
+    snapshot at read time: how far behind the live stream each answer is.
+    """
 
     def __init__(self, cfg: FIGMNConfig, workers: int = 2,
-                 shortlist_c: Optional[int] = None):
+                 shortlist_c: Optional[int] = None,
+                 registry: Optional[obs_registry.Registry] = None):
         self.cfg = cfg
         # serving-side shortlist width: explicit override wins, else the
         # config's; 0 ⇒ dense scoring
@@ -53,9 +69,31 @@ class ScoringFrontend:
         self._lock = threading.Lock()
         self._snapshot: Optional[FIGMNState] = None
         self._version = 0
+        self._published_t: Optional[float] = None
         self._pool = ThreadPoolExecutor(max_workers=max(int(workers), 1),
                                         thread_name_prefix="fleet-score")
         self.served = 0
+        reg = registry or obs_registry.default_registry()
+        self.latency = reg.histogram(
+            "figmn_serve_latency_seconds",
+            "request latency, submit to completion (queue wait included)")
+        self.staleness = reg.histogram(
+            "figmn_serve_staleness_seconds",
+            "serving-snapshot age at read time",
+            bounds=obs_metrics.log_bounds(1e-4, 1000.0))
+        self._m_requests = {
+            kind: reg.counter("figmn_serve_requests_total",
+                              "serving requests completed",
+                              {"kind": kind})
+            for kind in ("score", "predict")}
+        self._m_points = reg.counter(
+            "figmn_serve_points_total", "points scored/predicted")
+
+    @property
+    def requests_total(self) -> int:
+        """Cumulative completed requests across kinds (the QPS numerator
+        the autoscaler deltas)."""
+        return int(sum(c.value for c in self._m_requests.values()))
 
     # -- publication (coordinator side) --------------------------------
 
@@ -66,6 +104,7 @@ class ScoringFrontend:
             self._version = self._version + 1 if version is None \
                 else int(version)
             self._snapshot = state
+            self._published_t = time.monotonic()
             return self._version
 
     @property
@@ -83,25 +122,48 @@ class ScoringFrontend:
 
     # -- reads (serving side) ------------------------------------------
 
-    def score(self, xs) -> Array:
-        """(N,) mixture log-densities under the current snapshot."""
-        state, _ = self.snapshot()
-        if state is None:
-            raise RuntimeError("no consolidated snapshot published yet")
-        xs = jnp.asarray(xs, self.cfg.dtype)
-        if self.shortlist_c > 0:
-            out = shortlist.score_batch_sparse(self.cfg, state, xs,
-                                               c=self.shortlist_c)
-        else:
-            out = ingest.score_batch_jit(self.cfg, state, xs)
+    def _serve(self, kind: str, xs, targets, t_submit: float) -> Array:
+        """One timed read.  ``t_submit`` is the caller-side submit stamp:
+        for sync reads it equals entry time (pure service latency); for
+        async reads it was taken at ``submit``, so the measured latency
+        INCLUDES the time the request queued behind the worker pool —
+        the component that actually blows up under overload."""
+        with span(f"serve.{kind}", n=int(jnp.shape(xs)[0])):
+            with self._lock:
+                state = self._snapshot
+                published_t = self._published_t
+            if state is None:
+                raise RuntimeError(
+                    "no consolidated snapshot published yet")
+            xs = jnp.asarray(xs, self.cfg.dtype)
+            if kind == "score":
+                if self.shortlist_c > 0:
+                    out = shortlist.score_batch_sparse(
+                        self.cfg, state, xs, c=self.shortlist_c)
+                else:
+                    out = ingest.score_batch_jit(self.cfg, state, xs)
+            else:
+                out = inference.predict_batch_routed(
+                    self.cfg, state, xs, targets, c=self.shortlist_c)
+            out.block_until_ready()   # latency must cover device compute
+        self.latency.observe(time.perf_counter() - t_submit)
+        if published_t is not None:
+            self.staleness.observe(time.monotonic() - published_t)
+        self._m_requests[kind].inc()
+        self._m_points.inc(int(out.shape[0]))
         with self._lock:        # += races across pool threads otherwise
             self.served += int(out.shape[0])
         return out
 
+    def score(self, xs) -> Array:
+        """(N,) mixture log-densities under the current snapshot."""
+        return self._serve("score", xs, None, time.perf_counter())
+
     def score_async(self, xs) -> "Future[Array]":
         """Queue a score; the returned future resolves off the caller's
         thread, against whichever snapshot is current when it runs."""
-        return self._pool.submit(self.score, xs)
+        return self._pool.submit(self._serve, "score", xs, None,
+                                 time.perf_counter())
 
     def predict(self, xs, targets) -> Array:
         """(N, o) eq. 27 conditional means under the current snapshot.
@@ -112,22 +174,15 @@ class ScoringFrontend:
         honours the frontend's resolved read path — a shortlist width C
         serves the conditional sublinearly (O(K·D + C·D²·o) per point,
         bit-identical to dense at C ≥ active K)."""
-        state, _ = self.snapshot()
-        if state is None:
-            raise RuntimeError("no consolidated snapshot published yet")
-        xs = jnp.asarray(xs, self.cfg.dtype)
-        out = inference.predict_batch_routed(self.cfg, state, xs, targets,
-                                             c=self.shortlist_c)
-        with self._lock:        # += races across pool threads otherwise
-            self.served += int(out.shape[0])
-        return out
+        return self._serve("predict", xs, targets, time.perf_counter())
 
     def predict_async(self, xs, targets) -> "Future[Array]":
         """Queue a conditional read; resolves off the caller's thread
         against whichever snapshot is current when it runs — the serving
         front door keeps answering eq. 27 while the coordinator is mid
         ingest."""
-        return self._pool.submit(self.predict, xs, targets)
+        return self._pool.submit(self._serve, "predict", xs, targets,
+                                 time.perf_counter())
 
     def close(self) -> None:
         self._pool.shutdown(wait=True)

@@ -19,9 +19,10 @@ allowed.
 from __future__ import annotations
 
 import dataclasses
-import json
 import threading
 from typing import Dict, List, Sequence, Tuple
+
+from repro.obs import export as obs_export
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,9 +134,14 @@ class FleetTelemetry:
                for k in agg_keys}
         # replicas run concurrently in production, so fleet throughput is
         # the SUM of replica rates (each rate is that replica's exact
-        # points/wall over its own stream)
-        agg["points_per_s"] = sum(float(s.get("points_per_s", 0.0))
-                                  for s in replica_summaries)
+        # points/wall over its own stream).  NaN-aware: a replica whose
+        # timer never resolved reports NaN, not a fake 0 — it is excluded
+        # from the sum; if NO replica measured anything the fleet rate is
+        # honestly unknown.
+        rates = [float(s.get("points_per_s", float("nan")))
+                 for s in replica_summaries]
+        finite = [r for r in rates if r == r]
+        agg["points_per_s"] = sum(finite) if finite else float("nan")
         return {
             "replicas": len(replica_summaries),
             **agg,
@@ -153,12 +159,11 @@ class FleetTelemetry:
     def to_json(self, path: str, replica_summaries: Sequence[Dict],
                 router_load: Dict[str, int]) -> None:
         snap = self._counters
-        with open(path, "w") as f:
-            json.dump({"summary": self._summary_from(snap,
-                                                     replica_summaries,
-                                                     router_load),
-                       "consolidations": [dataclasses.asdict(e)
-                                          for e in snap.events],
-                       "scale_events": [dataclasses.asdict(e)
-                                        for e in snap.scale_events]}, f,
-                      indent=1)
+        obs_export.to_json(path, {
+            "kind": "fleet_telemetry",
+            "summary": self._summary_from(snap, replica_summaries,
+                                          router_load),
+            "consolidations": [dataclasses.asdict(e)
+                               for e in snap.events],
+            "scale_events": [dataclasses.asdict(e)
+                             for e in snap.scale_events]})

@@ -74,3 +74,27 @@ class StragglerMonitor:
 
     def alive(self) -> List[str]:
         return [h for h, s in self.hosts.items() if not s.evicted]
+
+    # -- detection-only interface (fleet wiring) -----------------------
+
+    def add_host(self, host: str) -> None:
+        """Start tracking a host (e.g. a replica spawned by a scale-up);
+        idempotent for hosts already known."""
+        self.hosts.setdefault(host, HostState())
+
+    def remove_host(self, host: str) -> None:
+        """Stop tracking a host (e.g. a replica drained by a scale-down)."""
+        self.hosts.pop(host, None)
+
+    def suspects(self) -> List[str]:
+        """Hosts currently slower than ``slow_factor`` × fleet median, by
+        EWMA.  Non-mutating: no strikes accrue, nothing is evicted — this
+        is the detection-only view the fleet coordinator surfaces as a
+        gauge (in-process replicas share one host, so eviction is the
+        wrong mitigation there; flagging is the whole job)."""
+        med = self._median()
+        if med <= 0:
+            return []
+        return [name for name, hs in self.hosts.items()
+                if not hs.evicted
+                and hs.ewma_time > self.cfg.slow_factor * med]

@@ -30,6 +30,8 @@ from repro.core import figmn
 from repro.core.types import FIGMNConfig
 from repro.fleet import AutoscaleConfig, FleetConfig
 from repro.models import transformer as tr
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.serve.engine import Request, ServeEngine
 from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
 
@@ -58,7 +60,23 @@ def main() -> None:
                          "(0 = dense): both the ingest hot path and the "
                          "serving score() drop from O(K·D²) to "
                          "O(K·D + C·D²) per point, exact when C >= K")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve Prometheus text exposition of the obs "
+                         "registry on http://0.0.0.0:PORT/metrics "
+                         "(0 = ephemeral port; printed at startup)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable structured spans and write them to PATH "
+                         "on exit (.json => Chrome trace_event for "
+                         "chrome://tracing / Perfetto; else JSONL)")
     args = ap.parse_args()
+
+    if args.metrics_port is not None:
+        server = obs_export.serve_metrics(args.metrics_port)
+        print(f"obs: serving /metrics on port "
+              f"{server.server_address[1]}")
+    if args.trace:
+        obs_trace.enable()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
@@ -155,6 +173,14 @@ def main() -> None:
           f"scale events={summary['scale_ups']}+{summary['scale_downs']} "
           f"epoch={summary['epoch']}, "
           f"eq27 |x̂₁₅−x₁₅| = {resid:.3f})")
+
+    if args.trace:
+        tracer = obs_trace.disable()
+        if args.trace.endswith(".json"):
+            tracer.export_chrome(args.trace)
+        else:
+            tracer.export_jsonl(args.trace)
+        print(f"obs: wrote {len(tracer.spans())} spans to {args.trace}")
 
 
 if __name__ == "__main__":

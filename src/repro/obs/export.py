@@ -1,0 +1,131 @@
+"""Exporters: Prometheus text exposition, JSON dumps, the shared
+``to_json`` every BENCH_*/telemetry file in the repo is written through.
+
+``to_json`` is the ONE file-shape authority (ISSUE 6 satellite): it stamps
+``schema_version`` into every document so BENCH_* files and telemetry
+dumps stop drifting in shape silently — a reader that sees a version it
+does not know can fail loudly instead of misparsing.
+
+``serve_metrics`` serves ``prometheus_text`` over HTTP from a daemon
+thread (wired into ``launch/serve.py --metrics-port``): point a
+Prometheus scrape job at ``http://host:port/metrics``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional
+
+from repro.obs import registry as registry_mod
+from repro.obs.metrics import Histogram
+
+#: bump when the shape of dumped telemetry/bench documents changes
+SCHEMA_VERSION = 1
+
+
+def to_json(path: str, doc: Dict[str, object], *, indent: int = 1) -> None:
+    """Write one JSON document with a ``schema_version`` stamp.
+
+    Every telemetry dump (stream/fleet) and every BENCH_* writer routes
+    through here — one place controls the envelope.  An explicit
+    ``schema_version`` already present in ``doc`` wins (a migrating writer
+    can pin the version it actually emits).
+    """
+    out = {"schema_version": SCHEMA_VERSION}
+    out.update(doc)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=indent)
+
+
+def _fmt_labels(labels: Dict[str, str], extra: Optional[Dict] = None) -> str:
+    items = dict(labels)
+    if extra:
+        items.update(extra)
+    if not items:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in sorted(items.items()))
+    return "{" + body + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if isinstance(v, float) and math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v)) if isinstance(v, float) else str(v)
+
+
+def prometheus_text(registry: Optional[registry_mod.Registry] = None) -> str:
+    """Prometheus text exposition format (version 0.0.4) of a registry."""
+    registry = registry or registry_mod.default_registry()
+    lines = []
+    seen_header = set()
+    for m in registry.collect():
+        if m.name not in seen_header:
+            seen_header.add(m.name)
+            if m.help:
+                lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+        if isinstance(m, Histogram):
+            s = m.snapshot()
+            cum = 0
+            for edge, c in zip(list(s.bounds) + [float("inf")], s.counts):
+                cum += c
+                le = _fmt_labels(m.labels, {"le": _fmt_value(edge)})
+                lines.append(f"{m.name}_bucket{le} {cum}")
+            lines.append(f"{m.name}_sum{_fmt_labels(m.labels)} {s.sum!r}")
+            lines.append(f"{m.name}_count{_fmt_labels(m.labels)} {s.total}")
+        else:
+            lines.append(
+                f"{m.name}{_fmt_labels(m.labels)} "
+                f"{_fmt_value(m.snapshot())}")
+    return "\n".join(lines) + "\n"
+
+
+def metrics_dict(registry: Optional[registry_mod.Registry] = None
+                 ) -> Dict[str, object]:
+    """JSON-able dump of a registry (the benchmark-report form):
+    counters/gauges as numbers, histograms as bucket dicts + quantiles."""
+    registry = registry or registry_mod.default_registry()
+    out: Dict[str, object] = {}
+    for m in registry.collect():
+        key = m.name + _fmt_labels(m.labels)
+        if isinstance(m, Histogram):
+            out[key] = m.snapshot().to_dict()
+        else:
+            out[key] = m.snapshot()
+    return out
+
+
+class _MetricsHandler(BaseHTTPRequestHandler):
+    registry: Optional[registry_mod.Registry] = None
+
+    def do_GET(self):                                    # noqa: N802
+        if self.path.rstrip("/") not in ("", "/metrics"):
+            self.send_error(404)
+            return
+        body = prometheus_text(self.registry).encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):                        # scrapes are not
+        pass                                             # operator events
+
+
+def serve_metrics(port: int,
+                  registry: Optional[registry_mod.Registry] = None,
+                  host: str = "0.0.0.0") -> ThreadingHTTPServer:
+    """Serve ``/metrics`` from a daemon thread; returns the server (call
+    ``.shutdown()`` to stop).  ``port=0`` binds an ephemeral port —
+    read it back from ``server.server_address``."""
+    handler = type("Handler", (_MetricsHandler,),
+                   {"registry": registry or registry_mod.default_registry()})
+    server = ThreadingHTTPServer((host, port), handler)
+    t = threading.Thread(target=server.serve_forever,
+                         name="obs-metrics-http", daemon=True)
+    t.start()
+    return server

@@ -1,0 +1,249 @@
+"""Metrics primitives: counters, gauges, log-bucket latency histograms.
+
+Concurrency contract (the same immutable-snapshot-swap pattern as
+``fleet/telemetry.py``): writers mutate under one mutex by building a NEW
+immutable snapshot and swapping the reference; readers grab the reference
+once and read only immutable state.  A reader can therefore never observe
+a half-applied update (e.g. a histogram whose bucket counts grew but whose
+``sum`` did not), and snapshots taken on serving threads are safe to merge
+or export while writers keep recording.
+
+Histograms use FIXED log-spaced buckets (``log_bounds``): every histogram
+with the same bounds is mergeable by plain bucket-count addition — across
+threads, replicas, or autoscaler decision windows (the serving→autoscaler
+loop subtracts two cumulative snapshots to get the histogram *between*
+decisions).  Quantiles are exact *bucket* quantiles: ``quantile(q)``
+returns the upper edge of the bucket containing the ceil(q·n)-th sample —
+identical to ``np.quantile(quantized_samples, q, method="inverted_cdf")``
+when samples are quantized to their bucket upper edge (pinned in
+tests/test_obs.py).
+
+A process-wide kill switch (``disable()``) turns every ``inc``/``set``/
+``observe`` into an early return for benchmark runs that must not pay
+even the microseconds.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+_ENABLED = True
+
+
+def enable() -> None:
+    """Turn metric recording on (the default)."""
+    global _ENABLED
+    _ENABLED = True
+
+
+def disable() -> None:
+    """Turn every metric write into an early return (near-zero cost)."""
+    global _ENABLED
+    _ENABLED = False
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def log_bounds(lo: float = 1e-6, hi: float = 100.0,
+               per_decade: int = 10) -> Tuple[float, ...]:
+    """Fixed log-spaced bucket upper edges: ``per_decade`` buckets per
+    decade from ``lo`` to ≥ ``hi`` (an implicit +Inf overflow bucket rides
+    on top).  Computed from integer exponents so two histograms built from
+    the same arguments share bit-identical bounds (mergeability)."""
+    lo_e = round(math.log10(lo) * per_decade)
+    hi_e = math.ceil(math.log10(hi) * per_decade)
+    return tuple(10.0 ** (e / per_decade) for e in range(lo_e, hi_e + 1))
+
+
+#: default latency bounds: 1 µs .. 100 s, 10 buckets/decade (81 edges)
+LATENCY_BOUNDS = log_bounds()
+
+
+class Counter:
+    """Monotonic counter.  ``inc`` under a mutex; reads are one volatile
+    reference read of an immutable float."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Optional[Dict[str, str]] = None):
+        self.name = name
+        self.help = help
+        self.labels = dict(labels or {})
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if not _ENABLED:
+            return
+        if n < 0:
+            raise ValueError("counters are monotonic; inc(n >= 0)")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self) -> float:
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Optional[Dict[str, str]] = None):
+        self.name = name
+        self.help = help
+        self.labels = dict(labels or {})
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        if not _ENABLED:
+            return
+        self._value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        if not _ENABLED:
+            return
+        with self._lock:
+            self._value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.inc(-n)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self) -> float:
+        return self._value
+
+
+@dataclasses.dataclass(frozen=True)
+class HistSnapshot:
+    """One immutable histogram state.  ``counts[i]`` holds samples with
+    value ≤ ``bounds[i]``; ``counts[-1]`` is the +Inf overflow bucket
+    (``len(counts) == len(bounds) + 1``)."""
+    bounds: Tuple[float, ...]
+    counts: Tuple[int, ...]
+    total: int = 0
+    sum: float = 0.0
+
+    def quantile(self, q: float) -> float:
+        """Exact bucket quantile: the upper edge of the bucket holding the
+        ceil(q·total)-th sample (NaN when empty, +Inf when it landed in
+        the overflow bucket)."""
+        if self.total <= 0:
+            return float("nan")
+        rank = max(1, math.ceil(q * self.total))
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum >= rank:
+                return (self.bounds[i] if i < len(self.bounds)
+                        else float("inf"))
+        return float("inf")
+
+    def merge(self, other: "HistSnapshot") -> "HistSnapshot":
+        """Bucket-wise sum — the cross-thread / cross-replica reduce.
+        Bounds must be identical (that is what makes fixed-log-bucket
+        histograms mergeable without resampling)."""
+        if self.bounds != other.bounds:
+            raise ValueError("cannot merge histograms with different "
+                             "bucket bounds")
+        return HistSnapshot(
+            bounds=self.bounds,
+            counts=tuple(a + b for a, b in zip(self.counts, other.counts)),
+            total=self.total + other.total,
+            sum=self.sum + other.sum)
+
+    def delta(self, baseline: "HistSnapshot") -> "HistSnapshot":
+        """Samples recorded AFTER ``baseline`` was taken — two cumulative
+        snapshots of the same histogram subtract bucket-wise (counts are
+        monotone).  This is how the autoscaler sees the serving-latency
+        distribution *between* decisions, not since process start."""
+        if self.bounds != baseline.bounds:
+            raise ValueError("cannot diff histograms with different "
+                             "bucket bounds")
+        return HistSnapshot(
+            bounds=self.bounds,
+            counts=tuple(max(a - b, 0)
+                         for a, b in zip(self.counts, baseline.counts)),
+            total=max(self.total - baseline.total, 0),
+            sum=max(self.sum - baseline.sum, 0.0))
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.total if self.total else float("nan")
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"bounds": list(self.bounds), "counts": list(self.counts),
+                "total": self.total, "sum": self.sum,
+                "p50": self.quantile(0.5), "p99": self.quantile(0.99),
+                "p999": self.quantile(0.999)}
+
+
+def empty_snapshot(bounds: Sequence[float] = LATENCY_BOUNDS
+                   ) -> HistSnapshot:
+    bounds = tuple(float(b) for b in bounds)
+    return HistSnapshot(bounds=bounds, counts=(0,) * (len(bounds) + 1))
+
+
+class Histogram:
+    """Fixed-log-bucket latency histogram with exact bucket quantiles.
+
+    ``observe`` swaps in a new immutable ``HistSnapshot`` under the writer
+    mutex; ``snapshot()`` is one lock-free reference read, so serving
+    threads can take/merge/diff snapshots while writers keep observing.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Optional[Dict[str, str]] = None,
+                 bounds: Sequence[float] = LATENCY_BOUNDS):
+        self.name = name
+        self.help = help
+        self.labels = dict(labels or {})
+        self.bounds = tuple(float(b) for b in bounds)
+        self._lock = threading.Lock()
+        self._snap = empty_snapshot(self.bounds)
+
+    def observe(self, x: float) -> None:
+        if not _ENABLED:
+            return
+        x = float(x)
+        i = bisect.bisect_left(self.bounds, x)   # first edge >= x (= `le`)
+        with self._lock:
+            s = self._snap
+            counts = list(s.counts)
+            counts[i] += 1
+            self._snap = HistSnapshot(bounds=s.bounds,
+                                      counts=tuple(counts),
+                                      total=s.total + 1, sum=s.sum + x)
+
+    # -- readers (any thread; lock-free) -------------------------------
+
+    def snapshot(self) -> HistSnapshot:
+        return self._snap
+
+    def quantile(self, q: float) -> float:
+        return self._snap.quantile(q)
+
+    @property
+    def count(self) -> int:
+        return self._snap.total
+
+    @property
+    def sum(self) -> float:
+        return self._snap.sum

@@ -1,0 +1,73 @@
+"""Metric registry: get-or-create named metrics, collectable for export.
+
+One ``Registry`` is one export surface (a Prometheus ``/metrics`` page, a
+benchmark's JSON dump).  Metrics are keyed by (name, sorted labels):
+asking twice for the same key returns the SAME object, so N replicas
+instrumenting "figmn_ingest_chunk_seconds" through one registry aggregate
+into one process-level histogram — which is exactly what a scrape wants.
+Callers that need isolation (e.g. a benchmark timing one fleet while a
+warm-up fleet is still alive) pass their own ``Registry()`` instead of the
+process default.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, LATENCY_BOUNDS)
+
+_Key = Tuple[str, Tuple[Tuple[str, str], ...]]
+
+
+class Registry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[_Key, object] = {}
+
+    def _get_or_create(self, cls, name: str, help: str,
+                       labels: Optional[Dict[str, str]], **kw):
+        key = (name, tuple(sorted((labels or {}).items())))
+        with self._lock:
+            m = self._metrics.get(key)
+            if m is None:
+                m = cls(name, help=help, labels=labels, **kw)
+                self._metrics[key] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r}{dict(key[1])} already registered as "
+                    f"{type(m).__name__}, requested {cls.__name__}")
+            return m
+
+    def counter(self, name: str, help: str = "",
+                labels: Optional[Dict[str, str]] = None) -> Counter:
+        return self._get_or_create(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Optional[Dict[str, str]] = None) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Optional[Dict[str, str]] = None,
+                  bounds: Sequence[float] = LATENCY_BOUNDS) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labels,
+                                   bounds=bounds)
+
+    def collect(self) -> List[object]:
+        """All registered metrics in deterministic (name, labels) order."""
+        with self._lock:
+            return [self._metrics[k] for k in sorted(self._metrics)]
+
+
+_DEFAULT = Registry()
+
+
+def default_registry() -> Registry:
+    return _DEFAULT
+
+
+def set_default(registry: Registry) -> Registry:
+    """Swap the process default (tests / isolated benchmarks); returns the
+    previous one so callers can restore it."""
+    global _DEFAULT
+    old, _DEFAULT = _DEFAULT, registry
+    return old

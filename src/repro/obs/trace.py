@@ -1,0 +1,208 @@
+"""Structured spans: nested, thread-safe, ~zero-cost when disabled.
+
+Usage at an instrumentation site (every hot path in the repo wears one):
+
+    from repro.obs import trace as obs_trace
+    with obs_trace.span("stream.ingest_chunk", path=path, n=n):
+        ...
+
+``span()`` is the WHOLE per-call-site contract: when tracing is disabled
+(the default) it performs one module-global read and returns a shared
+no-op context manager — no allocation, no clock read, no lock — so
+instrumented hot paths cost well under a microsecond per span (pinned by
+the overhead guard in tests/test_obs.py).  When a ``Tracer`` is installed
+via ``enable()``, each span records wall-clock start/duration, thread id
+and nesting depth (a per-thread stack, so concurrent serving threads
+nest independently), and appends one immutable ``SpanRecord`` to the
+tracer's bounded buffer under a mutex.
+
+Exports:
+
+  * ``export_jsonl``  — one JSON object per line (the CI artifact format;
+    trivially greppable/streamable),
+  * ``export_chrome`` — Chrome ``trace_event`` format ("X" complete
+    events): load the file at chrome://tracing or https://ui.perfetto.dev
+    to see the ingest/serve timeline per thread,
+  * optional ``xla=True`` — every span additionally enters a
+    ``jax.profiler.TraceAnnotation`` so the same names show up inside XLA
+    device profiles captured with ``jax.profiler.trace``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+try:                                    # jax is present everywhere in this
+    from jax.profiler import TraceAnnotation as _XlaAnnotation  # repo, but
+except Exception:                       # obs must not hard-require it
+    _XlaAnnotation = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanRecord:
+    name: str
+    ts_s: float                 # start, seconds since tracer epoch
+    dur_s: float
+    tid: int                    # OS thread ident
+    thread: str                 # thread name (serving pool vs coordinator)
+    depth: int                  # nesting depth within the thread (0 = root)
+    attrs: Tuple[Tuple[str, object], ...] = ()
+
+
+class _NoopSpan:
+    """The shared disabled-mode span: every method is a no-op."""
+    __slots__ = ()
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def set(self, **attrs) -> "_NoopSpan":
+        return self
+
+
+_NOOP = _NoopSpan()
+
+
+class _LiveSpan:
+    __slots__ = ("_tracer", "_name", "_attrs", "_t0", "_ann")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: Dict):
+        self._tracer = tracer
+        self._name = name
+        self._attrs = attrs
+        self._ann = None
+
+    def __enter__(self) -> "_LiveSpan":
+        tr = self._tracer
+        if tr.xla and _XlaAnnotation is not None:
+            self._ann = _XlaAnnotation(self._name)
+            self._ann.__enter__()
+        tr._push()
+        self._t0 = time.perf_counter()
+        return self
+
+    def set(self, **attrs) -> "_LiveSpan":
+        """Attach attributes discovered mid-span (e.g. result sizes)."""
+        self._attrs.update(attrs)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        t1 = time.perf_counter()
+        tr = self._tracer
+        depth = tr._pop()
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+        th = threading.current_thread()
+        tr._record(SpanRecord(
+            name=self._name, ts_s=self._t0 - tr._epoch_perf,
+            dur_s=t1 - self._t0, tid=th.ident or 0, thread=th.name,
+            depth=depth, attrs=tuple(sorted(self._attrs.items()))))
+        return False
+
+
+class Tracer:
+    """Bounded, thread-safe collector of completed spans."""
+
+    def __init__(self, capacity: int = 65536, xla: bool = False):
+        self.capacity = int(capacity)
+        self.xla = bool(xla)
+        self._lock = threading.Lock()
+        self._spans: List[SpanRecord] = []
+        self.dropped = 0
+        self._local = threading.local()
+        self._epoch_perf = time.perf_counter()
+        self.epoch_unix = time.time()   # wall-clock anchor for exports
+
+    # -- per-thread nesting stack --------------------------------------
+
+    def _push(self) -> None:
+        d = getattr(self._local, "depth", 0)
+        self._local.depth = d + 1
+
+    def _pop(self) -> int:
+        d = getattr(self._local, "depth", 1) - 1
+        self._local.depth = d
+        return d
+
+    # -- record / read -------------------------------------------------
+
+    def _record(self, rec: SpanRecord) -> None:
+        with self._lock:
+            if len(self._spans) >= self.capacity:
+                self.dropped += 1      # bounded: drop newest, keep history
+                return                 # (the warm-up spans are the story)
+            self._spans.append(rec)
+
+    def spans(self) -> List[SpanRecord]:
+        with self._lock:
+            return list(self._spans)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans = []
+            self.dropped = 0
+
+    # -- exports -------------------------------------------------------
+
+    def export_jsonl(self, path: str) -> int:
+        """One JSON object per line; returns the number of spans written."""
+        spans = self.spans()
+        with open(path, "w") as f:
+            for s in spans:
+                f.write(json.dumps({
+                    "name": s.name, "ts_s": s.ts_s, "dur_s": s.dur_s,
+                    "tid": s.tid, "thread": s.thread, "depth": s.depth,
+                    "attrs": dict(s.attrs)}) + "\n")
+        return len(spans)
+
+    def export_chrome(self, path: str) -> int:
+        """Chrome ``trace_event`` "X" (complete) events, microsecond
+        timestamps — viewable at chrome://tracing / ui.perfetto.dev."""
+        spans = self.spans()
+        events = [{"name": s.name, "ph": "X", "pid": 0, "tid": s.tid,
+                   "ts": s.ts_s * 1e6, "dur": s.dur_s * 1e6,
+                   "args": dict(s.attrs)} for s in spans]
+        with open(path, "w") as f:
+            json.dump({"traceEvents": events,
+                       "displayTimeUnit": "ms"}, f)
+        return len(spans)
+
+
+_TRACER: Optional[Tracer] = None
+
+
+def span(name: str, **attrs):
+    """A context manager timing one named region.  THE hot-path entry:
+    one global read when disabled (returns the shared no-op)."""
+    t = _TRACER
+    if t is None:
+        return _NOOP
+    return _LiveSpan(t, name, attrs)
+
+
+def enable(capacity: int = 65536, xla: bool = False) -> Tracer:
+    """Install a process-wide tracer (idempotent: replaces the old one)."""
+    global _TRACER
+    _TRACER = Tracer(capacity=capacity, xla=xla)
+    return _TRACER
+
+
+def disable() -> Optional[Tracer]:
+    """Uninstall; returns the tracer so callers can still export it."""
+    global _TRACER
+    t, _TRACER = _TRACER, None
+    return t
+
+
+def enabled() -> bool:
+    return _TRACER is not None
+
+
+def get_tracer() -> Optional[Tracer]:
+    return _TRACER

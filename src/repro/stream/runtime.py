@@ -26,6 +26,8 @@ import jax
 from repro.checkpoint import CheckpointManager
 from repro.core import figmn, inference, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
+from repro.obs import registry as obs_registry
+from repro.obs.trace import span
 from repro.stream import drift as drift_mod
 from repro.stream import ingest, lifecycle, telemetry
 from repro.ft.anomaly import AnomalyDetector
@@ -66,9 +68,26 @@ class StreamRuntime:
     """Owns mixture state + ingestion loop for one unbounded stream."""
 
     def __init__(self, cfg: FIGMNConfig,
-                 rcfg: RuntimeConfig = RuntimeConfig()):
+                 rcfg: RuntimeConfig = RuntimeConfig(),
+                 registry: Optional[obs_registry.Registry] = None):
         self.cfg = cfg
         self.rcfg = rcfg
+        # obs metrics are process-level by design: N replicas through one
+        # registry aggregate into ONE ingest histogram/counter set (what a
+        # scrape wants); callers needing isolation pass their own Registry
+        reg = registry or obs_registry.default_registry()
+        self._m_chunk_s = reg.histogram(
+            "figmn_ingest_chunk_seconds",
+            "per-chunk ingest wall time (device compute fenced)")
+        self._m_points = reg.counter(
+            "figmn_ingest_points_total", "points ingested")
+        self._m_active = reg.gauge(
+            "figmn_active_components", "live mixture components")
+        self._m_drift = reg.counter(
+            "figmn_drift_alarms_total", "drift detector alarms")
+        self._m_lifecycle_s = reg.histogram(
+            "figmn_lifecycle_pass_seconds",
+            "off-hot-path pool maintenance wall time")
         self.state: FIGMNState = figmn.init_state(cfg)
         self.chunk_idx = 0
         self.path = ingest.select_path(cfg, vmem_budget=rcfg.vmem_budget,
@@ -105,14 +124,18 @@ class StreamRuntime:
         many ``ingest`` calls).
         """
         rc = self.rcfg
-        loader = ingest.DoubleBufferedLoader(xs, rc.chunk, self.cfg.dtype)
-        for xc_dev, xc_host in loader:
-            self._ingest_chunk(xc_dev, xc_host)
-        if rc.lifecycle is not None:
-            self._run_lifecycle(final=True)
-        self._fold_accept_counter()
-        if self.ckpt is not None:
-            self.checkpoint()
+        with span("stream.ingest", n=int(np.shape(xs)[0]), path=self.path):
+            loader = ingest.DoubleBufferedLoader(xs, rc.chunk,
+                                                 self.cfg.dtype)
+            for xc_dev, xc_host in loader:
+                with span("stream.ingest_chunk", path=self.path,
+                          n=int(xc_dev.shape[0])):
+                    self._ingest_chunk(xc_dev, xc_host)
+            if rc.lifecycle is not None:
+                self._run_lifecycle(final=True)
+            self._fold_accept_counter()
+            if self.ckpt is not None:
+                self.checkpoint()
         return self.telemetry.summary()
 
     def _ingest_chunk(self, xc: Array, xc_host: np.ndarray) -> None:
@@ -196,6 +219,11 @@ class StreamRuntime:
             mean_ll=mean_ll, novelty_rate=novelty_rate,
             drift_score=float(drift_score), drift_alarm=alarm,
             path=path, latency_s=latency))
+        self._m_chunk_s.observe(latency)
+        self._m_points.inc(int(xc.shape[0]))
+        self._m_active.set(active_k)
+        if alarm:
+            self._m_drift.inc()
         self.chunk_idx += 1
 
         if (rc.lifecycle is not None and rc.lifecycle.every > 0
@@ -228,18 +256,25 @@ class StreamRuntime:
 
     def _run_lifecycle(self, final: bool = False) -> None:
         del final  # the pass is identical; the flag only documents intent
-        self._drain_pending_fails()
-        self._fold_accept_counter()
-        self.state, rep = lifecycle.run_pass(
-            self.cfg, self.rcfg.lifecycle, self.state, self.buffer)
+        t0 = time.perf_counter()
+        with span("stream.lifecycle") as sp:
+            self._drain_pending_fails()
+            self._fold_accept_counter()
+            self.state, rep = lifecycle.run_pass(
+                self.cfg, self.rcfg.lifecycle, self.state, self.buffer)
+            sp.set(pruned=rep.pruned, merged=rep.merged,
+                   spawned=rep.spawned)
         self.telemetry.add_lifecycle(rep.pruned, rep.merged, rep.spawned)
+        self._m_lifecycle_s.observe(time.perf_counter() - t0)
+        self._m_active.set(int(self.state.n_active))
 
     def _respond_to_drift(self) -> None:
         dcfg = self.rcfg.drift
-        if dcfg.response == "fork" and self.ckpt is not None:
-            # preserve the pre-drift mixture before mutating it
-            self.checkpoint()
-        self.state = drift_mod.respond(self.cfg, dcfg, self.state)
+        with span("stream.drift_response", response=dcfg.response):
+            if dcfg.response == "fork" and self.ckpt is not None:
+                # preserve the pre-drift mixture before mutating it
+                self.checkpoint()
+            self.state = drift_mod.respond(self.cfg, dcfg, self.state)
 
     # ------------------------------------------------------------------
     # pool export / import (fleet scale events)

@@ -11,12 +11,12 @@ flags chunks whose telemetry is jointly novel).
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.ft.anomaly import AnomalyDetector
+from repro.obs import export as obs_export
 
 
 @dataclasses.dataclass
@@ -40,7 +40,13 @@ class ChunkMetrics:
 
     @property
     def points_per_s(self) -> float:
-        return self.n_points / self.latency_s if self.latency_s > 0 else 0.0
+        # latency_s == 0 means the timer under-resolved, not that the chunk
+        # was infinitely fast — and 0.0 would be indistinguishable from a
+        # stalled chunk.  NaN is the honest answer; aggregators are
+        # nan-aware (Telemetry.summary, fleet telemetry's rate sum).
+        if self.latency_s > 0:
+            return self.n_points / self.latency_s
+        return float("nan")
 
 
 class Telemetry:
@@ -142,11 +148,15 @@ class Telemetry:
 
     def summary(self) -> Dict[str, object]:
         last = self.history[-1] if self.history else None
+        # nan-aware aggregate: total_time_s sums only measurable latencies,
+        # so the running rate stays exact even when individual chunks
+        # under-resolved (their NaN points_per_s never pollutes the sum);
+        # with NO measurable time at all the rate is unknown — NaN, not 0
         return {
             "chunks": self.total_chunks,
             "total_points": self.total_points,
             "points_per_s": (self.total_points / self.total_time_s
-                             if self.total_time_s > 0 else 0.0),
+                             if self.total_time_s > 0 else float("nan")),
             "active_k": last.active_k if last else 0,
             **dict(self.totals),
             "accepted": self.total_accepted,
@@ -155,7 +165,7 @@ class Telemetry:
         }
 
     def to_json(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump({"summary": self.summary(),
-                       "chunks": [dataclasses.asdict(m)
-                                  for m in self.history]}, f, indent=1)
+        obs_export.to_json(path, {
+            "kind": "stream_telemetry",
+            "summary": self.summary(),
+            "chunks": [dataclasses.asdict(m) for m in self.history]})

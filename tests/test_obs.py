@@ -1,0 +1,486 @@
+"""Observability layer conformance (src/repro/obs + its fleet wiring).
+
+Pins the contracts the instrumentation verticals rely on:
+
+  * histogram bucket quantiles are EXACT — identical to NumPy's
+    inverted_cdf percentile over bucket-quantized samples,
+  * snapshots merge (cross-thread / cross-replica) and diff (autoscaler
+    decision windows) losslessly, and concurrent observers lose no
+    samples,
+  * spans nest per thread and round-trip through both export formats,
+  * the disabled mode is ~free (< 1 µs per span() call — the guard that
+    keeps instrumentation on the hot paths honest),
+  * the serving→autoscaler loop: a synthetic p99 breach scales up, the
+    cooldown is respected, and the serving baseline survives the
+    checkpoint round-trip,
+  * satellite fixes: nan points_per_s on unresolved timers, schema_version
+    stamping, straggler detection-only wiring.
+"""
+import json
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.fleet.autoscale import (AutoscaleConfig, Autoscaler,
+                                   ReplicaSignal, ServingSignal)
+from repro.ft.straggler import StragglerConfig, StragglerMonitor
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Histogram, empty_snapshot, log_bounds
+from repro.stream.telemetry import ChunkMetrics, Telemetry
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_tracer():
+    """Span tests install a process-wide tracer; never leak it."""
+    yield
+    obs_trace.disable()
+
+
+# ---------------------------------------------------------------------------
+# histogram quantile exactness
+# ---------------------------------------------------------------------------
+
+def _quantize(xs, bounds):
+    """Each sample mapped to its bucket upper edge (+inf overflow)."""
+    b = np.asarray(bounds)
+    idx = np.searchsorted(b, xs, side="left")
+    return np.where(idx < len(b), b[np.minimum(idx, len(b) - 1)], np.inf)
+
+
+def test_bucket_quantiles_match_numpy_inverted_cdf():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=-6.0, sigma=2.5, size=5000)
+    h = Histogram("t", bounds=log_bounds())
+    for x in xs:
+        h.observe(x)
+    snap = h.snapshot()
+    assert snap.total == xs.size
+    quant = _quantize(xs, snap.bounds)
+    # np.quantile, not np.percentile: the percentile scale's /100 round
+    # trip perturbs q*n at exact-integer ranks (0.999*5000 -> 4995+eps)
+    for q in (0.01, 0.25, 0.5, 0.9, 0.99, 0.999):
+        ref = float(np.quantile(quant, q, method="inverted_cdf"))
+        assert snap.quantile(q) == ref, q
+
+
+def test_quantile_edge_cases():
+    assert np.isnan(empty_snapshot().quantile(0.5))
+    h = Histogram("t", bounds=log_bounds(1e-3, 1.0))
+    h.observe(5.0)                       # beyond hi: overflow bucket
+    assert h.quantile(0.5) == float("inf")
+    h2 = Histogram("t2", bounds=log_bounds(1e-3, 1.0))
+    h2.observe(1e-9)                     # below lo: first bucket
+    assert h2.quantile(0.5) == h2.bounds[0]
+
+
+def test_log_bounds_bit_identical_across_calls():
+    assert log_bounds() == log_bounds()
+    assert log_bounds(1e-4, 10.0, 5) == log_bounds(1e-4, 10.0, 5)
+
+
+# ---------------------------------------------------------------------------
+# merge / delta / threaded stress
+# ---------------------------------------------------------------------------
+
+def test_merge_is_bucketwise_sum_and_requires_same_bounds():
+    a, b = Histogram("a"), Histogram("b")
+    for x in (1e-4, 2e-3, 0.5):
+        a.observe(x)
+    for x in (1e-4, 7.0):
+        b.observe(x)
+    m = a.snapshot().merge(b.snapshot())
+    assert m.total == 5
+    assert m.sum == pytest.approx(a.sum + b.sum)
+    assert m.counts == tuple(x + y for x, y in zip(a.snapshot().counts,
+                                                   b.snapshot().counts))
+    with pytest.raises(ValueError):
+        a.snapshot().merge(Histogram("c",
+                                     bounds=log_bounds(1e-3)).snapshot())
+
+
+def test_delta_recovers_window_between_snapshots():
+    h = Histogram("t")
+    for _ in range(10):
+        h.observe(1e-3)
+    base = h.snapshot()
+    for _ in range(90):
+        h.observe(0.5)
+    win = h.snapshot().delta(base)
+    assert win.total == 90
+    # the window is all-0.5s even though the cumulative histogram isn't
+    assert win.quantile(0.5) == win.quantile(0.99)
+    assert win.quantile(0.99) >= 0.5
+
+
+def test_threaded_observers_lose_no_samples():
+    h = Histogram("t")
+    per_thread, n_threads = 2000, 8
+    rng = np.random.default_rng(1)
+    vals = rng.lognormal(-5, 1, (n_threads, per_thread))
+
+    def work(i):
+        for x in vals[i]:
+            h.observe(x)
+
+    ts = [threading.Thread(target=work, args=(i,))
+          for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = h.snapshot()
+    assert snap.total == per_thread * n_threads
+    assert sum(snap.counts) == per_thread * n_threads
+    assert snap.sum == pytest.approx(vals.sum(), rel=1e-9)
+
+
+def test_threaded_per_thread_histograms_merge_to_global_truth():
+    n_threads, per_thread = 6, 1500
+    rng = np.random.default_rng(2)
+    vals = rng.lognormal(-5, 1, (n_threads, per_thread))
+    hists = [Histogram(f"h{i}") for i in range(n_threads)]
+
+    def work(i):
+        for x in vals[i]:
+            hists[i].observe(x)
+
+    ts = [threading.Thread(target=work, args=(i,))
+          for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    merged = hists[0].snapshot()
+    for h in hists[1:]:
+        merged = merged.merge(h.snapshot())
+    # the merged histogram is indistinguishable from one global histogram
+    ref = Histogram("ref")
+    for x in vals.ravel():
+        ref.observe(x)
+    assert merged.counts == ref.snapshot().counts
+    for q in (0.5, 0.99):
+        assert merged.quantile(q) == ref.quantile(q)
+
+
+def test_counters_monotonic_and_threaded():
+    c = obs_metrics.Counter("c")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    ts = [threading.Thread(target=lambda: [c.inc() for _ in range(5000)])
+          for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == 20000
+
+
+# ---------------------------------------------------------------------------
+# spans: nesting + export round-trip + disabled-mode overhead
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_export_round_trip(tmp_path):
+    tracer = obs_trace.enable(capacity=128)
+    with obs_trace.span("outer", phase="test"):
+        with obs_trace.span("inner") as sp:
+            sp.set(n=3)
+            time.sleep(0.001)
+
+    def other_thread():
+        with obs_trace.span("elsewhere"):
+            pass
+
+    t = threading.Thread(target=other_thread, name="obs-test-worker")
+    t.start()
+    t.join()
+    spans = {s.name: s for s in tracer.spans()}
+    assert set(spans) == {"outer", "inner", "elsewhere"}
+    assert spans["outer"].depth == 0
+    assert spans["inner"].depth == 1
+    assert spans["elsewhere"].depth == 0        # fresh per-thread stack
+    assert spans["inner"].dur_s >= 0.001
+    # inner closed before outer, and sits inside it on the timeline
+    assert spans["inner"].ts_s >= spans["outer"].ts_s
+    assert dict(spans["inner"].attrs) == {"n": 3}
+
+    jsonl = tmp_path / "trace.jsonl"
+    chrome = tmp_path / "trace.json"
+    assert tracer.export_jsonl(str(jsonl)) == 3
+    assert tracer.export_chrome(str(chrome)) == 3
+    rows = [json.loads(line) for line in jsonl.read_text().splitlines()]
+    assert {r["name"] for r in rows} == {"outer", "inner", "elsewhere"}
+    for r in rows:
+        assert set(r) == {"name", "ts_s", "dur_s", "tid", "thread",
+                          "depth", "attrs"}
+    doc = json.loads(chrome.read_text())
+    events = doc["traceEvents"]
+    assert len(events) == 3
+    assert all(e["ph"] == "X" for e in events)
+    by_name = {e["name"]: e for e in events}
+    assert by_name["inner"]["dur"] == pytest.approx(
+        spans["inner"].dur_s * 1e6)
+    assert by_name["inner"]["args"] == {"n": 3}
+
+
+def test_tracer_capacity_bounds_memory():
+    tracer = obs_trace.enable(capacity=4)
+    for i in range(10):
+        with obs_trace.span(f"s{i}"):
+            pass
+    assert len(tracer.spans()) == 4
+    assert tracer.dropped == 6
+    assert [s.name for s in tracer.spans()] == ["s0", "s1", "s2", "s3"]
+
+
+def test_disabled_span_overhead_under_1us():
+    assert not obs_trace.enabled()
+    n = 100_000
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with obs_trace.span("hot"):
+                pass
+        best = min(best, (time.perf_counter() - t0) / n)
+    assert best < 1e-6, f"disabled span costs {best * 1e9:.0f} ns"
+
+
+def test_disabled_metrics_are_noops():
+    obs_metrics.disable()
+    try:
+        h, c = Histogram("t"), obs_metrics.Counter("c")
+        h.observe(1.0)
+        c.inc()
+        assert h.count == 0 and c.value == 0
+    finally:
+        obs_metrics.enable()
+
+
+# ---------------------------------------------------------------------------
+# registry + exporters
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_type_guard():
+    reg = obs_registry.Registry()
+    a = reg.counter("x_total", "help", {"kind": "a"})
+    assert reg.counter("x_total", labels={"kind": "a"}) is a
+    assert reg.counter("x_total", labels={"kind": "b"}) is not a
+    with pytest.raises(TypeError):
+        reg.gauge("x_total", labels={"kind": "a"})
+
+
+def test_prometheus_text_exposition():
+    reg = obs_registry.Registry()
+    reg.counter("figmn_reqs_total", "requests", {"kind": "score"}).inc(3)
+    reg.gauge("figmn_replicas", "live replicas").set(2)
+    h = reg.histogram("figmn_lat_seconds", "latency",
+                      bounds=log_bounds(1e-3, 1.0))
+    h.observe(0.002)
+    h.observe(0.5)
+    text = obs_export.prometheus_text(reg)
+    assert 'figmn_reqs_total{kind="score"} 3' in text
+    assert "figmn_replicas 2" in text
+    assert "# TYPE figmn_lat_seconds histogram" in text
+    assert 'le="+Inf"} 2' in text
+    assert "figmn_lat_seconds_count 2" in text
+    # cumulative bucket counts are monotone
+    counts = [float(line.rsplit(" ", 1)[1])
+              for line in text.splitlines()
+              if line.startswith("figmn_lat_seconds_bucket")]
+    assert counts == sorted(counts) and counts[-1] == 2
+
+
+def test_serve_metrics_http_endpoint():
+    reg = obs_registry.Registry()
+    reg.counter("figmn_up_total").inc()
+    server = obs_export.serve_metrics(0, registry=reg, host="127.0.0.1")
+    try:
+        port = server.server_address[1]
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=5).read().decode()
+        assert "figmn_up_total 1" in body
+        with pytest.raises(Exception):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/nope", timeout=5)
+    finally:
+        server.shutdown()
+
+
+def test_to_json_stamps_schema_version(tmp_path):
+    p = tmp_path / "out.json"
+    obs_export.to_json(str(p), {"kind": "test", "x": 1})
+    doc = json.loads(p.read_text())
+    assert doc["schema_version"] == obs_export.SCHEMA_VERSION
+    assert doc["x"] == 1
+
+
+# ---------------------------------------------------------------------------
+# serving→autoscaler loop (policy level)
+# ---------------------------------------------------------------------------
+
+def _signals(n=2, routed=100, active_k=8):
+    return [ReplicaSignal(rid=i, routed=routed * (1 + 0), chunks=5,
+                          drift_alarms=0, active_k=active_k, budget=64)
+            for i in range(n)]
+
+
+def _serving(h, requests, window_s=1.0):
+    return ServingSignal.from_histogram(h.snapshot(), requests, window_s)
+
+
+def _quiet_cfg(**kw):
+    """Ingest-side triggers unreachable; only serving pressure armed."""
+    base = dict(min_replicas=1, max_replicas=8, up_skew=1e9,
+                up_pressure=2.0, up_drift=1e9, down_share=-1.0,
+                cooldown=1, serve_min_requests=4)
+    base.update(kw)
+    return AutoscaleConfig(**base)
+
+
+def test_autoscaler_scales_up_on_p99_breach_and_respects_cooldown():
+    auto = Autoscaler(_quiet_cfg(up_serve_p99=0.010))
+    h = Histogram("lat")
+    for _ in range(20):
+        h.observe(0.002)
+    # first serving observation anchors the baseline — never triggers
+    d0 = auto.observe(_signals(), _serving(h, 20))
+    assert d0.action == "hold"
+    # healthy window: under threshold
+    for _ in range(20):
+        h.observe(0.002)
+    assert auto.observe(_signals(), _serving(h, 40)).action == "hold"
+    # latency ramp: windowed p99 breaches 10ms
+    for _ in range(50):
+        h.observe(0.050)
+    d2 = auto.observe(_signals(), _serving(h, 90))
+    assert d2.action == "up"
+    assert "serving p99" in d2.reason
+    # cooldown=1: the very next decision is skipped even though the
+    # breach persists
+    for _ in range(50):
+        h.observe(0.050)
+    d3 = auto.observe(_signals(), _serving(h, 140))
+    assert d3.action == "hold" and d3.reason == "cooldown"
+    # cooldown expired and the breach persists: scales up again
+    for _ in range(50):
+        h.observe(0.050)
+    assert auto.observe(_signals(), _serving(h, 190)).action == "up"
+
+
+def test_autoscaler_qps_trigger_fires_without_ingest_traffic():
+    auto = Autoscaler(_quiet_cfg(up_serve_qps=10.0, cooldown=0))
+    h = Histogram("lat")
+    for _ in range(5):
+        h.observe(0.001)
+    sig = _signals()
+    auto.observe(sig, _serving(h, 5))            # baseline
+    for _ in range(100):
+        h.observe(0.001)
+    # SAME cumulative ingest counters: routed delta is zero, yet the
+    # serving window (50 qps/replica over 2 replicas) forces the up
+    d = auto.observe(sig, _serving(h, 105, window_s=1.0))
+    assert d.action == "up"
+    assert "qps/replica" in d.reason
+
+
+def test_autoscaler_serving_window_below_min_requests_is_noise():
+    auto = Autoscaler(_quiet_cfg(up_serve_p99=0.001, cooldown=0,
+                                 serve_min_requests=8))
+    h = Histogram("lat")
+    h.observe(10.0)
+    auto.observe(_signals(), _serving(h, 1))     # baseline
+    for _ in range(3):
+        h.observe(10.0)                          # breach, but 3 < 8 reqs
+    assert auto.observe(_signals(), _serving(h, 4)).action == "hold"
+
+
+def test_autoscaler_serving_baseline_survives_checkpoint_round_trip():
+    auto = Autoscaler(_quiet_cfg(up_serve_p99=0.010, cooldown=0))
+    h = Histogram("lat")
+    for _ in range(20):
+        h.observe(0.002)
+    auto.observe(_signals(), _serving(h, 20))
+    state = auto.export_state()
+    assert state["serve_last"] is not None
+    resumed = Autoscaler(auto.cfg)
+    resumed.load_state(json.loads(json.dumps(state)))  # JSON-safe
+    assert resumed._serve_last == auto._serve_last
+    # the resumed policy continues the same decision sequence: a breach
+    # window diffs against the RESTORED baseline and triggers
+    for _ in range(50):
+        h.observe(0.050)
+    assert resumed.observe(_signals(), _serving(h, 70)).action == "up"
+    # legacy manifests (no serve_last key) still load
+    legacy = {k: v for k, v in state.items() if k != "serve_last"}
+    fresh = Autoscaler(auto.cfg)
+    fresh.load_state(legacy)
+    assert fresh._serve_last is None
+
+
+def test_autoscaler_without_serving_signal_unchanged():
+    """PR-5-era call sites (observe(signals) only) keep identical
+    decision sequences — the serving term is strictly additive."""
+    cfg = AutoscaleConfig(cooldown=0, up_skew=1.5)
+    a, b = Autoscaler(cfg), Autoscaler(cfg)
+    seq = [
+        [ReplicaSignal(0, 100, 5, 0, 8, 64),
+         ReplicaSignal(1, 10, 1, 0, 8, 64)],
+        [ReplicaSignal(0, 300, 9, 0, 8, 64),
+         ReplicaSignal(1, 20, 2, 0, 8, 64)],
+    ]
+    for sig in seq:
+        da = a.observe(sig)
+        db = b.observe(sig, serving=None)
+        assert (da.action, da.rid, da.reason) == \
+               (db.action, db.rid, db.reason)
+
+
+# ---------------------------------------------------------------------------
+# satellites: nan rates, straggler wiring
+# ---------------------------------------------------------------------------
+
+def test_points_per_s_nan_when_timer_unresolved():
+    m = ChunkMetrics(idx=0, n_points=100, active_k=4, latency_s=0.0)
+    assert np.isnan(m.points_per_s)
+    assert ChunkMetrics(idx=0, n_points=100, active_k=4,
+                        latency_s=0.5).points_per_s == 200.0
+    t = Telemetry()
+    t.record(m)
+    assert np.isnan(t.summary()["points_per_s"])
+    # a later measurable chunk makes the aggregate finite and exact
+    t.record(ChunkMetrics(idx=1, n_points=50, active_k=4, latency_s=0.5))
+    assert t.summary()["points_per_s"] == 300.0
+
+
+def test_fleet_rate_sum_is_nan_aware():
+    from repro.fleet.telemetry import FleetTelemetry
+    ft = FleetTelemetry()
+    s = ft.summary([{"points_per_s": float("nan"), "chunks": 1},
+                    {"points_per_s": 100.0, "chunks": 1}], {})
+    assert s["points_per_s"] == 100.0
+    s = ft.summary([{"points_per_s": float("nan"), "chunks": 1}], {})
+    assert np.isnan(s["points_per_s"])
+
+
+def test_straggler_suspects_is_detection_only():
+    mon = StragglerMonitor(["a", "b", "c", "d"],
+                           StragglerConfig(slow_factor=1.5, patience=3))
+    for h in ("a", "b", "c"):
+        mon.report(h, 0.1)
+    mon.report("d", 1.0)
+    assert mon.suspects() == ["d"]
+    # non-mutating: no strikes accrued, nothing evicted, repeatable
+    assert mon.suspects() == ["d"]
+    assert mon.alive() == ["a", "b", "c", "d"]
+    assert all(hs.strikes == 0 for hs in mon.hosts.values())
+    # membership wiring
+    mon.add_host("e")
+    assert "e" in mon.hosts
+    mon.remove_host("d")
+    assert mon.suspects() == []
