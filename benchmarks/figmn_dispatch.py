@@ -1,0 +1,225 @@
+"""Dispatch calibration: measured cost table + decision audit →
+BENCH_dispatch.json (+ the device-keyed cost table itself).
+
+Runs ``stream.costmodel.calibrate`` over the (K, D, C, chunk) grid on the
+actual backend — every dispatch path timed compile-excluded,
+``block_until_ready``-fenced, median-of-R, each cell paired with its
+HLO-derived roofline prediction — then audits the decision layer the
+table drives:
+
+  * per grid cell, the measured seconds of every candidate path next to
+    its HLO-predicted seconds (the measured-vs-predicted roofline view;
+    the same cells are dropped into ``benchmarks/artifacts/dryrun`` as
+    ``figmn_path`` records for ``benchmarks.roofline``);
+  * per decision point (ingest per (K, D, C, chunk); eq. 27 predict per
+    (K, D, C)), whether the table-driven choice equals the measured
+    fastest candidate, and what the PR-6 heuristic would have done — the
+    ``accuracy`` the acceptance criterion gates (≥ 0.9; a miss means the
+    nearest-cell lookup resolved a config to the wrong calibration cell);
+  * total calibration wall time (the cost of re-calibrating on deploy).
+
+The committed smoke baseline (benchmarks/baselines/) gates CI: an
+accuracy drop or a >2× calibration-time regression fails ``--check``.
+
+Run:    PYTHONPATH=src python -m benchmarks.figmn_dispatch [--smoke]
+Gate:   PYTHONPATH=src python -m benchmarks.figmn_dispatch \
+            --check BENCH_dispatch.json \
+            --baseline benchmarks/baselines/BENCH_dispatch_smoke.json
+(or via ``python -m benchmarks.run figmn_dispatch [--smoke]``)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks import roofline
+from repro.core.types import FIGMNConfig
+from repro.obs import export as obs_export
+from repro.stream import costmodel
+
+#: where the calibration table lands (next to BENCH_dispatch.json; CI
+#: uploads it as an artifact alongside the trace JSONL)
+TABLE_OUT = "BENCH_dispatch_table.json"
+
+CHUNKS = (256,)
+CHUNKS_SMOKE = (128,)
+N_SERVE = 1024
+N_SERVE_SMOKE = 256
+
+
+def _decision_cfg(k: int, d: int, c: int) -> FIGMNConfig:
+    return FIGMNConfig(kmax=k, dim=d, beta=0.1, delta=1.0,
+                       shortlist_c=c,
+                       sigma_ini=np.ones((d,), np.float32))
+
+
+def _audit(table: costmodel.CostTable, grid, chunks, n_serve: int
+           ) -> List[Dict]:
+    """One row per decision point: table choice vs measured-fastest
+    candidate vs heuristic counterfactual."""
+    dkey = table.meta["device_key"]
+    rows: List[Dict] = []
+    for k, d, cs in grid:
+        for n in chunks:
+            for c in cs:
+                cfg = _decision_cfg(k, d, c)
+                dec = costmodel.decide(cfg, chunk=n, cost_table=table)
+                cand = {}
+                for path in ("scan", "sparse", "vmem"):
+                    cell = table.lookup(
+                        dkey, "ingest", path, k=k, d=d,
+                        c=c if path == "sparse" else 0, n=n)
+                    if cell is not None and cell["k"] == k \
+                            and cell["d"] == d and cell["n"] == n:
+                        cand[path] = cell
+                if not cand:
+                    continue
+                fastest = min(cand, key=lambda p:
+                              (cand[p]["per_point_s"], p))
+                rows.append({
+                    "kind": "ingest", "k": k, "d": d, "c": c, "n": n,
+                    "choice": dec.path, "reason": dec.reason,
+                    "heuristic": dec.heuristic_path, "fastest": fastest,
+                    "match": dec.path == fastest,
+                    "paths": {p: {
+                        "measured_s": cand[p]["measured_s"],
+                        "predicted_s": cand[p].get("predicted_s"),
+                        "bottleneck": cand[p].get("bottleneck"),
+                    } for p in sorted(cand)}})
+        for c in cs:
+            cfg = _decision_cfg(k, d, c)
+            dec = costmodel.decide_predict(cfg, c=c, n=n_serve,
+                                           cost_table=table)
+            cand = {}
+            for path, cc in (("dense", 0), ("sparse", c)):
+                cell = table.lookup(dkey, "predict", path, k=k, d=d,
+                                    c=cc, n=n_serve)
+                if cell is not None and cell["k"] == k \
+                        and cell["d"] == d:
+                    cand[path] = cell
+            if len(cand) < 2:
+                continue
+            fastest = min(cand, key=lambda p: (cand[p]["per_point_s"], p))
+            rows.append({
+                "kind": "predict", "k": k, "d": d, "c": c, "n": n_serve,
+                "choice": dec.path, "reason": dec.reason,
+                "heuristic": dec.heuristic_path, "fastest": fastest,
+                "match": dec.path == fastest,
+                "paths": {p: {
+                    "measured_s": cand[p]["measured_s"],
+                    "predicted_s": cand[p].get("predicted_s"),
+                    "bottleneck": cand[p].get("bottleneck"),
+                } for p in sorted(cand)}})
+    return rows
+
+
+def _dump_roofline_records(table: costmodel.CostTable) -> int:
+    """Drop the table's cells as figmn_path dry-run records so
+    ``python -m benchmarks.roofline`` reports them next to the LM cells."""
+    os.makedirs(roofline.ARTIFACT_DIR, exist_ok=True)
+    recs = costmodel.to_roofline_records(table)
+    for rec in recs:
+        path = os.path.join(roofline.ARTIFACT_DIR,
+                            f"figmn_path__{rec['shape']}.json")
+        obs_export.to_json(path, rec)
+    return len(recs)
+
+
+def run(out_path: str = "BENCH_dispatch.json", quick: bool = False,
+        table_path: str = TABLE_OUT) -> Dict:
+    grid = costmodel.SMOKE_GRID if quick else costmodel.DEFAULT_GRID
+    chunks = CHUNKS_SMOKE if quick else CHUNKS
+    n_serve = N_SERVE_SMOKE if quick else N_SERVE
+    repeats = 2 if quick else 3
+
+    t0 = time.perf_counter()
+    table = costmodel.calibrate(grid=grid, chunks=chunks, n_serve=n_serve,
+                                repeats=repeats, verbose=True)
+    calibration_s = time.perf_counter() - t0
+    table.save(table_path)
+    n_recs = _dump_roofline_records(table)
+
+    rows = _audit(table, grid, chunks, n_serve)
+    n_match = sum(1 for r in rows if r["match"])
+    accuracy = n_match / max(len(rows), 1)
+    overrides = sum(1 for r in rows if r["choice"] != r["heuristic"])
+
+    for r in rows:
+        paths = ", ".join(
+            f"{p} {v['measured_s']:.2e}s"
+            + (f" (pred {v['predicted_s']:.2e}s)"
+               if v.get("predicted_s") is not None else "")
+            for p, v in r["paths"].items())
+        mark = "=" if r["choice"] == r["heuristic"] else "≠heuristic"
+        print(f"{r['kind']:7s} K={r['k']:4d} D={r['d']:3d} C={r['c']:3d} "
+              f"n={r['n']:5d}: choice={r['choice']:6s} [{mark}] "
+              f"fastest={r['fastest']:6s} match={r['match']} | {paths}")
+
+    doc = {"benchmark": "figmn_dispatch",
+           "backend": jax.default_backend(),
+           "device_key": table.meta["device_key"],
+           "smoke": quick,
+           "calibration_s": calibration_s,
+           "n_cells": sum(len(v) for v in table.entries.values()),
+           "n_decisions": len(rows),
+           "accuracy": accuracy,
+           "heuristic_overrides": overrides,
+           "table_path": table_path,
+           "rows": rows}
+    obs_export.to_json(out_path, doc)
+    print(f"wrote {out_path} ({len(rows)} decisions, accuracy "
+          f"{accuracy:.2f}, calibration {calibration_s:.1f}s, "
+          f"{n_recs} roofline records) + table {table_path}")
+    return doc
+
+
+def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
+    """CI gate: fail on a dispatch-accuracy drop below the committed
+    baseline, or a >``factor``× smoke-calibration-time regression."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    if bench.get("smoke") != base.get("smoke") \
+            or bench.get("n_decisions") != base.get("n_decisions"):
+        print(f"gate mismatch: bench (smoke={bench.get('smoke')}, "
+              f"{bench.get('n_decisions')} decisions) vs baseline "
+              f"(smoke={base.get('smoke')}, "
+              f"{base.get('n_decisions')}) — regenerate the bench with "
+              f"--smoke before gating")
+        return False
+    acc, acc_ref = float(bench["accuracy"]), float(base["accuracy"])
+    cal, cal_ref = float(bench["calibration_s"]), float(base["calibration_s"])
+    ok_acc = acc + 1e-9 >= acc_ref
+    ok_cal = cal <= factor * cal_ref
+    print(f"dispatch accuracy: {acc:.3f} vs baseline {acc_ref:.3f} — "
+          f"{'OK' if ok_acc else 'REGRESSION'}")
+    print(f"calibration time:  {cal:.1f}s vs baseline {cal_ref:.1f}s "
+          f"(ceiling {factor * cal_ref:.1f}s) — "
+          f"{'OK' if ok_cal else 'REGRESSION'}")
+    return ok_acc and ok_cal
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="gate mode: compare BENCH_JSON against --baseline "
+                         "instead of running the benchmark")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_dispatch_smoke.json")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(0 if check(args.check, args.baseline) else 1)
+    main(smoke=args.smoke)

@@ -35,6 +35,35 @@ ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts",
                             "dryrun")
 
 
+def figmn_model_flops(k: int, d: int, c: int, points: int,
+                      op: str = "ingest") -> float:
+    """The paper cost model as FLOPs, per dispatch path.
+
+    Dense ingest (eqs. 3–10/20–26): 2 passes over K·D² per point — the
+    Mahalanobis distance pass and the rank-one precision update — at
+    2 FLOPs per MAC ⇒ 4·K·D².  Shortlisted (PR 4): the exact D² work runs
+    on C gathered rows plus an O(K·D) bound pass ⇒ 4·C·D² + 2·K·D.  Reads
+    (score / eq. 27 predict) run the distance pass only: half the ingest
+    passes.
+    """
+    passes = 4.0 if op == "ingest" else 2.0
+    if c and c > 0:
+        per_pt = passes * c * d * d + 2.0 * k * d
+    else:
+        per_pt = passes * k * d * d
+    return per_pt * points
+
+
+def _figmn_kd_from_shape(rec: Dict) -> Dict:
+    """Legacy figmn_fit dry-run records carry (K, D) only in the
+    "d{dim}_k{kmax}" shape string; newer writers stamp explicit fields."""
+    import re
+    m = re.match(r"d(\d+)_k(\d+)", rec.get("shape", ""))
+    if m:
+        return {"d": int(m.group(1)), "k": int(m.group(2))}
+    return {}
+
+
 def model_flops_per_device(rec: Dict) -> float:
     n = rec.get("n_active_params", rec.get("n_params", 0))
     kind = rec.get("kind", "train")
@@ -44,10 +73,20 @@ def model_flops_per_device(rec: Dict) -> float:
     elif kind == "prefill":
         tokens = rec["seq_len"] * rec["global_batch"]
         total = 2.0 * n * tokens
-    elif kind == "figmn_fit":
-        # paper cost model: 2 passes over K·D² per point (distance + update)
-        total = 4.0 * n * rec["seq_len"]
-        return total / max(rec["n_devices"] // 2, 1)   # K over model axis
+    elif kind in ("figmn_fit", "figmn_path"):
+        # paper cost model from the record's actual (K, D, C) fields —
+        # not from an axis-count guess.  The component pool is sharded
+        # over the mesh's "model" axis (launch/dryrun.lower_figmn), so
+        # per-device K divides by that axis size, not by n_devices//2.
+        kd = {**_figmn_kd_from_shape(rec), **{f: rec[f]
+              for f in ("k", "d", "c") if f in rec}}
+        points = rec.get("points", rec.get("seq_len", 1))
+        if "k" in kd and "d" in kd:
+            total = figmn_model_flops(kd["k"], kd["d"], kd.get("c", 0),
+                                      points, rec.get("op", "ingest"))
+        else:   # no shape info at all: K·D² ≈ n_params, dense ingest
+            total = 4.0 * n * points
+        return total / max(int(rec.get("model_axis", 1)), 1)
     else:                                              # decode: 1 token/seq
         total = 2.0 * n * rec["global_batch"]
     return total / rec["n_devices"]
@@ -57,15 +96,20 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
     if "skipped" in rec or "hlo" not in rec:
         return None
     h = rec["hlo"]
+    # records calibrated on a non-TPU backend carry their own peak
+    # anchors (benchmarks.figmn_dispatch / costmodel.to_roofline_records);
+    # dry-run artifacts fall back to the pod constants above
+    peak_flops = float(rec.get("peak_flops", PEAK_FLOPS))
+    hbm_bw = float(rec.get("hbm_bw", HBM_BW))
     terms = {
-        "compute_s": h["flops"] / PEAK_FLOPS,
-        "memory_s": h["traffic_bytes"] / HBM_BW,
+        "compute_s": h["flops"] / peak_flops,
+        "memory_s": h["traffic_bytes"] / hbm_bw,
         "collective_s": h["coll_bytes_total"] / ICI_BW,
     }
     dominant = max(terms, key=terms.get)
-    useful = model_flops_per_device(rec) / PEAK_FLOPS
+    useful = model_flops_per_device(rec) / peak_flops
     frac = useful / max(terms[dominant], 1e-30)
-    return {
+    row = {
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
         **{k: v for k, v in terms.items()},
         "dominant": dominant.replace("_s", ""),
@@ -73,11 +117,16 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
         "roofline_fraction": frac,
         "model_vs_hlo_flops": model_flops_per_device(rec)
         / max(h["flops"], 1e-30),
-        "mem_gib_per_dev": rec["memory"].get("argument_size_in_bytes", 0)
-        / 2**30,
-        "temp_gib_per_dev": rec["memory"].get("temp_size_in_bytes", 0)
-        / 2**30,
+        "mem_gib_per_dev": rec.get("memory", {})
+        .get("argument_size_in_bytes", 0) / 2**30,
+        "temp_gib_per_dev": rec.get("memory", {})
+        .get("temp_size_in_bytes", 0) / 2**30,
     }
+    if rec.get("kind") == "figmn_path":
+        row["measured_s"] = rec.get("measured_s")
+        row["path"] = rec.get("path")
+        row["op"] = rec.get("op")
+    return row
 
 
 def load_all(art_dir: str = ARTIFACT_DIR) -> List[Dict]:
@@ -131,6 +180,17 @@ def main(smoke: bool = False):
                   f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
                   f"c={r['compute_s']:.2e};m={r['memory_s']:.2e};"
                   f"x={r['collective_s']:.2e}")
+        elif r["arch"] == "figmn-path":
+            # dispatch calibration cells (benchmarks.figmn_dispatch):
+            # measured vs HLO-predicted seconds per path
+            pred = max(r["compute_s"], r["memory_s"])
+            meas = r.get("measured_s")
+            mvp = (f"{meas / max(pred, 1e-30):.1f}x"
+                   if meas is not None else "n/a")
+            print(f"roofline/{r['arch']}__{r['shape']},0,"
+                  f"dom={r['dominant']};pred={pred:.2e};"
+                  f"meas={meas if meas is None else format(meas, '.2e')};"
+                  f"meas/pred={mvp}")
     if not any(r["mesh"] == "16x16" and r["arch"] != "figmn-core"
                for r in rows):
         print("roofline/no_dryrun_artifacts,0,run repro.launch.dryrun "

@@ -26,6 +26,11 @@ CSV convention: ``name,us_per_call,derived``.
                     autoscaler adds a replica off the serving signal
                     alone → BENCH_serve.json (CI-gated against
                     benchmarks/baselines/)
+  figmn_dispatch  — dispatch calibration: measured per-path cost table
+                    + decision audit (table choice vs measured fastest
+                    vs heuristic) → BENCH_dispatch.json +
+                    BENCH_dispatch_table.json (CI-gated against
+                    benchmarks/baselines/)
   lm_bench        — reduced-config LM substrate step times
   roofline        — §Roofline terms per (arch × shape) from the dry-run
                     artifacts (run repro.launch.dryrun --all first)
@@ -52,8 +57,8 @@ import traceback
 #: ``main(smoke: bool = False)`` where smoke runs a tiny-size subset.
 REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
             "figmn_runtime", "figmn_fleet", "figmn_autoscale",
-            "figmn_sparse", "figmn_predict", "figmn_serve", "lm_bench",
-            "roofline")
+            "figmn_sparse", "figmn_predict", "figmn_serve",
+            "figmn_dispatch", "lm_bench", "roofline")
 
 #: CI-gated benchmarks: module -> (fresh bench json, committed baseline);
 #: each module exposes ``check(bench_path, baseline_path) -> bool``.
@@ -66,6 +71,8 @@ GATES = {
                       "benchmarks/baselines/BENCH_predict_smoke.json"),
     "figmn_serve": ("BENCH_serve.json",
                     "benchmarks/baselines/BENCH_serve_smoke.json"),
+    "figmn_dispatch": ("BENCH_dispatch.json",
+                       "benchmarks/baselines/BENCH_dispatch_smoke.json"),
 }
 
 

@@ -36,8 +36,7 @@ from repro.api.query import Query
 from repro.core.types import Array, FIGMNConfig, FIGMNState
 from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
 from repro.obs.trace import span
-from repro.stream import RuntimeConfig, StreamRuntime
-from repro.stream import ingest as ingest_mod
+from repro.stream import RuntimeConfig, StreamRuntime, costmodel
 
 TIERS = ("runtime", "fleet", "autoscaled")
 
@@ -59,16 +58,26 @@ class MixtureSpec:
     fleet:    fleet-level knobs (routing, consolidation cadence, fleet
               checkpoint root); None ⇒ FleetConfig() defaults on fleet
               tiers, ignored on "runtime".
+    cost_table: a ``stream.costmodel.CostTable`` (or a path to its JSON
+              dump) of measured per-path costs for this device; when set,
+              every tier's ingest-path and predict-path dispatch follows
+              the measured winner instead of the heuristic (threaded into
+              ``runtime.cost_table`` at engine build).  None ⇒ the
+              heuristic, bit-compatibly.
     """
     model: FIGMNConfig
     tier: str = "runtime"
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
     fleet: Optional[FleetConfig] = None
+    cost_table: Optional[object] = None
 
 
 def _build_engine(spec: MixtureSpec):
+    rcfg = spec.runtime
+    if spec.cost_table is not None and rcfg.cost_table is None:
+        rcfg = dataclasses.replace(rcfg, cost_table=spec.cost_table)
     if spec.tier == "runtime":
-        return StreamRuntime(spec.model, spec.runtime)
+        return StreamRuntime(spec.model, rcfg)
     if spec.tier not in TIERS:
         raise ValueError(f"unknown tier {spec.tier!r}; expected one of "
                          f"{TIERS}")
@@ -79,7 +88,7 @@ def _build_engine(spec: MixtureSpec):
     elif fcfg.autoscale is not None:
         raise ValueError("tier 'fleet' is fixed-membership; use tier "
                          "'autoscaled' for an AutoscaleConfig'd fleet")
-    return FleetCoordinator(spec.model, fcfg, spec.runtime)
+    return FleetCoordinator(spec.model, fcfg, rcfg)
 
 
 class Mixture:
@@ -207,10 +216,14 @@ class Mixture:
             self.engine.close()
 
     def __repr__(self) -> str:
+        rcfg = self.spec.runtime
         path = (self.engine.path if not self._is_fleet
-                else ingest_mod.select_path(
-                    self.cfg, vmem_budget=self.spec.runtime.vmem_budget,
-                    requested=self.spec.runtime.path))
+                else costmodel.decide(
+                    self.cfg, requested=rcfg.path, chunk=rcfg.chunk,
+                    vmem_budget=rcfg.vmem_budget, device=rcfg.device,
+                    cost_table=rcfg.cost_table
+                    if rcfg.cost_table is not None
+                    else self.spec.cost_table).path)
         return (f"Mixture(tier={self.spec.tier!r}, dim={self.cfg.dim}, "
                 f"kmax={self.cfg.kmax}, path={path!r}, "
                 f"shortlist_c={self.cfg.shortlist_c})")

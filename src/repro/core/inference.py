@@ -179,14 +179,29 @@ def predict_batch(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
 
 
 def predict_batch_routed(cfg: FIGMNConfig, state: FIGMNState, xs_in: Array,
-                         idx_out, c: int = 0) -> Array:
+                         idx_out, c: int = 0, cost_table=None,
+                         device=None) -> Array:
     """THE dense/sparse conditional dispatch every read front shares.
 
     c > 0 routes through the shortlisted kernel, c <= 0 through the dense
     one.  ``StreamRuntime.predict``, ``ScoringFrontend.predict`` and
     ``api.query.execute`` all call this one switch with their resolved
     width, so the tiers cannot drift apart in dispatch semantics — their
-    equivalence is structural, not merely test-enforced."""
+    equivalence is structural, not merely test-enforced.
+
+    cost_table (a ``stream.costmodel.CostTable`` / path / None) makes the
+    switch measured: when the table has dense AND sparse predict cells for
+    this device key, the measured-faster path wins (at small K the bound
+    pass + gather overhead can lose to the dense sweep).  With
+    ``cost_table=None`` — the default every pre-existing caller hits —
+    routing is byte-for-byte the historical ``c > 0`` rule."""
+    if c > 0 and cost_table is not None:
+        from repro.stream import costmodel   # lazy: stream imports core
+        d = costmodel.resolve_predict(
+            cfg, c=c, n=int(np.shape(xs_in)[0]), device=device,
+            cost_table=cost_table)
+        if d.path == "dense":
+            c = 0
     if c > 0:
         return predict_batch_sparse(cfg, state, xs_in, idx_out, c=c)
     return predict_batch(cfg, state, xs_in, idx_out)

@@ -262,12 +262,27 @@ class HloCost:
                 cost.traffic += self._fusion_traffic(comp, ins)
                 cost.elem_out += _shape_bytes(ins.shape)
             elif op in ("dynamic-slice", "gather"):
-                # reads only the slice it produces
-                cost.traffic += 2 * _shape_bytes(ins.shape)
+                # reads only the slice it produces (+ the index operands
+                # themselves — tiny for dynamic-slice scalars, but a
+                # gather's (B, C) index tensor is real sparse-path traffic)
+                idx_b = sum(_shape_bytes(self._operand_shape(comp, o))
+                            for o in ins.operands[1:])
+                cost.traffic += 2 * _shape_bytes(ins.shape) + idx_b
             elif op == "dynamic-update-slice":
                 upd = _shape_bytes(self._operand_shape(comp, ins.operands[1])) \
                     if len(ins.operands) > 1 else 0
                 cost.traffic += 2 * upd   # read update + in-place write
+            elif op == "scatter":
+                # in-place semantics (XLA aliases operand→result): the
+                # operand is NOT copied — traffic is read+write of the
+                # touched windows (the updates) plus the index reads.
+                # The old else-branch counted operand + result bytes,
+                # overstating a (K, D, D) sparse-path scatter by K/C.
+                upd = sum(_shape_bytes(self._operand_shape(comp, o))
+                          for o in ins.operands[2:])
+                idx_b = _shape_bytes(self._operand_shape(
+                    comp, ins.operands[1])) if len(ins.operands) > 1 else 0
+                cost.traffic += 2 * upd + idx_b
             else:
                 b = _shape_bytes(ins.shape)
                 for o in ins.operands:
@@ -277,11 +292,14 @@ class HloCost:
     def _fusion_traffic(self, comp: str, ins: Instr) -> float:
         """Traffic of one fusion: result bytes + per-operand true reads.
 
-        A fusion parameter consumed ONLY by dynamic-slice (the lax.scan
-        per-iteration slice pattern) reads just the slice; one consumed only
-        as a dynamic-update-slice destination (decode cache update) is
-        updated in place (write = update bytes).  Anything else reads the
-        full operand.
+        A fusion parameter consumed ONLY as the source of dynamic-slice /
+        gather (the lax.scan per-iteration slice and the shortlist's
+        top-C row gather) reads just the slices it yields; one consumed
+        only as the destination of dynamic-update-slice / scatter (decode
+        cache update, sparse Λ write-back) is updated in place (write =
+        update bytes).  Anything else reads the full operand — which is
+        exactly what a (K, D, D) pool gathered C rows at a time must NOT
+        be charged as.
         """
         total = float(_shape_bytes(ins.shape))
         callee = self._attr_comp(ins.tail, "calls")
@@ -300,7 +318,7 @@ class HloCost:
                 total += full
                 continue
             uses = [ci for ci in instrs if pname in ci.operands]
-            if uses and all(u.op == "dynamic-slice" and
+            if uses and all(u.op in ("dynamic-slice", "gather") and
                             u.operands and u.operands[0] == pname
                             for u in uses):
                 total += sum(_shape_bytes(u.shape) for u in uses)
@@ -310,6 +328,14 @@ class HloCost:
                 total += sum(
                     _shape_bytes(self._operand_shape(callee, u.operands[1]))
                     if len(u.operands) > 1 else 0 for u in uses)
+            elif uses and all(u.op == "scatter" and
+                              u.operands and u.operands[0] == pname
+                              for u in uses):
+                # scatter destination: in-place window updates (read+write
+                # of the update bytes), never a full-operand round trip
+                total += sum(
+                    2 * sum(_shape_bytes(self._operand_shape(callee, o))
+                            for o in u.operands[2:]) for u in uses)
             else:
                 total += full
         return total

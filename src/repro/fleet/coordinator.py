@@ -73,7 +73,7 @@ from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
 from repro.ft.straggler import StragglerConfig, StragglerMonitor
 from repro.obs import registry as obs_registry
 from repro.obs.trace import span
-from repro.stream import RuntimeConfig, StreamRuntime, ingest
+from repro.stream import RuntimeConfig, StreamRuntime, costmodel
 
 _log = logging.getLogger(__name__)
 
@@ -134,13 +134,19 @@ class FleetCoordinator:
         # serving mirrors the replicas' RESOLVED ingest path: a forced
         # dense RuntimeConfig.path must score densely too, or the fleet's
         # two read fronts (replica.score vs coordinator.score) would
-        # disagree — the sparse score is a strict lower bound
-        resolved = ingest.select_path(cfg, vmem_budget=rcfg.vmem_budget,
-                                      requested=rcfg.path)
+        # disagree — the sparse score is a strict lower bound.  The
+        # resolution is the same table-first/heuristic-fallback decision
+        # the replicas make (costmodel.decide is the non-recording twin:
+        # each replica already counted its own resolution).
+        resolved = costmodel.decide(
+            cfg, requested=rcfg.path, chunk=rcfg.chunk,
+            vmem_budget=rcfg.vmem_budget, device=rcfg.device,
+            cost_table=rcfg.cost_table).path
         self.scoring = ScoringFrontend(
             cfg, workers=fcfg.score_workers,
             shortlist_c=cfg.shortlist_c if resolved == "sparse" else 0,
-            registry=self._registry)
+            registry=self._registry,
+            cost_table=rcfg.cost_table, device=rcfg.device)
         self.telemetry = FleetTelemetry()
         self.autoscaler = (Autoscaler(fcfg.autoscale)
                            if fcfg.autoscale is not None else None)

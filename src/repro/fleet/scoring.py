@@ -60,12 +60,18 @@ class ScoringFrontend:
 
     def __init__(self, cfg: FIGMNConfig, workers: int = 2,
                  shortlist_c: Optional[int] = None,
-                 registry: Optional[obs_registry.Registry] = None):
+                 registry: Optional[obs_registry.Registry] = None,
+                 cost_table=None, device: Optional[str] = None):
         self.cfg = cfg
         # serving-side shortlist width: explicit override wins, else the
         # config's; 0 ⇒ dense scoring
         self.shortlist_c = int(cfg.shortlist_c if shortlist_c is None
                                else shortlist_c)
+        # measured predict routing (stream.costmodel): with a calibrated
+        # table the dense/sparse eq. 27 switch follows the measured winner
+        # per request size; None ⇒ the historical shortlist_c rule
+        self.cost_table = cost_table
+        self.device = device
         self._lock = threading.Lock()
         self._snapshot: Optional[FIGMNState] = None
         self._version = 0
@@ -144,7 +150,8 @@ class ScoringFrontend:
                     out = ingest.score_batch_jit(self.cfg, state, xs)
             else:
                 out = inference.predict_batch_routed(
-                    self.cfg, state, xs, targets, c=self.shortlist_c)
+                    self.cfg, state, xs, targets, c=self.shortlist_c,
+                    cost_table=self.cost_table, device=self.device)
             out.block_until_ready()   # latency must cover device compute
         self.latency.observe(time.perf_counter() - t_submit)
         if published_t is not None:

@@ -196,6 +196,15 @@ def lower_figmn(multi_pod: bool, dim: int = 256, kmax: int = 512
     record["global_batch"] = 1
     record["n_params"] = kmax * dim * dim
     record["n_active_params"] = kmax * dim * dim
+    # the paper cost model fields benchmarks/roofline.py derives
+    # model-FLOPs from (K over the mesh's "model" axis — the actual
+    # sharding divisor, not an axis-count guess)
+    record["k"] = kmax
+    record["d"] = dim
+    record["c"] = 0
+    record["points"] = n_stream
+    record["model_axis"] = int(
+        dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1))
     return record
 
 

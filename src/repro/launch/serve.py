@@ -33,7 +33,7 @@ from repro.models import transformer as tr
 from repro.obs import export as obs_export
 from repro.obs import trace as obs_trace
 from repro.serve.engine import Request, ServeEngine
-from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig
+from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig, costmodel
 
 
 def main() -> None:
@@ -60,6 +60,18 @@ def main() -> None:
                          "(0 = dense): both the ingest hot path and the "
                          "serving score() drop from O(K·D²) to "
                          "O(K·D + C·D²) per point, exact when C >= K")
+    ap.add_argument("--cost-table", default=None, metavar="PATH",
+                    help="device-calibrated dispatch cost table "
+                         "(benchmarks.figmn_dispatch / "
+                         "stream.costmodel.calibrate): the OOD monitor's "
+                         "ingest and eq. 27 predict paths route by "
+                         "measured cost instead of the static heuristic")
+    ap.add_argument("--explain-dispatch", action="store_true",
+                    help="print the dispatch decision report for the OOD "
+                         "monitor config (chosen path, heuristic "
+                         "counterfactual, backing calibration cell, "
+                         "roofline bottleneck) and how each candidate "
+                         "ranked")
     ap.add_argument("--metrics-port", type=int, default=None,
                     metavar="PORT",
                     help="serve Prometheus text exposition of the obs "
@@ -135,11 +147,18 @@ def main() -> None:
                        shortlist_c=max(args.score_shortlist, 0),
                        sigma_ini=figmn.sigma_from_data(
                            jnp.asarray(feats), 1.0))
+    cost_table = costmodel.CostTable.load(args.cost_table) \
+        if args.cost_table else None
+    chunk = max(args.requests // 4, 4)
+    if args.explain_dispatch:
+        print(costmodel.explain(gcfg, chunk=chunk,
+                                cost_table=cost_table))
     monitor = Mixture(MixtureSpec(
         model=gcfg,
         tier="autoscaled" if args.ood_autoscale else "fleet",
+        cost_table=cost_table,
         runtime=RuntimeConfig(
-            chunk=max(args.requests // 4, 4),
+            chunk=chunk,
             lifecycle=LifecycleConfig(k_budget=8, every=4),
             drift=DriftConfig(window=8, threshold=8.0,
                               response="inflate")),

@@ -18,6 +18,9 @@ snapshot staleness) and the ``api.Mixture`` entry points.
   export.py    Prometheus text exposition (+ HTTP server for scrapes),
                JSON metric dumps, and the shared ``to_json`` envelope
                (schema_version) every BENCH_*/telemetry file goes through
+  prof.py      profiling harness: compile-excluded donation-safe wall
+               timing, HLO-derived roofline terms, per-backend peak
+               anchors — feeds ``stream.costmodel``'s calibration
 
 The serving→autoscaler loop closes through here: ``ScoringFrontend``
 records request latency into a mergeable histogram, the coordinator diffs
@@ -25,7 +28,7 @@ its cumulative snapshots between consolidation boundaries, and
 ``fleet.autoscale`` treats the windowed p99/QPS as one more scale-up
 pressure term (see ``autoscale.ServingSignal``).
 """
-from repro.obs import export, metrics, registry, trace
+from repro.obs import export, metrics, prof, registry, trace
 from repro.obs.export import metrics_dict, prometheus_text, to_json
 from repro.obs.metrics import (Counter, Gauge, HistSnapshot, Histogram,
                                LATENCY_BOUNDS, log_bounds)
@@ -36,6 +39,6 @@ __all__ = [
     "Counter", "Gauge", "HistSnapshot", "Histogram", "LATENCY_BOUNDS",
     "Registry", "SpanRecord", "Tracer", "default_registry", "export",
     "get_tracer", "log_bounds", "metrics", "metrics_dict",
-    "prometheus_text", "registry", "set_default", "span", "to_json",
-    "trace",
+    "prof", "prometheus_text", "registry", "set_default", "span",
+    "to_json", "trace",
 ]

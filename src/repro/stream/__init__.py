@@ -5,6 +5,8 @@ package supplies everything around it that an unbounded, non-stationary
 production stream needs:
 
   ingest.py     micro-batch chunking + double-buffered H2D + path dispatch
+  costmodel.py  device-calibrated dispatch cost model (measured
+                select_path: CostTable + calibrate + decide/resolve)
   lifecycle.py  component-pool management under a fixed K budget
   drift.py      novelty-gate + log-likelihood-CUSUM drift detection
   telemetry.py  per-chunk metrics, feeding repro.ft.anomaly
@@ -17,6 +19,7 @@ Streaming Data", 2019): the per-point update stays the paper's fast rank-one
 algebra, while everything that changes the pool's SHAPE (spawn/prune/merge)
 runs off the hot path at a fixed cadence so jitted shapes stay static.
 """
+from repro.stream.costmodel import CostTable, DispatchDecision
 from repro.stream.drift import DriftConfig, DriftDetector
 from repro.stream.ingest import DoubleBufferedLoader, select_path
 from repro.stream.lifecycle import FailureBuffer, LifecycleConfig
@@ -24,7 +27,8 @@ from repro.stream.runtime import RuntimeConfig, StreamRuntime
 from repro.stream.telemetry import ChunkMetrics, Telemetry
 
 __all__ = [
-    "ChunkMetrics", "DoubleBufferedLoader", "DriftConfig", "DriftDetector",
+    "ChunkMetrics", "CostTable", "DispatchDecision",
+    "DoubleBufferedLoader", "DriftConfig", "DriftDetector",
     "FailureBuffer", "LifecycleConfig", "RuntimeConfig", "StreamRuntime",
     "Telemetry", "select_path",
 ]

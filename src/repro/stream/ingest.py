@@ -47,14 +47,23 @@ from repro.kernels import figmn_stream
 DEFAULT_VMEM_BUDGET = 12 * 2 ** 20
 
 
-def select_path(cfg: FIGMNConfig, *, vmem_budget: int = DEFAULT_VMEM_BUDGET,
-                requested: str = "auto") -> str:
+def select_path(cfg: FIGMNConfig, *,
+                vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET,
+                requested: str = "auto",
+                device: Optional[str] = None) -> str:
     """Choose the per-chunk dispatch path ("scan" | "vmem" | "sparse").
 
     requested: "scan"/"vmem"/"sparse" force a path; "auto" applies the
     heuristic.  A forced "sparse" requires cfg.shortlist_c > 0 (the width
     is a config property, not a runtime knob — jitted shapes depend on it).
+    device: explicit backend platform ("cpu"/"gpu"/"tpu") the decision is
+    for; None keys off the process default backend (the historical
+    behaviour).  This is the pure HEURISTIC; the measured, table-driven
+    resolution lives in ``stream.costmodel`` and falls back here
+    bit-compatibly when no calibration table exists.
     """
+    if vmem_budget is None:
+        vmem_budget = DEFAULT_VMEM_BUDGET
     if requested == "sparse" or (requested == "auto"
                                  and cfg.shortlist_c > 0):
         if cfg.shortlist_c <= 0:
@@ -66,9 +75,10 @@ def select_path(cfg: FIGMNConfig, *, vmem_budget: int = DEFAULT_VMEM_BUDGET,
     if requested != "auto":
         raise ValueError(f"unknown path {requested!r}")
     working_set = cfg.kmax * cfg.dim * cfg.dim * 4
+    backend = device if device else jax.default_backend()
     if (cfg.update_mode == "exact"
             and working_set <= vmem_budget
-            and jax.default_backend() == "tpu"):
+            and backend == "tpu"):
         return "vmem"
     return "scan"
 

@@ -28,6 +28,7 @@ from repro.core import figmn, inference, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState, chi2_quantile
 from repro.obs import registry as obs_registry
 from repro.obs.trace import span
+from repro.stream import costmodel
 from repro.stream import drift as drift_mod
 from repro.stream import ingest, lifecycle, telemetry
 from repro.ft.anomaly import AnomalyDetector
@@ -48,7 +49,21 @@ class RuntimeConfig:
     drift:            drift policy; None disables detection entirely.
     checkpoint_dir:   enables checkpoint/resume; None disables.
     checkpoint_every: chunks between periodic saves (0 ⇒ only final/fork).
-    vmem_budget:      bytes assumed available for the VMEM-resident kernel.
+    vmem_budget:      bytes assumed available for the VMEM-resident
+                      kernel; None (the default) resolves it from the
+                      device's own memory stats where the backend exposes
+                      a VMEM capacity, falling back to the 12 MiB
+                      constant (costmodel.resolve_vmem_budget).
+    device:           explicit backend platform ("cpu"/"gpu"/"tpu") the
+                      dispatch decision is for; None keys off the process
+                      default backend.  A checkpoint restored on
+                      different hardware re-resolves against the new
+                      device instead of replaying a stale decision.
+    cost_table:       a costmodel.CostTable (or a path to its JSON dump)
+                      of measured per-path costs; when present and it has
+                      cells for this device key, dispatch picks the
+                      measured-fastest path instead of the heuristic.
+                      None ⇒ the PR-6 heuristic, bit-compatibly.
     telemetry_anomaly: learn a FIGMN over the runtime's own telemetry
                       (ft.anomaly) and flag anomalous chunks.
     """
@@ -59,7 +74,9 @@ class RuntimeConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     keep_n: int = 3
-    vmem_budget: int = ingest.DEFAULT_VMEM_BUDGET
+    vmem_budget: Optional[int] = None
+    device: Optional[str] = None
+    cost_table: Optional[object] = None
     telemetry_anomaly: bool = False
     telemetry_capacity: int = 4096
 
@@ -88,10 +105,24 @@ class StreamRuntime:
         self._m_lifecycle_s = reg.histogram(
             "figmn_lifecycle_pass_seconds",
             "off-hot-path pool maintenance wall time")
+        self._m_pred_s = reg.gauge(
+            "figmn_dispatch_predicted_seconds",
+            "cost-table expected seconds for one chunk on the chosen path")
+        self._m_meas_s = reg.gauge(
+            "figmn_dispatch_measured_seconds",
+            "last observed per-chunk ingest seconds (pair with "
+            "figmn_dispatch_predicted_seconds)")
         self.state: FIGMNState = figmn.init_state(cfg)
         self.chunk_idx = 0
-        self.path = ingest.select_path(cfg, vmem_budget=rcfg.vmem_budget,
-                                       requested=rcfg.path)
+        # Table-first, heuristic-fallback dispatch (stream.costmodel):
+        # bit-compatible with ingest.select_path when rcfg.cost_table is
+        # None.  The decision object keeps the expected per-point seconds
+        # around for the predicted-vs-measured gauge pair.
+        self.dispatch = costmodel.resolve_path(
+            cfg, requested=rcfg.path, chunk=rcfg.chunk,
+            vmem_budget=rcfg.vmem_budget, device=rcfg.device,
+            cost_table=rcfg.cost_table, registry=reg)
+        self.path = self.dispatch.path
         self.buffer = lifecycle.FailureBuffer(
             rcfg.lifecycle.buffer_cap if rcfg.lifecycle else 0, cfg.dim)
         self.detector = (drift_mod.DriftDetector(rcfg.drift)
@@ -220,6 +251,11 @@ class StreamRuntime:
             drift_score=float(drift_score), drift_alarm=alarm,
             path=path, latency_s=latency))
         self._m_chunk_s.observe(latency)
+        self._m_meas_s.set(latency)
+        if self.dispatch.per_point_s is not None:
+            # predicted for THIS chunk size — a tail chunk is smaller
+            self._m_pred_s.set(self.dispatch.per_point_s
+                               * int(xc.shape[0]))
         self._m_points.inc(int(xc.shape[0]))
         self._m_active.set(active_k)
         if alarm:
@@ -340,7 +376,8 @@ class StreamRuntime:
         xs = jnp.asarray(xs, self.cfg.dtype)
         return inference.predict_batch_routed(
             self.cfg, self.state, xs, targets,
-            c=self.cfg.shortlist_c if self.path == "sparse" else 0)
+            c=self.cfg.shortlist_c if self.path == "sparse" else 0,
+            cost_table=self.rcfg.cost_table, device=self.rcfg.device)
 
     def _payload(self) -> Dict[str, object]:
         """Everything a resumed runtime needs to continue bit-identically:
