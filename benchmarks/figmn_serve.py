@@ -16,10 +16,23 @@ boundary where decisions happen).  Any scale-up is therefore attributable
 to the serving signal: the closed loop, recorded per phase as
 (requests, windowed p50/p99, qps, replicas-after-decision).
 
+Two serving-cost sections ride along (PR 8):
+
+* ``low_load`` — per-call p50/p99 of a sequential eq. 27 predict stream
+  against the SAME fleet built with the factor cache disabled vs enabled:
+  the ``factor_cache_step_change`` field is the uncached/cached p99 ratio,
+  i.e. the low-load latency step the per-epoch factor-bundle cache buys.
+* ``microbatch`` — admission-controlled micro-batching on: bursts of
+  async predicts at several rows-per-request sizes; the curve records
+  rows/s per size and the registry's coalesced-dispatch count shows how
+  many device launches actually happened.
+
 The committed smoke baseline (benchmarks/baselines/) gates CI
 (``--check``): a >2× regression of the LOW-concurrency phase's p99 (pure
 warm service latency, the stable quantity) fails the build, as does a
-smoke run whose ramp no longer triggers at least one serving scale-up.
+smoke run whose ramp no longer triggers at least one serving scale-up, a
+missing ``low_load.factor_cache_step_change`` field, or a >2× regression
+of the micro-batched predict throughput.
 
 Run:    PYTHONPATH=src python -m benchmarks.figmn_serve [--smoke]
 Gate:   PYTHONPATH=src python -m benchmarks.figmn_serve \
@@ -43,7 +56,8 @@ import numpy as np
 
 from repro.core import figmn
 from repro.core.types import FIGMNConfig
-from repro.fleet import AutoscaleConfig, FleetConfig, FleetCoordinator
+from repro.fleet import (AdmissionConfig, AutoscaleConfig, FleetConfig,
+                         FleetCoordinator)
 from repro.obs import export as obs_export
 from repro.obs import registry as obs_registry
 from repro.stream import LifecycleConfig, RuntimeConfig
@@ -56,13 +70,25 @@ SMOKE_BURSTS = (6, 16, 48, 96)
 P99_FACTOR = 4.0        # up_serve_p99 = factor x warm low-burst p99
 MAX_REPLICAS = 4
 WORKERS = 2
+PREDICT_REPS = 40       # sequential low-load predicts per cache setting
+PREDICT_REPS_SMOKE = 20
+# the low-load section runs at a size where the eq. 27 factor bundle
+# (per-component input-block inverse) actually costs something — at the
+# ramp scenario's D=8 the build is noise next to request dispatch — and
+# with the small per-request batches that characterise LOW load, so the
+# rebuild is the dominant per-request term rather than the kernel
+LOWLOAD_D, LOWLOAD_KMAX, LOWLOAD_ROWS = 64, 32, 8
+MB_SIZES = (1, 4, 16, 64)       # rows per request (microbatch curve)
+MB_SIZES_SMOKE = (1, 8, 32)
+MB_REQS = 24            # async requests per curve point
+MB_REQS_SMOKE = 12
 
 
-def _mk_data(seed: int = 0):
+def _mk_data(seed: int = 0, d: int = D):
     rng = np.random.default_rng(seed)
-    centers = rng.normal(0, 6.0, (4, D))
+    centers = rng.normal(0, 6.0, (4, d))
     def draw(n):
-        x = centers[rng.integers(0, 4, n)] + rng.normal(0, 1.0, (n, D))
+        x = centers[rng.integers(0, 4, n)] + rng.normal(0, 1.0, (n, d))
         return x.astype(np.float32)
     return draw
 
@@ -114,6 +140,98 @@ def _drive(fleet: FleetCoordinator, draw, bursts) -> List[Dict]:
     return rows
 
 
+def _plain_fleet(cfg: FIGMNConfig, registry: obs_registry.Registry,
+                 global_kmax: int = KMAX, **fleet_kw) -> FleetCoordinator:
+    return FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=1, router="round_robin",
+                    consolidate_every=1, global_kmax=global_kmax,
+                    score_workers=WORKERS, **fleet_kw),
+        RuntimeConfig(chunk=INGEST_N,
+                      lifecycle=LifecycleConfig(k_budget=K_BUDGET,
+                                                every=4)),
+        registry=registry)
+
+
+def _low_load_predict(reps: int) -> Dict:
+    """Sequential eq. 27 predicts against an idle fleet, factor cache off
+    vs on: the per-call p99 step change the per-epoch factor cache buys
+    (uncached rebuilds the eq. 27 bundle — the per-component input-block
+    inverse + logdet over all K — on every request; cached reuses it
+    until the next publish).  Runs at LOWLOAD_D/LOWLOAD_KMAX where the
+    bundle build is a real fraction of the request."""
+    draw = _mk_data(seed=1, d=LOWLOAD_D)
+    sample = draw(1024)
+    cfg = FIGMNConfig(kmax=LOWLOAD_KMAX, dim=LOWLOAD_D, beta=0.1,
+                      delta=1.0, vmin=50.0, spmin=1.0,
+                      update_mode="exact",
+                      sigma_ini=figmn.sigma_from_data(
+                          jnp.asarray(sample), 1.0))
+    targets = [LOWLOAD_D - 1]
+    out: Dict = {"dim": LOWLOAD_D, "kmax": LOWLOAD_KMAX,
+                 "rows_per_request": LOWLOAD_ROWS}
+    for label, cache_size in (("uncached", 0), ("cached", 16)):
+        fleet = _plain_fleet(cfg, obs_registry.Registry(),
+                             global_kmax=LOWLOAD_KMAX,
+                             factor_cache_size=cache_size)
+        fleet.ingest(draw(INGEST_N))
+        xin = draw(LOWLOAD_ROWS)[:, : LOWLOAD_D - 1]
+        for _ in range(3):                 # compile + prime the cache
+            fleet.predict(xin, targets)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fleet.predict(xin, targets)
+            ts.append(time.perf_counter() - t0)
+        fleet.close()
+        ts.sort()
+        out[label] = {
+            "p50_ms": ts[len(ts) // 2] * 1e3,
+            "p99_ms": ts[max(0, int(len(ts) * 0.99) - 1)] * 1e3,
+        }
+    out["factor_cache_step_change"] = (
+        out["uncached"]["p99_ms"] / max(out["cached"]["p99_ms"], 1e-9))
+    return out
+
+
+def _microbatch_curve(cfg: FIGMNConfig, draw, sizes, n_reqs: int) -> Dict:
+    """Async predict bursts through the admission micro-batcher at several
+    request sizes: rows/s per size, plus how many device dispatches the
+    coalescing actually issued for the whole sweep."""
+    targets = [D - 1]
+    reg = obs_registry.Registry()
+    fleet = _plain_fleet(cfg, reg,
+                         admission=AdmissionConfig(max_batch=64,
+                                                   max_delay_s=2e-3))
+    fleet.ingest(draw(INGEST_N))
+    # warm the jit shapes most likely under coalescing: the solo request
+    # and the full-burst concatenation for each size
+    for r in sizes:
+        fleet.predict(draw(r)[:, : D - 1], targets)
+        fleet.predict(draw(r * n_reqs)[:, : D - 1], targets)
+    curve = []
+    rows_total, wall_total = 0, 0.0
+    for r in sizes:
+        xs = draw(r * n_reqs)[:, : D - 1]
+        t0 = time.perf_counter()
+        futs = [fleet.predict_async(xs[i * r:(i + 1) * r], targets)
+                for i in range(n_reqs)]
+        for f in futs:
+            f.result()
+        wall = time.perf_counter() - t0
+        rows_total += r * n_reqs
+        wall_total += wall
+        curve.append({"rows_per_request": r, "requests": n_reqs,
+                      "rows_per_s": r * n_reqs / wall})
+    dispatches = int(
+        reg.histogram("figmn_serve_coalesced_requests").count)
+    fleet.close()
+    return {"curve": curve,
+            "rows_per_s_total": rows_total / max(wall_total, 1e-12),
+            "requests_submitted": n_reqs * len(sizes),
+            "coalesced_dispatches": dispatches}
+
+
 def run(out_path: str = "BENCH_serve.json", quick: bool = False) -> Dict:
     draw = _mk_data()
     bursts = SMOKE_BURSTS if quick else BURSTS
@@ -151,6 +269,13 @@ def run(out_path: str = "BENCH_serve.json", quick: bool = False) -> Dict:
     lat = fleet.scoring.latency.snapshot()
     fleet.close()
 
+    low_load = _low_load_predict(
+        PREDICT_REPS_SMOKE if quick else PREDICT_REPS)
+    microbatch = _microbatch_curve(
+        cfg, draw,
+        MB_SIZES_SMOKE if quick else MB_SIZES,
+        MB_REQS_SMOKE if quick else MB_REQS)
+
     curve = " -> ".join(str(r["replicas_after"]) for r in phase_rows)
     serving_ups = sum(1 for e in events
                       if e["action"] == "up" and "serving" in e["reason"])
@@ -169,19 +294,30 @@ def run(out_path: str = "BENCH_serve.json", quick: bool = False) -> Dict:
            "serving_scale_ups": serving_ups,
            "replicas_final": int(summary["replicas"]),
            "phases": phase_rows,
+           "low_load": low_load,
+           "microbatch": microbatch,
            "scale_events": events}
     obs_export.to_json(out_path, doc)
     print(f"wrote {out_path} (warm p99 {t_svc * 1e3:.1f}ms, threshold "
           f"{p99_thresh * 1e3:.1f}ms, replicas/phase {curve}, "
           f"{serving_ups} serving-triggered scale-up(s))")
+    print(f"low-load eq27 predict p99: "
+          f"{low_load['uncached']['p99_ms']:.2f}ms uncached -> "
+          f"{low_load['cached']['p99_ms']:.2f}ms cached "
+          f"({low_load['factor_cache_step_change']:.2f}x step)")
+    print(f"microbatch: {microbatch['requests_submitted']} requests -> "
+          f"{microbatch['coalesced_dispatches']} dispatches, "
+          f"{microbatch['rows_per_s_total']:.0f} rows/s overall")
     return doc
 
 
 def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
     """CI gate: the low-concurrency phase's p99 (warm service latency) may
     not regress more than ``factor``× against the committed smoke
-    baseline, and the ramp must still close the loop (≥1 serving-
-    triggered scale-up)."""
+    baseline, the ramp must still close the loop (≥1 serving-triggered
+    scale-up), the low-load factor-cache step-change field must be
+    present, and the micro-batched predict throughput may not regress
+    more than ``factor``× against the baseline."""
     with open(bench_path) as f:
         bench = json.load(f)
     with open(baseline_path) as f:
@@ -197,7 +333,26 @@ def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
     print(f"closed loop: {bench.get('serving_scale_ups', 0)} "
           f"serving-triggered scale-up(s) — "
           f"{'OK' if ok_loop else 'LOOP BROKEN'}")
-    return ok_lat and ok_loop
+    low = bench.get("low_load") or {}
+    ok_step = "factor_cache_step_change" in low
+    if ok_step:
+        print(f"factor-cache step change: "
+              f"{float(low['factor_cache_step_change']):.2f}x "
+              f"(uncached p99 {float(low['uncached']['p99_ms']):.2f}ms / "
+              f"cached p99 {float(low['cached']['p99_ms']):.2f}ms) — OK")
+    else:
+        print("factor-cache step change: MISSING low_load."
+              "factor_cache_step_change — serving-cost section not run")
+    mb_got = float(bench.get("microbatch", {})
+                   .get("rows_per_s_total", 0.0))
+    mb_ref = float(base.get("microbatch", {})
+                   .get("rows_per_s_total", 0.0))
+    ok_mb = mb_got * factor >= mb_ref
+    print(f"microbatched predict throughput: {mb_got:.0f} rows/s vs "
+          f"committed baseline {mb_ref:.0f} rows/s "
+          f"(floor {mb_ref / factor:.0f}) — "
+          f"{'OK' if ok_mb else 'REGRESSION'}")
+    return ok_lat and ok_loop and ok_step and ok_mb
 
 
 def main(smoke: bool = False) -> None:

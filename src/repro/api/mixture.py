@@ -128,10 +128,15 @@ class Mixture:
         with span("api.score_samples", tier=self.spec.tier):
             return self.engine.score(xs)
 
-    def predict(self, xs, targets) -> Array:
-        """(N, o) eq. 27 conditional means of ``targets`` given the rest."""
+    def predict(self, xs, targets, return_var: bool = False):
+        """(N, o) eq. 27 conditional means of ``targets`` given the rest.
+
+        return_var=True also returns the (N, o) conditional variance (law
+        of total variance over the posterior mixture — one extra Schur
+        term on the factors the engine already caches per epoch) as a
+        (mean, var) pair."""
         with span("api.predict", tier=self.spec.tier):
-            return self.engine.predict(xs, targets)
+            return self.engine.predict(xs, targets, return_var=return_var)
 
     def predict_proba(self, xs, targets) -> Array:
         """(N, o) label-block reconstruction renormalised to a
@@ -150,7 +155,7 @@ class Mixture:
         if q.kind == "density":
             return self.score_samples(xs)
         if q.kind == "conditional":
-            return self.predict(xs, q.targets)
+            return self.predict(xs, q.targets, return_var=q.return_var)
         if q.kind == "label":
             return self.predict_proba(xs, q.targets)
         return self.sample(q.n, q.seed)

@@ -37,16 +37,21 @@ KINDS = ("density", "conditional", "label", "sample")
 class Query:
     """One declarative read against a mixture.
 
-    kind:     "density" | "conditional" | "label" | "sample".
-    targets:  dimension indices to reconstruct (conditional / label kinds);
-              inputs then carry the REMAINING dims in index order.
-    n:        number of draws (sample kind).
-    seed:     PRNG seed (sample kind).
+    kind:       "density" | "conditional" | "label" | "sample".
+    targets:    dimension indices to reconstruct (conditional / label
+                kinds); inputs then carry the REMAINING dims in index
+                order.
+    n:          number of draws (sample kind).
+    seed:       PRNG seed (sample kind).
+    return_var: conditional kind only — also return the (N, o) conditional
+                variance (one extra Schur term on the same factors); the
+                result becomes a (mean, var) pair.
     """
     kind: str
     targets: Optional[Tuple[int, ...]] = None
     n: int = 1
     seed: int = 0
+    return_var: bool = False
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -54,6 +59,11 @@ class Query:
                              f"expected one of {KINDS}")
         if self.kind in ("conditional", "label") and self.targets is None:
             raise ValueError(f"{self.kind!r} queries need targets")
+        if self.return_var and self.kind != "conditional":
+            raise ValueError("return_var is a conditional-query option "
+                             f"(got kind {self.kind!r}): variance is the "
+                             "second moment of the eq. 27 posterior "
+                             "mixture, undefined for the other kinds")
 
 
 def execute(cfg: FIGMNConfig, state: FIGMNState, query: Query,
@@ -77,7 +87,8 @@ def execute(cfg: FIGMNConfig, state: FIGMNState, query: Query,
                                                 c=shortlist_c)
         return figmn.score_batch(cfg, state, xs)
     rec = inference.predict_batch_routed(cfg, state, xs, query.targets,
-                                         c=shortlist_c)
+                                         c=shortlist_c,
+                                         return_var=query.return_var)
     if query.kind == "conditional":
         return rec
     return to_proba(rec)
@@ -94,9 +105,23 @@ def to_proba(rec: Array) -> Array:
     return rec / jnp.sum(rec, axis=-1, keepdims=True)
 
 
+# Trace log for the bucketed sample kernel: one entry per (n_pad, shapes)
+# retrace.  ``n`` is a static jit arg, so without bucketing EVERY distinct
+# draw count recompiled the kernel — a batched sample stream with varying
+# counts would pay compilation per request.  Tests pin that two nearby
+# counts in one power-of-two bucket append exactly one entry here.
+_SAMPLE_TRACES: list = []
+
+
+def _sample_bucket(n: int) -> int:
+    """Round a draw count up to its power-of-two compilation bucket."""
+    return max(1, 1 << (int(n) - 1).bit_length())
+
+
 @partial(jax.jit, static_argnames=("n",))
 def _sample_jit(cfg: FIGMNConfig, state: FIGMNState, n: int,
                 seed: Array) -> Array:
+    _SAMPLE_TRACES.append(n)    # traced (not executed) code: runs per compile
     key_c, key_z = jax.random.split(jax.random.PRNGKey(seed))
     logw = jnp.where(state.active,
                      jnp.log(jnp.maximum(state.sp, 1e-30)), -jnp.inf)
@@ -119,6 +144,17 @@ def sample(cfg: FIGMNConfig, state: FIGMNState, n: int,
     Requires PSD precisions — guaranteed in "exact" update mode; the
     printed eq. 11 ("paper" mode) can leave non-PSD components in extreme
     regimes (see FIGMNConfig), which would surface here as NaN rows.
+
+    Compilation cost is bucketed: the kernel draws the next power of two
+    and the result is sliced host-side, so a stream of varying draw counts
+    compiles O(log n_max) kernels instead of one per distinct count.  For
+    a fixed seed the first n draws are identical across counts sharing a
+    bucket (same key split, same (n_pad, D) normal tensor, prefix slice).
     """
     inference.require_nonempty(state)
-    return _sample_jit(cfg, state, int(n), jnp.asarray(int(seed)))
+    n = int(n)
+    if n <= 0:
+        return jnp.zeros((0, cfg.dim), cfg.dtype)
+    out = _sample_jit(cfg, state, _sample_bucket(n),
+                      jnp.asarray(int(seed)))
+    return out[:n]

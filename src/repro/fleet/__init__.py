@@ -34,12 +34,13 @@ from repro.fleet.autoscale import (Autoscaler, AutoscaleConfig,
 from repro.fleet.consolidate import consolidate, drain, merge_down, sp_mass
 from repro.fleet.coordinator import FleetConfig, FleetCoordinator
 from repro.fleet.router import RouterConfig, ShardRouter
-from repro.fleet.scoring import ScoringFrontend
+from repro.fleet.scoring import AdmissionConfig, ScoringFrontend
 from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
                                    ScaleEvent)
 
 __all__ = [
-    "Autoscaler", "AutoscaleConfig", "ConsolidationEvent", "FleetConfig",
+    "AdmissionConfig", "Autoscaler", "AutoscaleConfig",
+    "ConsolidationEvent", "FleetConfig",
     "FleetCoordinator", "FleetTelemetry", "ReplicaSignal", "RouterConfig",
     "ScaleDecision", "ScaleEvent", "ScoringFrontend", "ShardRouter",
     "consolidate", "drain", "merge_down", "split_state", "sp_mass",

@@ -67,7 +67,7 @@ from repro.fleet.consolidate import consolidate as _consolidate
 from repro.fleet.consolidate import drain as _drain
 from repro.fleet.consolidate import sp_mass
 from repro.fleet.router import RouterConfig, ShardRouter
-from repro.fleet.scoring import ScoringFrontend
+from repro.fleet.scoring import AdmissionConfig, ScoringFrontend
 from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
                                    ScaleEvent)
 from repro.ft.straggler import StragglerConfig, StragglerMonitor
@@ -100,6 +100,13 @@ class FleetConfig:
                        boundaries.
     checkpoint_dir:    fleet manifest + per-replica checkpoint root.
     score_workers:     ScoringFrontend worker threads.
+    admission:         None ⇒ every async read is its own device dispatch;
+                       an AdmissionConfig micro-batches compatible queued
+                       reads (same kind/targets/return_var) into one
+                       dispatch under its max-delay + max-batch policy.
+    factor_cache_size: LRU capacity of the serving eq. 27 factor cache
+                       (entries are (snapshot version, targets) bundles;
+                       <= 0 disables caching — bit-identical either way).
     """
     n_replicas: int = 2
     router: str = "round_robin"
@@ -110,6 +117,8 @@ class FleetConfig:
     checkpoint_dir: Optional[str] = None
     score_workers: int = 2
     router_seed: int = 0
+    admission: Optional[AdmissionConfig] = None
+    factor_cache_size: int = 16
 
 
 class FleetCoordinator:
@@ -146,7 +155,9 @@ class FleetCoordinator:
             cfg, workers=fcfg.score_workers,
             shortlist_c=cfg.shortlist_c if resolved == "sparse" else 0,
             registry=self._registry,
-            cost_table=rcfg.cost_table, device=rcfg.device)
+            cost_table=rcfg.cost_table, device=rcfg.device,
+            admission=fcfg.admission,
+            factor_cache_size=fcfg.factor_cache_size)
         self.telemetry = FleetTelemetry()
         self.autoscaler = (Autoscaler(fcfg.autoscale)
                            if fcfg.autoscale is not None else None)
@@ -300,19 +311,24 @@ class FleetCoordinator:
             self.consolidate()
         return self.scoring.score_async(xs)
 
-    def predict(self, xs, targets) -> Array:
+    def predict(self, xs, targets, return_var: bool = False):
         """Serving conditional read (eq. 27): (N, o) reconstructions of
         ``targets`` under the published snapshot (consolidates first if
-        nothing was published yet) — same snapshot contract as score."""
+        nothing was published yet) — same snapshot contract as score.
+        return_var=True returns a (mean, var) pair (conditional
+        variance off the same cached factors)."""
         if not self.scoring.ready:
             self.consolidate()
-        return self.scoring.predict(xs, targets)
+        return self.scoring.predict(xs, targets, return_var=return_var)
 
-    def predict_async(self, xs, targets):
-        """Non-blocking conditional read; Future of predict(xs, targets)."""
+    def predict_async(self, xs, targets, return_var: bool = False):
+        """Non-blocking conditional read; Future of predict(xs, targets).
+        With FleetConfig.admission set, compatible queued reads coalesce
+        into one device dispatch."""
         if not self.scoring.ready:
             self.consolidate()
-        return self.scoring.predict_async(xs, targets)
+        return self.scoring.predict_async(xs, targets,
+                                          return_var=return_var)
 
     # ------------------------------------------------------------------
     # autoscaling

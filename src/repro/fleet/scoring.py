@@ -20,6 +20,26 @@ future: the serving front door queues scores while the coordinator is mid
 ingest (XLA releases the GIL during device compute, so worker-thread
 scoring genuinely overlaps host-side routing/lifecycle work).
 
+Serving COST (ROADMAP item 4's amortisation layer):
+
+* The eq. 27 factor stage (W⁻¹Z solve, Schur complement, marginal logdet)
+  depends only on (snapshot, targets) — so the frontend keys an
+  ``inference.FactorCache`` on (snapshot version, targets signature) and
+  every predict against one published snapshot pays factor construction
+  once.  The (state, version) pair is captured atomically under the swap
+  lock, so a cached bundle can never serve a newer snapshot; results are
+  bit-identical to the uncached kernel by construction (same bundle into
+  the same jitted batch kernel).
+* With an ``AdmissionConfig``, async requests flow through a micro-batcher
+  (the slot/queue pattern of ``serve.engine``): compatible queued requests
+  — same kind, same targets signature, same return_var — coalesce into ONE
+  device dispatch under a max-delay + max-batch policy.  Each request's
+  latency is still observed from its OWN submit stamp (queue wait + delay
+  + batched compute), so the histogram contract the autoscaler consumes is
+  unchanged.  Queue depth and coalesced batch size export through the obs
+  registry; a full queue rejects at submission (admission control, not
+  silent unbounded buffering).
+
 Scoring cost: the dense read is one (B, K) Mahalanobis sweep over the full
 (K, D, D) snapshot — O(B·K·D²).  With a shortlist width C (cfg.shortlist_c
 or the ``shortlist_c`` constructor override) the read runs
@@ -29,10 +49,12 @@ sparse ingest path.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -44,6 +66,162 @@ from repro.obs.trace import span
 from repro.stream import ingest
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Micro-batching admission policy for the async read path.
+
+    A request dispatches when its compatibility queue reaches ``max_batch``
+    requests OR its oldest entry has waited ``max_delay_s`` — the classic
+    latency/throughput knob pair.  ``queue_cap`` bounds TOTAL queued
+    requests across all compatibility classes; past it, submission raises
+    instead of buffering without bound (reject at the door, the admission
+    half of admission control)."""
+    max_batch: int = 64
+    max_delay_s: float = 2e-3
+    queue_cap: int = 1024
+
+
+class _Pending(NamedTuple):
+    xs: Array          # (n, ·) already dtype-normalised
+    n: int
+    future: "Future"
+    t_submit: float    # perf_counter at caller submission (latency stamp)
+    t_enq: float       # monotonic at enqueue (max-delay clock)
+
+
+class _MicroBatcher:
+    """Coalesces compatible async reads into single device dispatches.
+
+    One daemon thread owns the flush loop (the revival of
+    ``serve.engine``'s slot/queue pattern on the mixture read path):
+    requests land in per-compatibility-class deques — key = (kind, targets
+    signature, return_var); the frontend's shortlist width is fixed per
+    instance so it needs no key slot — and a class flushes when full
+    (``max_batch`` requests) or aged (``max_delay_s`` since its oldest
+    entry).  The flush concatenates the member batches, runs ONE
+    ``_execute`` against the current snapshot, splits the rows back out,
+    and resolves each future; per-request latency is observed from each
+    request's own submit stamp, so queue wait + coalescing delay stay
+    inside the histogram the autoscaler watches."""
+
+    def __init__(self, frontend: "ScoringFrontend", acfg: AdmissionConfig,
+                 reg) -> None:
+        self._fe = frontend
+        self.acfg = acfg
+        self._cv = threading.Condition()
+        self._queues: "Dict[tuple, deque]" = {}
+        self._depth = 0
+        self._closed = False
+        self._m_depth = reg.gauge(
+            "figmn_serve_queue_depth",
+            "requests waiting in the micro-batch admission queue")
+        self._m_batch_reqs = reg.histogram(
+            "figmn_serve_coalesced_requests",
+            "requests coalesced into one device dispatch",
+            bounds=obs_metrics.log_bounds(1.0, 4096.0))
+        self._m_batch_rows = reg.histogram(
+            "figmn_serve_coalesced_rows",
+            "points per coalesced device dispatch",
+            bounds=obs_metrics.log_bounds(1.0, 1_048_576.0))
+        self._m_rejected = reg.counter(
+            "figmn_serve_admission_rejected_total",
+            "requests rejected by the admission queue cap")
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="fleet-microbatch")
+        self._thread.start()
+
+    @property
+    def depth(self) -> int:
+        with self._cv:
+            return self._depth
+
+    def submit(self, kind: str, xs, targets, return_var: bool,
+               t_submit: float) -> "Future":
+        fe = self._fe
+        xs = jnp.asarray(xs, fe.cfg.dtype)
+        sig = inference._as_targets(targets) if kind == "predict" else None
+        fut: "Future" = Future()
+        n = int(xs.shape[0])
+        if n == 0:
+            # B=0 contract: no device dispatch, nothing to coalesce — run
+            # the (dispatch-free) execute inline and resolve immediately.
+            out, published_t = fe._execute(kind, xs, targets, return_var)
+            fe._finish(kind, 0, t_submit, published_t)
+            fut.set_result(out)
+            return fut
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("micro-batcher is closed")
+            if self._depth >= self.acfg.queue_cap:
+                self._m_rejected.inc()
+                raise RuntimeError(
+                    f"admission queue full ({self.acfg.queue_cap} requests "
+                    "waiting): request rejected — retry with backoff or "
+                    "raise AdmissionConfig.queue_cap")
+            key = (kind, sig, bool(return_var))
+            self._queues.setdefault(key, deque()).append(
+                _Pending(xs, n, fut, t_submit, time.monotonic()))
+            self._depth += 1
+            self._m_depth.set(self._depth)
+            self._cv.notify()
+        return fut
+
+    def _loop(self) -> None:
+        acfg = self.acfg
+        while True:
+            with self._cv:
+                while not self._closed and self._depth == 0:
+                    self._cv.wait()
+                if self._depth == 0:       # closed and drained
+                    return
+                # oldest head across classes decides what flushes next
+                key = min(self._queues, key=lambda k:
+                          self._queues[k][0].t_enq)
+                dq = self._queues[key]
+                wait = acfg.max_delay_s - (time.monotonic() - dq[0].t_enq)
+                if (len(dq) < acfg.max_batch and wait > 0
+                        and not self._closed):
+                    self._cv.wait(timeout=wait)
+                    continue
+                batch = [dq.popleft()
+                         for _ in range(min(len(dq), acfg.max_batch))]
+                if not dq:
+                    del self._queues[key]
+                self._depth -= len(batch)
+                self._m_depth.set(self._depth)
+            self._flush(key, batch)
+
+    def _flush(self, key: tuple, batch: "List[_Pending]") -> None:
+        kind, sig, return_var = key
+        fe = self._fe
+        xs = (batch[0].xs if len(batch) == 1
+              else jnp.concatenate([p.xs for p in batch], axis=0))
+        self._m_batch_reqs.observe(len(batch))
+        self._m_batch_rows.observe(int(xs.shape[0]))
+        try:
+            out, published_t = fe._execute(kind, xs, sig, return_var)
+        except Exception as e:                   # pragma: no cover - defensive
+            for p in batch:
+                p.future.set_exception(e)
+            return
+        off = 0
+        for p in batch:
+            if return_var:
+                res = (out[0][off:off + p.n], out[1][off:off + p.n])
+            else:
+                res = out[off:off + p.n]
+            off += p.n
+            fe._finish(kind, p.n, p.t_submit, published_t)
+            p.future.set_result(res)
+
+    def close(self) -> None:
+        """Drain: flush everything queued, then stop the thread."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join()
+
+
 class ScoringFrontend:
     """Read-only mixture scores from the last published snapshot.
 
@@ -52,16 +230,19 @@ class ScoringFrontend:
     fixed-log-bucket histogram whose cumulative snapshots the coordinator
     diffs between consolidation boundaries to hand the autoscaler a
     *windowed* p99/QPS (``autoscale.ServingSignal``).  Async requests time
-    submit→completion, so queue wait under an overloaded worker pool is
-    part of the measured latency — exactly the signal an operator (or the
-    autoscaler) pages on.  ``staleness`` records the age of the serving
-    snapshot at read time: how far behind the live stream each answer is.
+    submit→completion, so queue wait under an overloaded worker pool (and,
+    with admission control, micro-batch coalescing delay) is part of the
+    measured latency — exactly the signal an operator (or the autoscaler)
+    pages on.  ``staleness`` records the age of the serving snapshot at
+    read time: how far behind the live stream each answer is.
     """
 
     def __init__(self, cfg: FIGMNConfig, workers: int = 2,
                  shortlist_c: Optional[int] = None,
                  registry: Optional[obs_registry.Registry] = None,
-                 cost_table=None, device: Optional[str] = None):
+                 cost_table=None, device: Optional[str] = None,
+                 admission: Optional[AdmissionConfig] = None,
+                 factor_cache_size: int = 16):
         self.cfg = cfg
         # serving-side shortlist width: explicit override wins, else the
         # config's; 0 ⇒ dense scoring
@@ -80,6 +261,10 @@ class ScoringFrontend:
                                         thread_name_prefix="fleet-score")
         self.served = 0
         reg = registry or obs_registry.default_registry()
+        # per-(version, targets) eq. 27 factor amortisation — invalidation
+        # rides the version bump inside publish's atomic swap
+        self.factor_cache = inference.FactorCache(factor_cache_size,
+                                                  registry=reg)
         self.latency = reg.histogram(
             "figmn_serve_latency_seconds",
             "request latency, submit to completion (queue wait included)")
@@ -94,6 +279,9 @@ class ScoringFrontend:
             for kind in ("score", "predict")}
         self._m_points = reg.counter(
             "figmn_serve_points_total", "points scored/predicted")
+        self.batcher: Optional[_MicroBatcher] = (
+            _MicroBatcher(self, admission, reg)
+            if admission is not None else None)
 
     @property
     def requests_total(self) -> int:
@@ -105,7 +293,12 @@ class ScoringFrontend:
 
     def publish(self, state: FIGMNState, version: Optional[int] = None
                 ) -> int:
-        """Swap in a new snapshot; returns its version number."""
+        """Swap in a new snapshot; returns its version number.
+
+        The version bump IS the factor-cache invalidation: reads key the
+        eq. 27 ``FactorCache`` on the version captured with the state
+        under this same lock, so requests against the new snapshot miss
+        onto fresh factors and stale bundles age out of the LRU."""
         with self._lock:
             self._version = self._version + 1 if version is None \
                 else int(version)
@@ -128,22 +321,26 @@ class ScoringFrontend:
 
     # -- reads (serving side) ------------------------------------------
 
-    def _serve(self, kind: str, xs, targets, t_submit: float) -> Array:
-        """One timed read.  ``t_submit`` is the caller-side submit stamp:
-        for sync reads it equals entry time (pure service latency); for
-        async reads it was taken at ``submit``, so the measured latency
-        INCLUDES the time the request queued behind the worker pool —
-        the component that actually blows up under overload."""
-        with span(f"serve.{kind}", n=int(jnp.shape(xs)[0])):
-            with self._lock:
-                state = self._snapshot
-                published_t = self._published_t
-            if state is None:
-                raise RuntimeError(
-                    "no consolidated snapshot published yet")
-            xs = jnp.asarray(xs, self.cfg.dtype)
+    def _execute(self, kind: str, xs, targets, return_var: bool = False):
+        """One device dispatch against an atomically-captured snapshot.
+
+        Returns (out, published_t).  The (state, version) pair is read
+        under the swap lock so the factor cache can never pair a cached
+        bundle with a different snapshot's state.  B=0 returns well-formed
+        (0, ·) outputs with NO device dispatch — the one empty-batch
+        contract every frontend shares (see inference._empty_result)."""
+        with self._lock:
+            state = self._snapshot
+            version = self._version
+            published_t = self._published_t
+        if state is None:
+            raise RuntimeError("no consolidated snapshot published yet")
+        xs = jnp.asarray(xs, self.cfg.dtype)
+        with span(f"serve.{kind}", n=int(xs.shape[0])):
             if kind == "score":
-                if self.shortlist_c > 0:
+                if xs.shape[0] == 0:
+                    out = jnp.zeros((0,), self.cfg.dtype)
+                elif self.shortlist_c > 0:
                     out = shortlist.score_batch_sparse(
                         self.cfg, state, xs, c=self.shortlist_c)
                 else:
@@ -151,15 +348,35 @@ class ScoringFrontend:
             else:
                 out = inference.predict_batch_routed(
                     self.cfg, state, xs, targets, c=self.shortlist_c,
-                    cost_table=self.cost_table, device=self.device)
-            out.block_until_ready()   # latency must cover device compute
+                    cost_table=self.cost_table, device=self.device,
+                    return_var=return_var,
+                    factor_cache=self.factor_cache, epoch=version)
+            lead = out[0] if isinstance(out, tuple) else out
+            if lead.shape[0]:
+                lead.block_until_ready()   # latency must cover compute
+        return out, published_t
+
+    def _finish(self, kind: str, n: int, t_submit: float,
+                published_t: Optional[float]) -> None:
+        """Per-request accounting.  ``t_submit`` is the caller-side submit
+        stamp: for sync reads it equals entry time (pure service latency);
+        for async reads it was taken at ``submit``, so the measured
+        latency INCLUDES queue wait (worker pool or micro-batch) — the
+        component that actually blows up under overload."""
         self.latency.observe(time.perf_counter() - t_submit)
         if published_t is not None:
             self.staleness.observe(time.monotonic() - published_t)
         self._m_requests[kind].inc()
-        self._m_points.inc(int(out.shape[0]))
+        self._m_points.inc(n)
         with self._lock:        # += races across pool threads otherwise
-            self.served += int(out.shape[0])
+            self.served += n
+
+    def _serve(self, kind: str, xs, targets, t_submit: float,
+               return_var: bool = False):
+        """One timed read: execute + accounting."""
+        out, published_t = self._execute(kind, xs, targets, return_var)
+        lead = out[0] if isinstance(out, tuple) else out
+        self._finish(kind, int(lead.shape[0]), t_submit, published_t)
         return out
 
     def score(self, xs) -> Array:
@@ -168,11 +385,15 @@ class ScoringFrontend:
 
     def score_async(self, xs) -> "Future[Array]":
         """Queue a score; the returned future resolves off the caller's
-        thread, against whichever snapshot is current when it runs."""
-        return self._pool.submit(self._serve, "score", xs, None,
-                                 time.perf_counter())
+        thread, against whichever snapshot is current when it runs.  With
+        admission control configured, compatible queued scores coalesce
+        into one device dispatch."""
+        t = time.perf_counter()
+        if self.batcher is not None:
+            return self.batcher.submit("score", xs, None, False, t)
+        return self._pool.submit(self._serve, "score", xs, None, t)
 
-    def predict(self, xs, targets) -> Array:
+    def predict(self, xs, targets, return_var: bool = False):
         """(N, o) eq. 27 conditional means under the current snapshot.
 
         Same serving contract as ``score``: snapshot-atomic (the state is
@@ -180,16 +401,29 @@ class ScoringFrontend:
         tear the read), never blocks or mutates ingesting replicas, and
         honours the frontend's resolved read path — a shortlist width C
         serves the conditional sublinearly (O(K·D + C·D²·o) per point,
-        bit-identical to dense at C ≥ active K)."""
-        return self._serve("predict", xs, targets, time.perf_counter())
+        bit-identical to dense at C ≥ active K).  The factor stage is
+        amortised per (snapshot version, targets) through the frontend's
+        ``FactorCache`` — bit-identically.  return_var=True additionally
+        returns the (N, o) conditional variance as a (mean, var) pair."""
+        return self._serve("predict", xs, targets, time.perf_counter(),
+                           return_var)
 
-    def predict_async(self, xs, targets) -> "Future[Array]":
+    def predict_async(self, xs, targets, return_var: bool = False
+                      ) -> "Future":
         """Queue a conditional read; resolves off the caller's thread
         against whichever snapshot is current when it runs — the serving
         front door keeps answering eq. 27 while the coordinator is mid
-        ingest."""
-        return self._pool.submit(self._serve, "predict", xs, targets,
-                                 time.perf_counter())
+        ingest.  With admission control configured, compatible queued
+        requests (same targets, same return_var) coalesce into one device
+        dispatch."""
+        t = time.perf_counter()
+        if self.batcher is not None:
+            return self.batcher.submit("predict", xs, targets, return_var,
+                                       t)
+        return self._pool.submit(self._serve, "predict", xs, targets, t,
+                                 return_var)
 
     def close(self) -> None:
+        if self.batcher is not None:
+            self.batcher.close()
         self._pool.shutdown(wait=True)

@@ -175,9 +175,16 @@ def main() -> None:
     # predict_async exist for callers that also want off their own thread)
     scores = monitor.score_samples(feats)
     # eq. 27 on the serving path: reconstruct the last embedding feature
-    # from the rest — the residual is a per-request drift/corruption probe
-    recon = monitor.predict(feats[:, :-1], targets=[gcfg.dim - 1])
+    # from the rest — the residual is a per-request drift/corruption probe.
+    # return_var adds the conditional variance off the same cached factor
+    # bundle (one extra Schur term), turning the raw residual into a
+    # CALIBRATED z-score: |x̂−x|/σ ≫ 1 flags a corrupted request even when
+    # the absolute residual is small in a tight regime.
+    recon, rvar = monitor.predict(feats[:, :-1], targets=[gcfg.dim - 1],
+                                  return_var=True)
     resid = float(jnp.mean(jnp.abs(recon[:, 0] - feats[:, -1])))
+    zscore = float(jnp.mean(jnp.abs(recon[:, 0] - feats[:, -1])
+                            / jnp.sqrt(jnp.maximum(rvar[:, 0], 1e-12))))
     monitor.close()
     shortcut = (f"shortlist C={gcfg.shortlist_c}, "
                 if gcfg.shortlist_c > 0 else "")
@@ -191,7 +198,7 @@ def main() -> None:
           f"drift alarms={summary['drift_alarms']}, "
           f"scale events={summary['scale_ups']}+{summary['scale_downs']} "
           f"epoch={summary['epoch']}, "
-          f"eq27 |x̂₁₅−x₁₅| = {resid:.3f})")
+          f"eq27 |x̂₁₅−x₁₅| = {resid:.3f}, z = {zscore:.2f})")
 
     if args.trace:
         tracer = obs_trace.disable()

@@ -369,8 +369,13 @@ def _decoder_block(pblk, x, positions, cfg: ModelConfig, window,
             new_cache = {"ckv": ckv, "krope": krope, "pos": pos_all}
         else:
             ckv, krope = mla.compress_kv(pa, h, cfg, positions)
+            # k_valid masks padding keys (position -1, from a masked
+            # bucketed prefill): their k_pos would satisfy every causal
+            # comparison otherwise.  All-true for unpadded prompts — the
+            # composed mask is then bit-identical to the causal-only one.
             attn_out = mla.mla_attention_full(pa, h, cfg, positions, ckv,
-                                              krope, positions)
+                                              krope, positions,
+                                              k_valid=positions >= 0)
             new_cache = None
             if kv_cache is not None:       # prefill: persist compressed kv
                 sc = kv_cache["ckv"].shape[1]
@@ -667,10 +672,31 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Array],
             cache: Dict[str, Any]):
     """Run the prompt through the model, filling ``cache``.
 
-    Returns (last-token logits (B, V), cache)."""
+    Returns (last-token logits (B, V), cache).
+
+    batch["lengths"] ((B,) int32, optional) enables MASKED prefill over
+    end-padded prompts: padding columns get position -1 (never written as
+    valid keys — attention masks ``pos >= 0``), the cache write pointer
+    advances by each row's true length (decode overwrites the padding
+    slots), and the returned logits are each row's true-last-token logits.
+    This is what lets a serving engine bucket prompt lengths to powers of
+    two and compile O(log max_len) prefill kernels instead of one per
+    distinct length.  Not supported for recurrent families ("ssm",
+    "hybrid"): their per-token state updates cannot be position-masked —
+    a padded token would pollute the carried state."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     positions = batch.get("positions")
+    lengths = batch.get("lengths")
+    if lengths is not None:
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"masked (bucketed) prefill is not supported for the "
+                f"{cfg.family!r} family: recurrent state carries every "
+                "token, padding included — prefill exact lengths instead")
+        if positions is None:
+            ar = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            positions = jnp.where(ar < lengths[:, None], ar, -1)
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x = _embed_inputs(params, cfg, tokens, batch.get("pixel_embeds"))
@@ -700,8 +726,14 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Array],
             cache["mamba"] = new_mamba
         if new_xattn is not None:
             cache["xattn"] = new_xattn
-    cache["idx"] = cache["idx"] + S
-    logits = _logits(params, cfg, x[:, -1:])
+    if lengths is None:
+        cache["idx"] = cache["idx"] + S
+        x_last = x[:, -1:]
+    else:
+        cache["idx"] = cache["idx"] + lengths.astype(cache["idx"].dtype)
+        idx_last = jnp.clip(lengths - 1, 0, S - 1)
+        x_last = x[jnp.arange(B), idx_last][:, None, :]
+    logits = _logits(params, cfg, x_last)
     return logits[:, 0], cache
 
 

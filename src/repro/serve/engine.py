@@ -16,7 +16,8 @@ OOD/novelty per request — the paper's density model as a serving feature.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from collections import OrderedDict
+from typing import Any, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +39,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, n_slots: int,
-                 max_len: int):
+                 max_len: int, prefill_cache_cap: int = 12):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -49,22 +50,56 @@ class ServeEngine:
         self.last_token = np.zeros((n_slots, 1), np.int32)
         self._decode = jax.jit(
             lambda p, t, c: transformer.decode_step(p, cfg, t, c))
-        # single-slot prefill jitted per prompt length bucket
-        self._prefill_cache: Dict[int, Callable] = {}
+        # Prefill compilation cache, keyed by padded prompt length.  For
+        # attention families the key is the power-of-two BUCKET of the
+        # prompt length (masked prefill pads to the bucket; positions -1
+        # on the padding keep padded keys out of attention and the decode
+        # write pointer lands on the true length) — so the cache holds at
+        # most O(log max_len) entries under ANY traffic.  Recurrent
+        # families ("ssm"/"hybrid") cannot be position-masked, so they
+        # fall back to exact-length kernels behind the same LRU cap —
+        # bounded memory, at the cost of retraces under varied traffic.
+        self._maskable = cfg.family not in ("ssm", "hybrid")
+        self._prefill_cache: "OrderedDict[int, Callable]" = OrderedDict()
+        self._prefill_cap = max(int(prefill_cache_cap), 1)
+        self.prefill_traces = 0    # compilation-cache misses (test hook)
 
     def submit(self, req: Request) -> None:
         req.out_tokens = []
         self.queue.append(req)
 
-    def _prefill_fn(self, s: int):
-        if s not in self._prefill_cache:
-            cfg = self.cfg
+    def _prefill_bucket(self, s: int) -> int:
+        """Padded prompt length for a true length ``s``: the next power of
+        two on maskable families (O(log) distinct kernels), ``s`` itself on
+        recurrent ones (exact, LRU-capped)."""
+        if not self._maskable:
+            return s
+        b = max(1, 1 << (int(s) - 1).bit_length())
+        # never pad past the cache ring: a bucket wider than max_len would
+        # wrap and stamp pos=-1 over real early keys
+        return min(b, self.max_len) if s <= self.max_len else s
 
-            def fn(params, tokens, cache):
+    def _prefill_fn(self, padded: int) -> Callable:
+        if padded in self._prefill_cache:
+            self._prefill_cache.move_to_end(padded)
+            return self._prefill_cache[padded]
+        cfg = self.cfg
+        self.prefill_traces += 1
+        if self._maskable:
+            def fn(params, tokens, lengths, cache):
+                return transformer.prefill(
+                    params, cfg, {"tokens": tokens, "lengths": lengths},
+                    cache)
+        else:
+            def fn(params, tokens, lengths, cache):
+                del lengths              # exact-length: whole row is real
                 return transformer.prefill(params, cfg, {"tokens": tokens},
                                            cache)
-            self._prefill_cache[s] = jax.jit(fn)
-        return self._prefill_cache[s]
+        jitted = jax.jit(fn)
+        self._prefill_cache[padded] = jitted
+        while len(self._prefill_cache) > self._prefill_cap:
+            self._prefill_cache.popitem(last=False)
+        return jitted
 
     def _admit(self) -> None:
         for slot in range(self.n_slots):
@@ -74,9 +109,13 @@ class ServeEngine:
             # per-slot prefill on a fresh single-row cache, then scatter
             # into the shared stacked cache at this slot.
             row_cache = transformer.init_cache(self.cfg, 1, self.max_len)
-            fn = self._prefill_fn(len(req.prompt))
-            logits, row_cache = fn(self.params,
-                                   jnp.asarray(req.prompt)[None], row_cache)
+            s = len(req.prompt)
+            padded = self._prefill_bucket(s)
+            toks = np.zeros((1, padded), np.int32)
+            toks[0, :s] = req.prompt
+            fn = self._prefill_fn(padded)
+            logits, row_cache = fn(self.params, jnp.asarray(toks),
+                                   jnp.asarray([s], jnp.int32), row_cache)
             self.cache = jax.tree.map(
                 lambda full, row: _scatter_slot(full, row, slot),
                 self.cache, row_cache)

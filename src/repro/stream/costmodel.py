@@ -539,8 +539,9 @@ def calibrate(grid: Sequence = DEFAULT_GRID, *,
                 lambda: (cfg_dense, warm, serve_in, targets),
                 repeats=repeats)
             hlo = prof.hlo_cost(
-                lambda s, x: inference._predict_batch_jit(
-                    cfg_dense, s, x, targets), warm, serve_in)
+                lambda s, x: inference._predict_dense_jit(
+                    inference._factors_jit(cfg_dense, s, targets),
+                    s.sp, s.active, x), warm, serve_in)
             table.add_cell(dkey, _mk_cell(
                 "predict", "dense", kmax, d, 0, n_serve, t, hlo, backend))
 
@@ -562,7 +563,8 @@ def calibrate(grid: Sequence = DEFAULT_GRID, *,
                     repeats=repeats)
                 hlo = prof.hlo_cost(
                     lambda s, x: inference._predict_sparse_jit(
-                        cfg_c, s, x, targets, c), warm, serve_in)
+                        cfg_c, inference._factors_jit(cfg_c, s, targets),
+                        s.sp, s.active, x, c), warm, serve_in)
                 table.add_cell(dkey, _mk_cell(
                     "predict", "sparse", kmax, d, c, n_serve, t, hlo,
                     backend))

@@ -114,6 +114,14 @@ class StreamRuntime:
             "figmn_dispatch_predicted_seconds)")
         self.state: FIGMNState = figmn.init_state(cfg)
         self.chunk_idx = 0
+        # Pool epoch: bumped on EVERY state mutation (chunk ingest,
+        # lifecycle pass, drift response, pool import, resume) — the
+        # invalidation key for the eq. 27 factor cache.  A read that
+        # captures (state, state_epoch) together can safely reuse cached
+        # factors for that epoch; any mutation moves new reads to a fresh
+        # cache line.
+        self.state_epoch = 0
+        self.factor_cache = inference.FactorCache(registry=reg)
         # Table-first, heuristic-fallback dispatch (stream.costmodel):
         # bit-compatible with ingest.select_path when rcfg.cost_table is
         # None.  The decision object keeps the expected per-point seconds
@@ -228,6 +236,7 @@ class StreamRuntime:
             body = (ingest.fit_chunk_sparse if path == "sparse"
                     else ingest.fit_chunk_scan)
             self.state = body(cfg, self.state, xc, do_prune)
+        self.state_epoch += 1
 
         drift_score, alarm = 0.0, False
         if self.detector is not None and mean_ll == mean_ll:
@@ -298,6 +307,7 @@ class StreamRuntime:
             self._fold_accept_counter()
             self.state, rep = lifecycle.run_pass(
                 self.cfg, self.rcfg.lifecycle, self.state, self.buffer)
+            self.state_epoch += 1
             sp.set(pruned=rep.pruned, merged=rep.merged,
                    spawned=rep.spawned)
         self.telemetry.add_lifecycle(rep.pruned, rep.merged, rep.spawned)
@@ -311,6 +321,7 @@ class StreamRuntime:
                 # preserve the pre-drift mixture before mutating it
                 self.checkpoint()
             self.state = drift_mod.respond(self.cfg, dcfg, self.state)
+            self.state_epoch += 1
 
     # ------------------------------------------------------------------
     # pool export / import (fleet scale events)
@@ -345,6 +356,7 @@ class StreamRuntime:
         # arrays (e.g. the kept half of an autoscale split), and donating a
         # shared buffer would invalidate it under the other holder.
         self.state = jax.tree_util.tree_map(jnp.copy, state)
+        self.state_epoch += 1
         if self.detector is not None:
             self.detector.reset_baseline()
 
@@ -361,23 +373,33 @@ class StreamRuntime:
         Mahalanobis sweep.  A forced dense ingest path scores densely —
         reads and writes stay consistent."""
         xs = jnp.asarray(xs, self.cfg.dtype)
+        if xs.shape[0] == 0:
+            # B=0 contract (shared with predict and every serving
+            # frontend): well-formed empty output, no device dispatch
+            return jnp.zeros((0,), self.cfg.dtype)
         if self.path == "sparse":
             return shortlist.score_batch_sparse(self.cfg, self.state, xs)
         return ingest.score_batch_jit(self.cfg, self.state, xs)
 
-    def predict(self, xs, targets) -> Array:
+    def predict(self, xs, targets, return_var: bool = False):
         """(N, o) eq. 27 conditional means of ``targets`` given the rest,
         under the current state (read-only; raises on an empty pool).
 
         Same path contract as ``score``: a shortlisted runtime serves the
         conditional through ``inference.predict_batch_sparse`` (O(K·D +
         C·D²·o) per point, bit-identical to dense at C ≥ active K), a
-        dense one through the batched dense kernel."""
+        dense one through the batched dense kernel.  The factor stage is
+        amortised through the runtime's per-epoch ``FactorCache``: repeat
+        reads between state mutations reuse the same bundle,
+        bit-identically.  return_var=True additionally returns the (N, o)
+        conditional variance as a (mean, var) pair."""
         xs = jnp.asarray(xs, self.cfg.dtype)
         return inference.predict_batch_routed(
             self.cfg, self.state, xs, targets,
             c=self.cfg.shortlist_c if self.path == "sparse" else 0,
-            cost_table=self.rcfg.cost_table, device=self.rcfg.device)
+            cost_table=self.rcfg.cost_table, device=self.rcfg.device,
+            return_var=return_var, factor_cache=self.factor_cache,
+            epoch=self.state_epoch)
 
     def _payload(self) -> Dict[str, object]:
         """Everything a resumed runtime needs to continue bit-identically:
@@ -435,6 +457,7 @@ class StreamRuntime:
         # restore what they have; newer sections start fresh (zeros)
         loaded = self.ckpt.restore(step, template, missing="template")
         self.state = loaded["figmn"]
+        self.state_epoch += 1
         self.chunk_idx = int(loaded["runtime"]["chunk_idx"])
         self.telemetry.load_counters(loaded["telemetry"])
         if self.detector is not None:

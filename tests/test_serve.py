@@ -42,6 +42,50 @@ def test_engine_matches_sequential_greedy():
         assert r.out_tokens == want, (r.rid, r.out_tokens, want)
 
 
+def test_prefill_cache_bounded_under_varied_lengths():
+    """The compile-per-exact-prompt-length bug: varied traffic must hit a
+    BOUNDED number of prefill traces (power-of-two buckets via masked
+    prefill) and still decode exactly like the unbucketed reference."""
+    cfg = configs.get_smoke("yi-6b")
+    params = tr.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    lengths = [3, 4, 5, 6, 7, 9, 11, 13, 15, 17]    # 10 distinct lengths
+    engine = ServeEngine(cfg, params, n_slots=2, max_len=48)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=s).astype(np.int32), max_tokens=4)
+        for i, s in enumerate(lengths)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run(max_ticks=200)
+    assert all(r.done for r in reqs)
+    # buckets hit: 4 (for 3,4), 8 (5..8), 16 (9..16), 32 (17) ⇒ 4 traces
+    assert engine.prefill_traces == 4, engine.prefill_traces
+    assert len(engine._prefill_cache) <= engine._prefill_cap
+    for r in reqs:
+        want = _greedy_reference(params, cfg, r.prompt, 4)
+        assert r.out_tokens == want, (r.rid, r.out_tokens, want)
+
+
+def test_prefill_cache_exact_fallback_is_capped():
+    """Recurrent families can't mask padding: they prefill exact lengths,
+    and the cache must CAP (LRU) instead of growing without bound."""
+    cfg = configs.get_smoke("hymba-1.5b")       # hybrid: mamba state
+    params = tr.init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    engine = ServeEngine(cfg, params, n_slots=2, max_len=32,
+                         prefill_cache_cap=3)
+    assert not engine._maskable
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=3 + i).astype(np.int32), max_tokens=2)
+        for i in range(6)]                          # 6 distinct lengths
+    for r in reqs:
+        engine.submit(r)
+    engine.run(max_ticks=100)
+    assert all(r.done for r in reqs)
+    assert engine.prefill_traces == 6               # exact: one per length
+    assert len(engine._prefill_cache) <= 3          # ...but LRU-capped
+
+
 def test_engine_queue_overflow_and_reuse():
     """More requests than slots: slots must be recycled."""
     cfg = configs.get_smoke("gemma-7b")
