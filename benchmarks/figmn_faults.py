@@ -1,0 +1,401 @@
+"""Fault-tolerance chaos benchmark → BENCH_faults.json.
+
+The robustness PR's end-to-end demonstration: the SAME stream is driven
+through a supervised fleet twice — once fault-free, once under a seeded
+``FaultPlan`` that kills, hangs, poisons and corrupts mid-stream — and the
+run measures what a fleet operator actually cares about:
+
+  detection   how long between a fault firing and the supervisor's
+              quarantine (watchdog latency; the hang's floor is the
+              heartbeat timeout, the crash's is the chunk-retry backoff),
+  recovery    quarantine → checkpoint-restore → rejoin wall time,
+  accounting  the exact mass identity: with pruning disabled every
+              ingested point adds exactly 1 to some replica's sum(sp), so
+                Σ sum(sp) + points_lost − points_replayed
+                    + points_quarantined == points ingested
+              must hold to float rounding EVEN THROUGH the chaos,
+  serving     a background probe scores throughout — availability during
+              the fault window (degraded mode serves the last good
+              snapshot; requests must keep succeeding),
+  quality     held-out mean log-likelihood gap vs the fault-free run
+              (bounded: the fleet loses at most the un-checkpointed tail
+              of the killed replica's stream).
+
+The chaos schedule (all seeded, all on real code paths — chunk hooks on
+live runtimes, never mocks):
+
+  replica 0   poison: NaN/Inf rows injected into one chunk; the finite
+              guard must quarantine them before they touch Λ,
+  replica 1   hang: one chunk sleeps past the heartbeat timeout; the
+              watchdog quarantines, the shard re-routes, the hung thread
+              is left to finish and the replica rejoins from checkpoint,
+  replica 2   corrupt_ckpt + sticky crash: the newest checkpoint payload
+              is bit-flipped, then the replica crashes until the chunk
+              retries are exhausted — recovery must FALL BACK to the
+              previous intact step and account the lost delta.
+
+The committed smoke baseline gates CI (``--check``): a failed recovery
+(quarantine never rejoined), a broken mass identity, serving availability
+below threshold, an LL gap above tolerance, or a >2× detection-latency
+regression fails the build.
+
+Run:    PYTHONPATH=src python -m benchmarks.figmn_faults [--smoke]
+Gate:   PYTHONPATH=src python -m benchmarks.figmn_faults \
+            --check BENCH_faults.json \
+            --baseline benchmarks/baselines/BENCH_faults_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import shutil
+import sys
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import FleetConfig, FleetCoordinator, sp_mass
+from repro.ft import (Fault, FaultInjector, FaultPlan, RetryPolicy,
+                      SupervisorConfig)
+from repro.obs import export as obs_export
+from repro.obs import registry as obs_registry
+from repro.stream import RuntimeConfig
+
+D, KMAX = 8, 48
+N_REPLICAS = 3
+BATCH = 360                 # per round → 120-point shards, 3 chunks each
+CHUNK = 40
+ROUNDS = 6                  # post-warm-up rounds (the chaos window)
+ROUNDS_SMOKE = 5
+HOLDOUT = 512
+HOLDOUT_SMOKE = 256
+#: watchdog knobs: the heartbeat timeout must clear the worst honest
+#: chunk (including a fresh XLA compile of a re-routed partial-chunk
+#: shape, ~1s on CPU); the hang outlasts it decisively
+HEARTBEAT_TIMEOUT_S = 2.5
+HANG_DELAY_S = 4.0
+HANG_DELAY_SMOKE_S = 3.2
+POLL_S = 0.02
+RETRY = RetryPolicy(max_retries=2, base_delay_s=0.01, seed=0)
+#: chunk clocks (3 chunks/replica/round; warm-up is chunks 0–2)
+POISON_CHUNK = 4            # round 1, replica 0
+HANG_CHUNK = 7              # round 2, replica 1
+CRASH_CHUNK = 10            # round 3, replica 2 (corrupt fires first)
+#: the sticky crash fires exactly often enough to exhaust the chunk
+#: retries (1 initial + max_retries) and escalate to quarantine, then
+#: disarms — recovery is exercised once, deterministically
+CRASH_TIMES = RETRY.max_retries + 1
+SERVE_PERIOD_S = 0.03
+SERVE_BATCH = 32
+RECOVERY_WAIT_S = 20.0      # bound on draining the hung thread at the end
+AVAILABILITY_FLOOR = 0.95
+LL_GAP_TOL = 0.5
+MASS_RTOL = 1e-5
+
+
+def _mk_data(seed: int = 0, d: int = D):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6.0, (4, d))
+
+    def draw(n):
+        x = centers[rng.integers(0, 4, n)] + rng.normal(0, 1.0, (n, d))
+        return x.astype(np.float32)
+    return draw
+
+
+def _cfg(sample: np.ndarray) -> FIGMNConfig:
+    # pruning OFF (spmin=0, vmin unreachable, no lifecycle): the mass
+    # identity requires that no component's sp ever leaves the pool
+    # except through the supervisor's accounted loss
+    return FIGMNConfig(kmax=KMAX, dim=D, beta=0.1, delta=1.0,
+                       vmin=10 ** 9, spmin=0.0, update_mode="exact",
+                       sigma_ini=figmn.sigma_from_data(
+                           jnp.asarray(sample), 1.0))
+
+
+def _build(cfg: FIGMNConfig, ckpt_dir: str,
+           reg: obs_registry.Registry) -> FleetCoordinator:
+    fcfg = FleetConfig(
+        n_replicas=N_REPLICAS, router="round_robin", consolidate_every=1,
+        checkpoint_dir=ckpt_dir,
+        supervisor=SupervisorConfig(
+            heartbeat_timeout_s=HEARTBEAT_TIMEOUT_S, poll_s=POLL_S,
+            retry=RETRY,
+            # gauge-only stragglers: CPU timer noise would otherwise turn
+            # the poisoned replica's recompile into a nondeterministic
+            # drain mid-benchmark (the drain path has its own test)
+            straggler_drain=False),
+        max_staleness_s=120.0)
+    rcfg = RuntimeConfig(chunk=CHUNK, lifecycle=None, drift=None,
+                         on_nonfinite="drop")
+    return FleetCoordinator(cfg, fcfg, rcfg, registry=reg)
+
+
+class _ServeProbe(threading.Thread):
+    """Background scorer: one request every SERVE_PERIOD_S, recording
+    (monotonic t, succeeded, degraded-at-the-time) — the availability
+    witness for the fault window."""
+
+    def __init__(self, fleet: FleetCoordinator, xs: np.ndarray):
+        super().__init__(daemon=True, name="faults-serve-probe")
+        self._fleet = fleet
+        self._xs = xs
+        self._halt = threading.Event()
+        self.results: List[tuple] = []
+
+    def run(self) -> None:
+        while not self._halt.is_set():
+            t = time.monotonic()
+            try:
+                self._fleet.scoring.score(self._xs)
+                ok = True
+            except Exception:
+                ok = False
+            self.results.append((t, ok, self._fleet.scoring.degraded))
+            time.sleep(SERVE_PERIOD_S)
+
+    def stop(self) -> None:
+        self._halt.set()
+        self.join()
+
+
+def _availability(results: List[tuple], t0: Optional[float] = None,
+                  t1: Optional[float] = None) -> Dict:
+    sel = [r for r in results
+           if (t0 is None or r[0] >= t0) and (t1 is None or r[0] <= t1)]
+    n = len(sel)
+    ok = sum(1 for r in sel if r[1])
+    return {"requests": n, "ok": ok,
+            "availability": ok / n if n else 1.0,
+            "degraded_requests": sum(1 for r in sel if r[2])}
+
+
+def _drive(fleet: FleetCoordinator, draw, rounds: int) -> int:
+    n = 0
+    for _ in range(rounds):
+        fleet.ingest(draw(BATCH))
+        n += BATCH
+    return n
+
+
+def _mass_identity(fleet: FleetCoordinator, ingested: int) -> Dict:
+    s = fleet.summary()
+    mass = float(sum(sp_mass(r.state) for r in fleet.replicas))
+    lost = int(s.get("supervisor_points_lost", 0))
+    replayed = int(s.get("supervisor_points_replayed", 0))
+    quarantined = int(s.get("quarantined", 0))
+    acct = mass + lost - replayed + quarantined
+    rel = abs(acct - ingested) / max(ingested, 1)
+    return {"sp_mass": mass, "points_lost": lost,
+            "points_replayed": replayed, "points_quarantined": quarantined,
+            "accounted": acct, "ingested": ingested,
+            "rel_err": rel, "mass_ok": bool(rel <= MASS_RTOL)}
+
+
+def run(out_path: str = "BENCH_faults.json", quick: bool = False) -> Dict:
+    rounds = ROUNDS_SMOKE if quick else ROUNDS
+    hang_delay = HANG_DELAY_SMOKE_S if quick else HANG_DELAY_S
+    draw = _mk_data()
+    sample = draw(2048)
+    cfg = _cfg(sample)
+    holdout = draw(HOLDOUT_SMOKE if quick else HOLDOUT)
+
+    # ---- fault-free reference run --------------------------------------
+    d_ref = tempfile.mkdtemp(prefix="figmn_faults_ref_")
+    fleet = _build(cfg, d_ref, obs_registry.Registry())
+    draw_ref = _mk_data()           # identical stream for both runs
+    t0 = time.perf_counter()
+    fleet.ingest(draw_ref(BATCH))                       # warm-up/compile
+    ingested_ref = BATCH + _drive(fleet, draw_ref, rounds)
+    wall_ref = time.perf_counter() - t0
+    ll_ref = float(np.mean(np.asarray(fleet.score(holdout))))
+    mass_ref = _mass_identity(fleet, ingested_ref)
+    fleet.close()
+    shutil.rmtree(d_ref, ignore_errors=True)
+
+    # ---- chaos run -----------------------------------------------------
+    plan = FaultPlan(faults=(
+        Fault("poison", rid=0, chunk=POISON_CHUNK, fraction=0.3),
+        Fault("hang", rid=1, chunk=HANG_CHUNK, delay_s=hang_delay),
+        Fault("corrupt_ckpt", rid=2, chunk=CRASH_CHUNK),
+        Fault("crash", rid=2, chunk=CRASH_CHUNK, times=CRASH_TIMES),
+    ), seed=7)
+    inj = FaultInjector(plan)
+    d_chaos = tempfile.mkdtemp(prefix="figmn_faults_chaos_")
+    reg = obs_registry.Registry()
+    fleet = _build(cfg, d_chaos, reg)
+    draw_chaos = _mk_data()
+    t0 = time.perf_counter()
+    fleet.ingest(draw_chaos(BATCH))                     # warm-up/compile
+    fleet.install_faults(inj)                           # chaos armed
+    probe = _ServeProbe(fleet, draw(SERVE_BATCH))
+    probe.start()
+    ingested = BATCH + _drive(fleet, draw_chaos, rounds)
+    # drain: the hung thread must finish before its replica can rejoin
+    deadline = time.monotonic() + RECOVERY_WAIT_S
+    while fleet.supervisor.recovering and time.monotonic() < deadline:
+        time.sleep(0.1)
+        fleet.consolidate()
+    wall_chaos = time.perf_counter() - t0
+    probe.stop()
+    ll_chaos = float(np.mean(np.asarray(fleet.score(holdout))))
+    mass = _mass_identity(fleet, ingested)
+    summary = fleet.summary()
+    rec_events = [dataclasses.asdict(e)
+                  for e in fleet.telemetry.recovery_events]
+    fleet.close()
+    shutil.rmtree(d_chaos, ignore_errors=True)
+
+    # ---- ladder walk measurements --------------------------------------
+    def _quar_t(reason_prefix: str) -> Optional[float]:
+        for e in rec_events:
+            if e["stage"] == "quarantine" \
+                    and e["reason"].startswith(reason_prefix):
+                return float(e["t_monotonic"])
+        return None
+
+    detect_crash = detect_hang = None
+    t_crash, t_hang = inj.first_fired_t("crash"), inj.first_fired_t("hang")
+    if t_crash is not None and _quar_t("crash") is not None:
+        detect_crash = _quar_t("crash") - t_crash
+    if t_hang is not None and _quar_t("heartbeat_timeout") is not None:
+        detect_hang = _quar_t("heartbeat_timeout") - t_hang
+    rejoins = [e for e in rec_events if e["stage"] == "rejoin"]
+    recovery_s = max((float(e["wall_s"]) for e in rejoins), default=None)
+    fallback_lost = sum(int(e["points_lost"]) for e in rejoins
+                        if e["reason"].startswith("crash"))
+    recovered = (len(rejoins) >= 2               # hang + crash both rejoin
+                 and not summary["quarantined_replicas"]
+                 and not summary["serving_degraded"])
+
+    # fault window: first fault firing → last rejoin
+    t_first = min(t for t in (t_crash, t_hang) if t is not None) \
+        if (t_crash or t_hang) else None
+    t_last = max((float(e["t_monotonic"]) for e in rejoins), default=None)
+    avail_all = _availability(probe.results)
+    avail_window = _availability(probe.results, t_first, t_last)
+
+    ll_gap = abs(ll_ref - ll_chaos)
+    doc = {"benchmark": "figmn_faults",
+           "backend": jax.default_backend(),
+           "smoke": quick,
+           "replicas": N_REPLICAS, "rounds": rounds, "batch": BATCH,
+           "chunk": CHUNK,
+           "heartbeat_timeout_s": HEARTBEAT_TIMEOUT_S,
+           "hang_delay_s": hang_delay,
+           "fault_free": {"ingested": ingested_ref,
+                          "wall_s": wall_ref,
+                          "holdout_ll": ll_ref,
+                          "mass": mass_ref},
+           "chaos": {"ingested": ingested,
+                     "wall_s": wall_chaos,
+                     "holdout_ll": ll_chaos,
+                     "mass": mass,
+                     "faults_fired": [
+                         {"kind": k, "rid": r, "chunk": c}
+                         for k, r, c, _ in inj.fired],
+                     "corrupted_steps": [list(t)
+                                         for t in inj.corrupted_steps],
+                     "detect_crash_s": detect_crash,
+                     "detect_hang_s": detect_hang,
+                     "recovery_s": recovery_s,
+                     "ckpt_fallback_lost_points": fallback_lost,
+                     "rejoins": len(rejoins),
+                     "recovered": bool(recovered),
+                     "quarantined_final": summary["quarantined_replicas"],
+                     "availability": avail_all,
+                     "availability_fault_window": avail_window,
+                     "recovery_events": rec_events},
+           "ll_gap": ll_gap,
+           "ll_gap_ok": bool(ll_gap <= LL_GAP_TOL)}
+    obs_export.to_json(out_path, doc)
+    print(f"wrote {out_path}")
+    print(f"fault-free: {ingested_ref} pts, holdout LL {ll_ref:.4f}, "
+          f"mass {'OK' if mass_ref['mass_ok'] else 'BROKEN'}")
+    print(f"chaos: {len(inj.fired)} fault firings, "
+          f"detect crash {detect_crash and f'{detect_crash:.3f}s'}, "
+          f"hang {detect_hang and f'{detect_hang:.3f}s'}, "
+          f"recovery {recovery_s and f'{recovery_s:.2f}s'}, "
+          f"lost {mass['points_lost']} "
+          f"(ckpt-fallback {fallback_lost}), "
+          f"quarantined rows {mass['points_quarantined']}")
+    print(f"mass identity: {mass['accounted']:.2f} vs {ingested} "
+          f"(rel {mass['rel_err']:.2e}) — "
+          f"{'OK' if mass['mass_ok'] else 'BROKEN'}")
+    print(f"serving: {avail_all['availability']:.3f} overall, "
+          f"{avail_window['availability']:.3f} during fault window "
+          f"({avail_window['degraded_requests']} degraded-mode requests)")
+    print(f"holdout LL gap {ll_gap:.4f} "
+          f"({'OK' if ll_gap <= LL_GAP_TOL else 'TOO LARGE'}), "
+          f"recovered={recovered}")
+    return doc
+
+
+def check(bench_path: str, baseline_path: str, factor: float = 2.0) -> bool:
+    """CI gate: recovery must complete, the mass identity must hold,
+    serving availability must clear the floor, the held-out LL gap must
+    stay within tolerance, and detection latency may not regress more
+    than ``factor``× against the committed smoke baseline (with a 0.5s
+    absolute grace for timer noise at small absolute latencies)."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    chaos, ref = bench["chaos"], base["chaos"]
+    ok_rec = bool(chaos.get("recovered"))
+    print(f"recovery: rejoins={chaos.get('rejoins')} "
+          f"quarantined_final={chaos.get('quarantined_final')} — "
+          f"{'OK' if ok_rec else 'FAILED RECOVERY'}")
+    ok_mass = bool(chaos.get("mass", {}).get("mass_ok"))
+    print(f"mass identity: rel_err="
+          f"{chaos.get('mass', {}).get('rel_err'):.2e} — "
+          f"{'OK' if ok_mass else 'BROKEN'}")
+    got_av = float(chaos.get("availability", {}).get("availability", 0.0))
+    ok_av = got_av >= AVAILABILITY_FLOOR
+    print(f"serving availability: {got_av:.3f} "
+          f"(floor {AVAILABILITY_FLOOR}) — "
+          f"{'OK' if ok_av else 'BELOW FLOOR'}")
+    ok_ll = bool(bench.get("ll_gap_ok"))
+    print(f"holdout LL gap: {float(bench.get('ll_gap', 1e9)):.4f} "
+          f"(tol {LL_GAP_TOL}) — {'OK' if ok_ll else 'TOO LARGE'}")
+    ok_det = True
+    for key in ("detect_crash_s", "detect_hang_s"):
+        got, refv = chaos.get(key), ref.get(key)
+        if got is None:
+            ok_det = False
+            print(f"{key}: MISSING (fault not detected)")
+            continue
+        if refv is None:
+            continue
+        ceil = max(float(refv) * factor, float(refv) + 0.5)
+        ok = float(got) <= ceil
+        ok_det = ok_det and ok
+        print(f"{key}: {float(got):.3f}s vs baseline {float(refv):.3f}s "
+              f"(ceiling {ceil:.3f}s) — {'OK' if ok else 'REGRESSION'}")
+    return ok_rec and ok_mass and ok_av and ok_ll and ok_det
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="gate mode: compare BENCH_JSON against --baseline "
+                         "instead of running the benchmark")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_faults_smoke.json")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(0 if check(args.check, args.baseline) else 1)
+    main(smoke=args.smoke)

@@ -26,6 +26,11 @@ CSV convention: ``name,us_per_call,derived``.
                     autoscaler adds a replica off the serving signal
                     alone → BENCH_serve.json (CI-gated against
                     benchmarks/baselines/)
+  figmn_faults    — fault-tolerance chaos run: seeded kill/hang/poison/
+                    checkpoint-corruption mid-stream; gates detection
+                    latency, recovery, exact mass accounting, serving
+                    availability and held-out LL gap → BENCH_faults.json
+                    (CI-gated against benchmarks/baselines/)
   figmn_dispatch  — dispatch calibration: measured per-path cost table
                     + decision audit (table choice vs measured fastest
                     vs heuristic) → BENCH_dispatch.json +
@@ -58,7 +63,7 @@ import traceback
 REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
             "figmn_runtime", "figmn_fleet", "figmn_autoscale",
             "figmn_sparse", "figmn_predict", "figmn_serve",
-            "figmn_dispatch", "lm_bench", "roofline")
+            "figmn_faults", "figmn_dispatch", "lm_bench", "roofline")
 
 #: CI-gated benchmarks: module -> (fresh bench json, committed baseline);
 #: each module exposes ``check(bench_path, baseline_path) -> bool``.
@@ -71,6 +76,8 @@ GATES = {
                       "benchmarks/baselines/BENCH_predict_smoke.json"),
     "figmn_serve": ("BENCH_serve.json",
                     "benchmarks/baselines/BENCH_serve_smoke.json"),
+    "figmn_faults": ("BENCH_faults.json",
+                     "benchmarks/baselines/BENCH_faults_smoke.json"),
     "figmn_dispatch": ("BENCH_dispatch.json",
                        "benchmarks/baselines/BENCH_dispatch_smoke.json"),
 }

@@ -19,7 +19,11 @@ this container):
   unchanged on 16×16 (or any other mesh) — elastic rescale after losing a
   pod.
 * **Retention + integrity** — keep_n GC; every array hashed (blake2) at
-  save and verified at restore.
+  save and verified at restore.  ``verify_step``/``latest_step(verify=
+  True)`` answer "newest INTACT step", and ``restore(..., fallback=True)``
+  walks earlier steps past corrupted payloads — so crash recovery after
+  a partially-written or bit-flipped checkpoint costs one save interval,
+  not the replica.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ import os
 import shutil
 import threading
 import time
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -117,22 +122,49 @@ class CheckpointManager:
 
     # ---------------- restore ----------------
 
-    def all_steps(self):
+    def all_steps(self, verify: bool = False):
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp") \
                     and os.path.exists(os.path.join(self.dir, name,
                                                     "manifest.json")):
                 out.append(int(name.split("_")[1]))
-        return sorted(out)
+        out = sorted(out)
+        if verify:
+            out = [s for s in out if self.verify_step(s)]
+        return out
 
-    def latest_step(self) -> Optional[int]:
-        steps = self.all_steps()
-        return steps[-1] if steps else None
+    def latest_step(self, verify: bool = False) -> Optional[int]:
+        """Newest step on disk.  verify=True additionally re-hashes each
+        candidate's payload against its manifest (newest first) and skips
+        steps that fail — the answer is the newest INTACT step, which is
+        what crash recovery must restore from."""
+        for s in reversed(self.all_steps()):
+            if not verify or self.verify_step(s):
+                return s
+        return None
+
+    def verify_step(self, step: int) -> bool:
+        """True iff the step's payload is readable and every entry's
+        content hash matches its manifest.  Unreadable (truncated,
+        bit-flipped past the zip CRC) payloads are simply not intact —
+        False, never an exception."""
+        d = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            with np.load(os.path.join(d, "host_0.npz")) as z:
+                for k, meta in manifest["entries"].items():
+                    if meta["hash"] and _hash(z[k]) != meta["hash"]:
+                        return False
+            return True
+        except Exception:
+            return False
 
     def restore(self, step: int, template: Any,
                 shardings: Optional[Any] = None,
-                verify: bool = True, missing: str = "error") -> Any:
+                verify: bool = True, missing: str = "error",
+                fallback: bool = False) -> Any:
         """Load step into the structure of ``template``.
 
         shardings: optional pytree of NamedSharding (matching template) —
@@ -143,7 +175,25 @@ class CheckpointManager:
         (payload-format migration: older checkpoints restore what they
         have, new state starts fresh).  File entries absent from the
         template are always ignored (state the caller doesn't track).
+        fallback: on verification failure (or an unreadable payload),
+        walk EARLIER steps newest-first and restore the first intact one
+        instead of raising — the crash-recovery semantics: a corrupted
+        newest checkpoint costs the delta since the previous save, not
+        the whole replica.  Raises IOError only when no intact step
+        remains at or below ``step``.
         """
+        if fallback:
+            last_err: Optional[BaseException] = None
+            for s in [c for c in reversed(self.all_steps()) if c <= step]:
+                try:
+                    return self.restore(s, template, shardings=shardings,
+                                        verify=verify, missing=missing)
+                except (IOError, OSError, ValueError, KeyError,
+                        zipfile.BadZipFile) as e:
+                    last_err = e
+            raise IOError(
+                f"no intact checkpoint at or below step {step} in "
+                f"{self.dir}") from last_err
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)

@@ -34,14 +34,17 @@ from repro.fleet.autoscale import (Autoscaler, AutoscaleConfig,
 from repro.fleet.consolidate import consolidate, drain, merge_down, sp_mass
 from repro.fleet.coordinator import FleetConfig, FleetCoordinator
 from repro.fleet.router import RouterConfig, ShardRouter
-from repro.fleet.scoring import AdmissionConfig, ScoringFrontend
+from repro.fleet.scoring import (AdmissionConfig, AdmissionRejected,
+                                 DeadlineExceeded, ScoringFrontend,
+                                 StalenessExceeded)
 from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
-                                   ScaleEvent)
+                                   RecoveryEvent, ScaleEvent)
 
 __all__ = [
-    "AdmissionConfig", "Autoscaler", "AutoscaleConfig",
-    "ConsolidationEvent", "FleetConfig",
-    "FleetCoordinator", "FleetTelemetry", "ReplicaSignal", "RouterConfig",
-    "ScaleDecision", "ScaleEvent", "ScoringFrontend", "ShardRouter",
+    "AdmissionConfig", "AdmissionRejected", "Autoscaler",
+    "AutoscaleConfig", "ConsolidationEvent", "DeadlineExceeded",
+    "FleetConfig", "FleetCoordinator", "FleetTelemetry", "RecoveryEvent",
+    "ReplicaSignal", "RouterConfig", "ScaleDecision", "ScaleEvent",
+    "ScoringFrontend", "ShardRouter", "StalenessExceeded",
     "consolidate", "drain", "merge_down", "split_state", "sp_mass",
 ]

@@ -187,7 +187,8 @@ class Autoscaler:
         return p99, qps
 
     def observe(self, signals: Sequence[ReplicaSignal],
-                serving: Optional[ServingSignal] = None) -> ScaleDecision:
+                serving: Optional[ServingSignal] = None,
+                recovering: bool = False) -> ScaleDecision:
         """One decision from the current cumulative telemetry.
 
         Deltas are taken against the previous ``observe`` call (a replica
@@ -195,7 +196,10 @@ class Autoscaler:
         spawned since the last decision, whose counters started at zero).
         ``serving``, when provided, adds the read path's windowed p99/QPS
         as one more scale-up pressure term; hysteresis (cooldown, bounds,
-        decision cadence) is unchanged.
+        decision cadence) is unchanged.  ``recovering=True`` (a replica is
+        quarantined mid-recovery) vetoes SCALE-DOWN only: a quarantined
+        replica routes nothing, so its window share reads as cold and the
+        policy would otherwise drain a replica that is about to rejoin.
         """
         c = self.cfg
         self.decisions += 1
@@ -255,7 +259,8 @@ class Autoscaler:
                                      reason=reason)
 
         # -- scale DOWN: drain the coldest replica into the next-coldest
-        if n > c.min_replicas and alarms == 0 and total > 0:
+        if n > c.min_replicas and alarms == 0 and total > 0 \
+                and not recovering:
             order = np.argsort(routed, kind="stable")
             cold = int(order[0])
             share = float(routed[cold]) * n / total

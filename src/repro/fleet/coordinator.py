@@ -70,7 +70,9 @@ from repro.fleet.router import RouterConfig, ShardRouter
 from repro.fleet.scoring import AdmissionConfig, ScoringFrontend
 from repro.fleet.telemetry import (ConsolidationEvent, FleetTelemetry,
                                    ScaleEvent)
+from repro.ft.retry import RetryPolicy
 from repro.ft.straggler import StragglerConfig, StragglerMonitor
+from repro.ft.supervisor import FleetSupervisor, SupervisorConfig
 from repro.obs import registry as obs_registry
 from repro.obs.trace import span
 from repro.stream import RuntimeConfig, StreamRuntime, costmodel
@@ -107,6 +109,24 @@ class FleetConfig:
     factor_cache_size: LRU capacity of the serving eq. 27 factor cache
                        (entries are (snapshot version, targets) bundles;
                        <= 0 disables caching — bit-identical either way).
+    supervisor:        None ⇒ unsupervised delivery (a replica exception
+                       propagates to the caller, the pre-FT behaviour); a
+                       SupervisorConfig enables the watchdog + escalating
+                       recovery ladder of ft/supervisor.py — chunk retries
+                       on the replicas, quarantine + shard re-routing on
+                       crash/hang, checkpoint-restore rejoin at
+                       consolidation boundaries, exact mass accounting.
+    max_staleness_s:   serving freshness bound during degraded operation
+                       (None = unbounded): reads against a snapshot older
+                       than this raise StalenessExceeded instead of
+                       silently answering from the distant past.
+    serve_retry:       budgeted backoff+jitter resubmission of async reads
+                       bounced by admission control (None = bounce to the
+                       caller with the retry-after hint).
+    straggler:         divergence thresholds of the per-replica chunk-
+                       latency monitor (None = StragglerConfig defaults);
+                       with supervisor.straggler_drain the monitor's
+                       evictions become mass-conserving drains.
     """
     n_replicas: int = 2
     router: str = "round_robin"
@@ -119,6 +139,10 @@ class FleetConfig:
     router_seed: int = 0
     admission: Optional[AdmissionConfig] = None
     factor_cache_size: int = 16
+    supervisor: Optional[SupervisorConfig] = None
+    max_staleness_s: Optional[float] = None
+    serve_retry: Optional[RetryPolicy] = None
+    straggler: Optional[StragglerConfig] = None
 
 
 class FleetCoordinator:
@@ -157,7 +181,15 @@ class FleetCoordinator:
             registry=self._registry,
             cost_table=rcfg.cost_table, device=rcfg.device,
             admission=fcfg.admission,
-            factor_cache_size=fcfg.factor_cache_size)
+            factor_cache_size=fcfg.factor_cache_size,
+            max_staleness_s=fcfg.max_staleness_s,
+            retry=fcfg.serve_retry)
+        self.supervisor = (FleetSupervisor(fcfg.supervisor,
+                                           registry=self._registry)
+                           if fcfg.supervisor is not None else None)
+        if self.supervisor is not None:
+            for rid, r in zip(self.replica_ids, self.replicas):
+                self.supervisor.attach(rid, r)
         self.telemetry = FleetTelemetry()
         self.autoscaler = (Autoscaler(fcfg.autoscale)
                            if fcfg.autoscale is not None else None)
@@ -183,7 +215,7 @@ class FleetCoordinator:
         # per-replica mean chunk latency of each consolidation window
         self.straggler = StragglerMonitor(
             [self._host(rid) for rid in self.replica_ids],
-            StragglerConfig())
+            fcfg.straggler or StragglerConfig())
         self._strag_last: Dict[int, Tuple[int, float]] = {}
         # serving-window clock: ServingSignal.window_s spans consecutive
         # autoscale decisions
@@ -208,12 +240,19 @@ class FleetCoordinator:
 
     def _rcfg_for_id(self, rid: int) -> RuntimeConfig:
         """Per-replica RuntimeConfig, checkpoint dir keyed by STABLE id —
-        positions shift on scale-down, directories must not."""
+        positions shift on scale-down, directories must not.  A supervised
+        fleet also installs its SupervisorConfig.retry as the replicas'
+        chunk-retry policy (rung 1 of the ladder) unless the RuntimeConfig
+        already carries its own."""
+        out = self.rcfg
         root = self._ckpt_root
-        if root is None:
-            return self.rcfg
-        return dataclasses.replace(
-            self.rcfg, checkpoint_dir=os.path.join(root, f"replica_{rid}"))
+        if root is not None:
+            out = dataclasses.replace(
+                out, checkpoint_dir=os.path.join(root, f"replica_{rid}"))
+        if self.fcfg.supervisor is not None and out.chunk_retry is None:
+            out = dataclasses.replace(
+                out, chunk_retry=self.fcfg.supervisor.retry)
+        return out
 
     # ------------------------------------------------------------------
     # ingestion
@@ -230,9 +269,13 @@ class FleetCoordinator:
         boundaries: pools are pruned, budget-merged and just published).
         """
         xs = np.asarray(xs, np.float32)
-        for replica, idx in zip(self.replicas, self.router.route(xs)):
-            if idx.size:
-                replica.ingest(xs[idx])
+        if self.supervisor is None:
+            # unsupervised: exceptions propagate to the caller unchanged
+            for replica, idx in zip(self.replicas, self.router.route(xs)):
+                if idx.size:
+                    replica.ingest(xs[idx])
+        else:
+            self._deliver(xs)
         self.rounds += 1
         every = self.fcfg.consolidate_every
         if every > 0 and self.rounds % every == 0:
@@ -241,16 +284,75 @@ class FleetCoordinator:
                 self._maybe_autoscale()
         return self.summary()
 
+    def _deliver(self, xs: np.ndarray, depth: int = 0) -> None:
+        """Supervised delivery with re-routing.
+
+        Each shard runs under the supervisor's watchdog; a failed shard's
+        replica is quarantined (and masked out of the router) and the
+        shard re-routes through the surviving membership — recursively,
+        because the re-routed delivery can itself hit a sick replica.
+        ``depth`` caps the cascade at SupervisorConfig.reroute_attempts:
+        past it (correlated fleet-wide failure) the points are accounted
+        as lost rather than looping forever.  Router counts stay exact:
+        a failed delivery is un-counted before its points route again.
+        """
+        sup = self.supervisor
+        for pos, idx in enumerate(self.router.route(xs)):
+            if not idx.size:
+                continue
+            rid = self.replica_ids[pos]
+            if rid in sup.quarantined:
+                # only reachable when the LAST live replica went down
+                # (the router refuses to mask it): nowhere to re-route
+                self.router.uncount(pos, idx.size)
+                sup.record_dropped(self, idx.size,
+                                   "all replicas quarantined")
+                continue
+            if sup.ingest_shard(self, rid, self.replicas[pos], xs[idx]):
+                continue
+            self.router.uncount(pos, idx.size)
+            if depth >= sup.cfg.reroute_attempts:
+                sup.record_dropped(
+                    self, idx.size,
+                    f"re-route budget exhausted at depth {depth}")
+                continue
+            self._deliver(xs[idx], depth + 1)
+
+    def install_faults(self, injector) -> None:
+        """Attach a ft.faults.FaultInjector's plan to the live replicas
+        (chunk hooks on the real runtimes — chaos runs exercise the real
+        retry/quarantine/restore paths, never mocks)."""
+        for rid, r in zip(self.replica_ids, self.replicas):
+            injector.attach(rid, r)
+
     # ------------------------------------------------------------------
     # consolidation / serving
     # ------------------------------------------------------------------
 
     def consolidate(self) -> FIGMNState:
-        """Merge all replica mixtures; publish the result for serving."""
+        """Merge all replica mixtures; publish the result for serving.
+
+        A consolidation boundary is also the supervisor's recovery
+        boundary: quarantined replicas restore + rejoin FIRST (so a
+        recovered replica's state is part of this merge), and replicas
+        still quarantined are EXCLUDED from the merge — their state is
+        suspect (a hung ingest thread may still be mutating it), and the
+        serving contract during recovery is the last GOOD mixture, not a
+        half-poisoned one."""
+        if self.supervisor is not None:
+            self.supervisor.tick(self)
         t0 = time.perf_counter()
         with span("fleet.consolidate", topology=self.fcfg.topology,
                   replicas=len(self.replicas)) as sp:
-            states = [r.state for r in self.replicas]
+            if self.supervisor is not None and self.supervisor.quarantined:
+                states = [r.state for rid, r
+                          in zip(self.replica_ids, self.replicas)
+                          if rid not in self.supervisor.quarantined]
+                if not states:
+                    # whole fleet down: keep serving the last snapshot
+                    return self.global_state
+            else:
+                states = [r.state for r in self.replicas]
             active_in = sum(int(s.n_active) for s in states)
             global_state, merges = _consolidate(
                 self.cfg, states, topology=self.fcfg.topology,
@@ -268,6 +370,8 @@ class FleetCoordinator:
             wall_s=wall))
         self._m_consol_s.observe(wall)
         self._update_stragglers()
+        if self.supervisor is not None:
+            self.supervisor.escalate_stragglers(self)
         return global_state
 
     def _update_stragglers(self) -> None:
@@ -341,6 +445,9 @@ class FleetCoordinator:
         out = []
         for pos, (rid, r) in enumerate(zip(self.replica_ids,
                                            self.replicas)):
+            if (self.supervisor is not None
+                    and rid in self.supervisor.quarantined):
+                continue        # frozen counters would read as cold
             s = r.telemetry.summary()
             out.append(ReplicaSignal(
                 rid=rid, routed=counts[pos], chunks=int(s["chunks"]),
@@ -361,8 +468,11 @@ class FleetCoordinator:
             self.scoring.requests_total, window)
 
     def _maybe_autoscale(self) -> Optional[ScaleDecision]:
+        recovering = (self.supervisor is not None
+                      and self.supervisor.recovering)
         decision = self.autoscaler.observe(self._signals(),
-                                           self._serving_signal())
+                                           self._serving_signal(),
+                                           recovering=recovering)
         if decision.action == "up":
             self.scale_up(decision.rid, reason=decision.reason)
         elif decision.action == "down":
@@ -402,6 +512,10 @@ class FleetCoordinator:
         self.replica_ids.append(new_id)
         self.epoch += 1
         self.straggler.add_host(self._host(new_id))
+        if self.supervisor is not None:
+            self.supervisor.attach(new_id, child)
+            self.supervisor.delivered[new_id] = int(
+                child.telemetry.total_points)
         self._m_scale["up"].inc()
         self._m_replicas.set(len(self.replicas))
         self.telemetry.record_scale(ScaleEvent(
@@ -435,11 +549,22 @@ class FleetCoordinator:
         if len(cold.buffer):
             peer.buffer.push(cold.buffer.drain())
         self.router.shrink(pos, into=peer_pos)
+        # the retiring replica's counter totals (ingested, quarantined,
+        # ...) must keep counting toward the fleet aggregate or the
+        # fleet-level mass identity breaks on every drain
+        self.telemetry.absorb_retired(cold.telemetry.summary())
         del self.replicas[pos]
         del self.replica_ids[pos]
         self.epoch += 1
         self.straggler.remove_host(self._host(rid))
         self._strag_last.pop(rid, None)
+        if self.supervisor is not None:
+            # the peer's delivered baseline must absorb the drained
+            # replica's points or the next rejoin accounting would read
+            # the fold as replay; forget clears the retired id
+            self.supervisor.forget(rid)
+            self.supervisor.delivered[peer_rid] = int(
+                peer.telemetry.total_points)
         self._m_scale["down"].inc()
         self._m_replicas.set(len(self.replicas))
         self.telemetry.record_scale(ScaleEvent(
@@ -461,6 +586,12 @@ class FleetCoordinator:
         s["epoch"] = self.epoch
         s["replica_ids"] = list(self.replica_ids)
         s["stragglers"] = self.straggler.suspects()
+        if self.supervisor is not None:
+            s["quarantined_replicas"] = sorted(self.supervisor.quarantined)
+            s["supervisor_points_lost"] = self.supervisor.points_lost
+            s["supervisor_points_replayed"] = \
+                self.supervisor.points_replayed
+        s["serving_degraded"] = self.scoring.degraded
         return s
 
     def checkpoint(self) -> None:
@@ -468,7 +599,11 @@ class FleetCoordinator:
         d = self._ckpt_root
         if d is None:
             raise RuntimeError("no checkpoint_dir configured")
-        for r in self.replicas:
+        for rid, r in zip(self.replica_ids, self.replicas):
+            if (self.supervisor is not None
+                    and rid in self.supervisor.quarantined):
+                # suspect state must never overwrite the last good save
+                continue
             r.checkpoint()
         # Pin the exact replica-id set, epoch and per-replica steps this
         # manifest describes: replicas also auto-checkpoint on every
@@ -489,7 +624,10 @@ class FleetCoordinator:
                     "router": self.router.export_state(),
                     "autoscale": (self.autoscaler.export_state()
                                   if self.autoscaler is not None
-                                  else None)}
+                                  else None),
+                    "supervisor": (self.supervisor.export_state()
+                                   if self.supervisor is not None
+                                   else None)}
         tmp = os.path.join(d, _MANIFEST + ".tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f)
@@ -572,6 +710,13 @@ class FleetCoordinator:
         if self.autoscaler is not None \
                 and manifest.get("autoscale") is not None:
             self.autoscaler.load_state(manifest["autoscale"])
+        if self.supervisor is not None:
+            if manifest.get("supervisor") is not None:
+                self.supervisor.load_state(manifest["supervisor"])
+            # the restored counters ARE the delivered truth of this cut
+            self.supervisor.sync_delivered(self.replica_ids, self.replicas)
+            for rid, r in zip(self.replica_ids, self.replicas):
+                self.supervisor.attach(rid, r)
         if int(manifest.get("snapshot_version", 0)) > 0:
             t0 = time.perf_counter()
             state, merges = _consolidate(
@@ -594,5 +739,5 @@ class FleetCoordinator:
                 wall_s=time.perf_counter() - t0))
         return True
 
-    def close(self) -> None:
-        self.scoring.close()
+    def close(self, cancel_pending: bool = False) -> None:
+        self.scoring.close(cancel_pending)

@@ -35,6 +35,16 @@ replica is removed; ids never do — they key checkpoint directories and the
 hash ring, so routing stays stable across coordinator restarts and scale
 events).  Routing runs on host (numpy) — it is the serving front door,
 upstream of any device work, and must not trigger XLA retraces.
+
+Quarantine (fault tolerance): ``set_quarantined(pos, True)`` masks a
+replica out of assignment WITHOUT changing membership — its position,
+stable id, and cumulative counts survive so it can rejoin after recovery
+with routing state intact.  Under round_robin the live replicas absorb the
+masked slot's turns; under hash its vnode arcs fall to the clockwise
+neighbours (the consistent-hashing property: only ~1/n of keys remap);
+under affinity its centroid is excluded from the nearest-centroid argmin.
+``uncount(pos, n)`` reverses a failed delivery's count so re-routed points
+are not double-counted in the load telemetry.
 """
 from __future__ import annotations
 
@@ -74,6 +84,7 @@ class ShardRouter:
         self._rr_offset = 0                     # round_robin clock
         self._centroids: Optional[np.ndarray] = None   # affinity state
         self._counts = np.zeros(self.n, np.int64)      # points per replica
+        self._live = np.ones(self.n, bool)             # quarantine mask
         self._ring_pos: Optional[np.ndarray] = None    # hash-ring cache
         self._ring_owner: Optional[np.ndarray] = None
 
@@ -101,6 +112,32 @@ class ShardRouter:
         """Cumulative points per replica in position order."""
         return [int(c) for c in self._counts]
 
+    def uncount(self, pos: int, n: int) -> None:
+        """Reverse ``n`` routed points at position ``pos`` — a delivery
+        that failed and is being re-routed must not count twice."""
+        self._counts[pos] = max(int(self._counts[pos]) - int(n), 0)
+
+    # -- quarantine (fault tolerance) ----------------------------------
+
+    def set_quarantined(self, pos: int, flag: bool) -> None:
+        """Mask (True) / unmask (False) the replica at ``pos`` from
+        assignment.  Membership, id, and counts are untouched — rejoining
+        is just the inverse call.  Raises ValueError when masking would
+        leave no live replica (nothing to re-route onto)."""
+        if not 0 <= pos < self.n:
+            raise ValueError(f"position {pos} out of range [0, {self.n})")
+        if flag and self._live[pos] and int(self._live.sum()) == 1:
+            raise ValueError("cannot quarantine the last live replica")
+        self._live[pos] = not flag
+        self._ring_pos = None               # ring arcs change membership
+
+    def quarantined(self) -> List[int]:
+        """Positions currently masked out of assignment."""
+        return [int(p) for p in np.flatnonzero(~self._live)]
+
+    def live_positions(self) -> List[int]:
+        return [int(p) for p in np.flatnonzero(self._live)]
+
     # -- membership changes (fleet autoscaling) ------------------------
 
     def grow(self, rid: int, centroid: Optional[np.ndarray] = None) -> int:
@@ -116,6 +153,7 @@ class ShardRouter:
         self.ids.append(int(rid))
         self.n += 1
         self._counts = np.append(self._counts, np.int64(0))
+        self._live = np.append(self._live, True)
         if self._centroids is not None:
             if centroid is None:
                 raise ValueError(
@@ -134,6 +172,7 @@ class ShardRouter:
             raise ValueError("cannot drain a replica into itself")
         self._counts[into] += self._counts[pos]
         self._counts = np.delete(self._counts, pos)
+        self._live = np.delete(self._live, pos)
         del self.ids[pos]
         if self._centroids is not None:
             self._centroids = np.delete(self._centroids, pos, axis=0)
@@ -145,8 +184,12 @@ class ShardRouter:
 
     def _assign_round_robin(self, xs: np.ndarray) -> np.ndarray:
         n = xs.shape[0]
-        assign = (self._rr_offset + np.arange(n)) % self.n
-        self._rr_offset = (self._rr_offset + n) % self.n
+        live = np.flatnonzero(self._live)
+        # all-live fast path is bit-identical to the pre-quarantine
+        # arithmetic (live == arange(self.n)); under quarantine the live
+        # replicas absorb the masked slots' turns
+        assign = live[(self._rr_offset + np.arange(n)) % live.size]
+        self._rr_offset = (self._rr_offset + n) % live.size
         return assign
 
     def _salt(self) -> bytes:
@@ -156,6 +199,8 @@ class ShardRouter:
         salt = self._salt()
         pts, owners = [], []
         for pos, rid in enumerate(self.ids):
+            if not self._live[pos]:
+                continue        # quarantined arcs fall to the neighbours
             for v in range(_VNODES):
                 h = hashlib.blake2b(f"vnode:{rid}:{v}".encode(),
                                     digest_size=8, salt=salt).digest()
@@ -189,6 +234,7 @@ class ShardRouter:
                 return self._assign_round_robin(xs)
             self._centroids = self._init_centroids(xs)
         d2 = ((xs[:, None, :] - self._centroids[None]) ** 2).sum(-1)
+        d2[:, ~self._live] = np.inf         # never the nearest centroid
         assign = d2.argmin(1)
         # running-mean centroid update (count-weighted, order-free)
         for r in range(self.n):
@@ -224,6 +270,7 @@ class ShardRouter:
         return {"rr_offset": self._rr_offset,
                 "ids": list(self.ids),
                 "counts": self._counts.tolist(),
+                "live": self._live.tolist(),
                 "centroids": (self._centroids.tolist()
                               if self._centroids is not None else None)}
 
@@ -234,6 +281,9 @@ class ShardRouter:
         self.ids = [int(i) for i in
                     payload.get("ids", range(len(self._counts)))]
         self.n = len(self.ids)
+        live = payload.get("live")      # pre-supervision manifests: all
+        self._live = (np.asarray(live, bool) if live is not None
+                      else np.ones(self.n, bool))
         cent = payload.get("centroids")
         self._centroids = (np.asarray(cent, np.float64)
                            if cent is not None else None)

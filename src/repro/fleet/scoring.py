@@ -60,10 +60,30 @@ import jax.numpy as jnp
 
 from repro.core import inference, shortlist
 from repro.core.types import Array, FIGMNConfig, FIGMNState
+from repro.ft.retry import RetryPolicy
 from repro.obs import metrics as obs_metrics
 from repro.obs import registry as obs_registry
 from repro.obs.trace import span
 from repro.stream import ingest
+
+
+class AdmissionRejected(RuntimeError):
+    """The admission queue is full.  ``retry_after_s`` is a machine-
+    readable backoff hint (the batcher's flush cadence) — clients and the
+    frontend's own ``RetryPolicy`` resubmit after it instead of guessing."""
+
+    def __init__(self, msg: str, retry_after_s: float):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
+
+
+class DeadlineExceeded(TimeoutError):
+    """A per-request deadline elapsed (in queue, or by completion)."""
+
+
+class StalenessExceeded(RuntimeError):
+    """The serving snapshot is older than the configured
+    ``max_staleness_s`` — degraded serving past its freshness contract."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +107,7 @@ class _Pending(NamedTuple):
     future: "Future"
     t_submit: float    # perf_counter at caller submission (latency stamp)
     t_enq: float       # monotonic at enqueue (max-delay clock)
+    deadline_t: Optional[float] = None   # monotonic cutoff (None = no SLO)
 
 
 class _MicroBatcher:
@@ -112,6 +133,7 @@ class _MicroBatcher:
         self._queues: "Dict[tuple, deque]" = {}
         self._depth = 0
         self._closed = False
+        self._cancel = False
         self._m_depth = reg.gauge(
             "figmn_serve_queue_depth",
             "requests waiting in the micro-batch admission queue")
@@ -136,7 +158,8 @@ class _MicroBatcher:
             return self._depth
 
     def submit(self, kind: str, xs, targets, return_var: bool,
-               t_submit: float) -> "Future":
+               t_submit: float, deadline_t: Optional[float] = None
+               ) -> "Future":
         fe = self._fe
         xs = jnp.asarray(xs, fe.cfg.dtype)
         sig = inference._as_targets(targets) if kind == "predict" else None
@@ -154,13 +177,18 @@ class _MicroBatcher:
                 raise RuntimeError("micro-batcher is closed")
             if self._depth >= self.acfg.queue_cap:
                 self._m_rejected.inc()
-                raise RuntimeError(
+                # one flush cadence is when queue room next appears —
+                # the machine-readable backoff hint
+                raise AdmissionRejected(
                     f"admission queue full ({self.acfg.queue_cap} requests "
-                    "waiting): request rejected — retry with backoff or "
-                    "raise AdmissionConfig.queue_cap")
+                    "waiting): request rejected — retry after "
+                    f"{self.acfg.max_delay_s:g}s or raise "
+                    "AdmissionConfig.queue_cap",
+                    retry_after_s=self.acfg.max_delay_s)
             key = (kind, sig, bool(return_var))
             self._queues.setdefault(key, deque()).append(
-                _Pending(xs, n, fut, t_submit, time.monotonic()))
+                _Pending(xs, n, fut, t_submit, time.monotonic(),
+                         deadline_t))
             self._depth += 1
             self._m_depth.set(self._depth)
             self._cv.notify()
@@ -172,6 +200,16 @@ class _MicroBatcher:
             with self._cv:
                 while not self._closed and self._depth == 0:
                     self._cv.wait()
+                if self._closed and self._cancel:
+                    # deterministic shutdown: every queued future resolves
+                    # NOW, with CancelledError — no caller blocks forever
+                    for dq in self._queues.values():
+                        for p in dq:
+                            p.future.cancel()
+                    self._queues.clear()
+                    self._depth = 0
+                    self._m_depth.set(0)
+                    return
                 if self._depth == 0:       # closed and drained
                     return
                 # oldest head across classes decides what flushes next
@@ -194,6 +232,20 @@ class _MicroBatcher:
     def _flush(self, key: tuple, batch: "List[_Pending]") -> None:
         kind, sig, return_var = key
         fe = self._fe
+        # expired deadlines resolve exceptionally BEFORE the dispatch —
+        # no device work is spent on an answer nobody is waiting for
+        now = time.monotonic()
+        live = []
+        for p in batch:
+            if p.deadline_t is not None and now > p.deadline_t:
+                p.future.set_exception(DeadlineExceeded(
+                    f"request deadline elapsed after "
+                    f"{now - p.t_enq:.4f}s in queue"))
+            else:
+                live.append(p)
+        batch = live
+        if not batch:
+            return
         xs = (batch[0].xs if len(batch) == 1
               else jnp.concatenate([p.xs for p in batch], axis=0))
         self._m_batch_reqs.observe(len(batch))
@@ -214,10 +266,14 @@ class _MicroBatcher:
             fe._finish(kind, p.n, p.t_submit, published_t)
             p.future.set_result(res)
 
-    def close(self) -> None:
-        """Drain: flush everything queued, then stop the thread."""
+    def close(self, cancel_pending: bool = False) -> None:
+        """Stop the flush thread.  Default drains (every queued future
+        resolves with its result); ``cancel_pending=True`` resolves every
+        queued future with CancelledError instead — either way, no future
+        is left dangling."""
         with self._cv:
             self._closed = True
+            self._cancel = cancel_pending
             self._cv.notify_all()
         self._thread.join()
 
@@ -242,8 +298,17 @@ class ScoringFrontend:
                  registry: Optional[obs_registry.Registry] = None,
                  cost_table=None, device: Optional[str] = None,
                  admission: Optional[AdmissionConfig] = None,
-                 factor_cache_size: int = 16):
+                 factor_cache_size: int = 16,
+                 max_staleness_s: Optional[float] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.cfg = cfg
+        # serving degradation contract: during fleet recovery reads keep
+        # answering from the last good snapshot, but never one older than
+        # max_staleness_s (None = unbounded); retry resubmits async
+        # requests bounced by admission control (budgeted backoff+jitter)
+        self.max_staleness_s = max_staleness_s
+        self.retry = retry
+        self._degraded_reason: Optional[str] = None
         # serving-side shortlist width: explicit override wins, else the
         # config's; 0 ⇒ dense scoring
         self.shortlist_c = int(cfg.shortlist_c if shortlist_c is None
@@ -279,6 +344,13 @@ class ScoringFrontend:
             for kind in ("score", "predict")}
         self._m_points = reg.counter(
             "figmn_serve_points_total", "points scored/predicted")
+        self._m_degraded_total = reg.counter(
+            "figmn_serve_degraded_total",
+            "requests answered from the last good snapshot while the "
+            "fleet was recovering")
+        self._m_degraded = reg.gauge(
+            "figmn_serve_degraded",
+            "1 while serving is in degraded mode (fleet recovering)")
         self.batcher: Optional[_MicroBatcher] = (
             _MicroBatcher(self, admission, reg)
             if admission is not None else None)
@@ -310,6 +382,29 @@ class ScoringFrontend:
     def version(self) -> int:
         return self._version
 
+    # -- degraded mode (supervisor side) --------------------------------
+
+    def set_degraded(self, reason: str) -> None:
+        """Enter degraded serving: reads keep answering from the last
+        good snapshot (subject to ``max_staleness_s``) and are counted
+        under ``figmn_serve_degraded_total``.  Called by the supervisor
+        at quarantine; idempotent (first reason wins until cleared)."""
+        if self._degraded_reason is None:
+            self._degraded_reason = reason
+        self._m_degraded.set(1)
+
+    def clear_degraded(self) -> None:
+        self._degraded_reason = None
+        self._m_degraded.set(0)
+
+    @property
+    def degraded(self) -> bool:
+        return self._degraded_reason is not None
+
+    @property
+    def degraded_reason(self) -> Optional[str]:
+        return self._degraded_reason
+
     @property
     def ready(self) -> bool:
         return self._snapshot is not None
@@ -335,6 +430,14 @@ class ScoringFrontend:
             published_t = self._published_t
         if state is None:
             raise RuntimeError("no consolidated snapshot published yet")
+        if (self.max_staleness_s is not None and published_t is not None):
+            age = time.monotonic() - published_t
+            if age > self.max_staleness_s:
+                raise StalenessExceeded(
+                    f"serving snapshot is {age:.3f}s old (bound "
+                    f"{self.max_staleness_s:g}s)"
+                    + (f"; degraded: {self._degraded_reason}"
+                       if self._degraded_reason else ""))
         xs = jnp.asarray(xs, self.cfg.dtype)
         with span(f"serve.{kind}", n=int(xs.shape[0])):
             if kind == "score":
@@ -366,34 +469,64 @@ class ScoringFrontend:
         self.latency.observe(time.perf_counter() - t_submit)
         if published_t is not None:
             self.staleness.observe(time.monotonic() - published_t)
+        if self._degraded_reason is not None:
+            self._m_degraded_total.inc()
         self._m_requests[kind].inc()
         self._m_points.inc(n)
         with self._lock:        # += races across pool threads otherwise
             self.served += n
 
     def _serve(self, kind: str, xs, targets, t_submit: float,
-               return_var: bool = False):
-        """One timed read: execute + accounting."""
+               return_var: bool = False,
+               deadline_s: Optional[float] = None):
+        """One timed read: execute + accounting.  A ``deadline_s`` turns
+        an SLO miss into DeadlineExceeded AFTER accounting (the latency
+        sample still lands — overload must stay visible to the
+        autoscaler even when callers give up)."""
         out, published_t = self._execute(kind, xs, targets, return_var)
         lead = out[0] if isinstance(out, tuple) else out
+        elapsed = time.perf_counter() - t_submit
         self._finish(kind, int(lead.shape[0]), t_submit, published_t)
+        if deadline_s is not None and elapsed > deadline_s:
+            raise DeadlineExceeded(
+                f"{kind} completed in {elapsed:.4f}s > deadline "
+                f"{deadline_s:g}s")
         return out
 
-    def score(self, xs) -> Array:
-        """(N,) mixture log-densities under the current snapshot."""
-        return self._serve("score", xs, None, time.perf_counter())
+    def _submit_async(self, kind: str, xs, targets, return_var: bool,
+                      deadline_s: Optional[float]) -> "Future":
+        t = time.perf_counter()
+        if self.batcher is not None:
+            deadline_t = (time.monotonic() + deadline_s
+                          if deadline_s is not None else None)
 
-    def score_async(self, xs) -> "Future[Array]":
+            def _try():
+                return self.batcher.submit(kind, xs, targets, return_var,
+                                           t, deadline_t)
+
+            if self.retry is not None:
+                return self.retry.call(_try, retry_on=AdmissionRejected)
+            return _try()
+        return self._pool.submit(self._serve, kind, xs, targets, t,
+                                 return_var, deadline_s)
+
+    def score(self, xs, deadline_s: Optional[float] = None) -> Array:
+        """(N,) mixture log-densities under the current snapshot."""
+        return self._serve("score", xs, None, time.perf_counter(),
+                           deadline_s=deadline_s)
+
+    def score_async(self, xs, deadline_s: Optional[float] = None
+                    ) -> "Future[Array]":
         """Queue a score; the returned future resolves off the caller's
         thread, against whichever snapshot is current when it runs.  With
         admission control configured, compatible queued scores coalesce
-        into one device dispatch."""
-        t = time.perf_counter()
-        if self.batcher is not None:
-            return self.batcher.submit("score", xs, None, False, t)
-        return self._pool.submit(self._serve, "score", xs, None, t)
+        into one device dispatch; a request still queued when its
+        ``deadline_s`` elapses resolves with DeadlineExceeded instead of
+        spending device work."""
+        return self._submit_async("score", xs, None, False, deadline_s)
 
-    def predict(self, xs, targets, return_var: bool = False):
+    def predict(self, xs, targets, return_var: bool = False,
+                deadline_s: Optional[float] = None):
         """(N, o) eq. 27 conditional means under the current snapshot.
 
         Same serving contract as ``score``: snapshot-atomic (the state is
@@ -406,24 +539,26 @@ class ScoringFrontend:
         ``FactorCache`` — bit-identically.  return_var=True additionally
         returns the (N, o) conditional variance as a (mean, var) pair."""
         return self._serve("predict", xs, targets, time.perf_counter(),
-                           return_var)
+                           return_var, deadline_s=deadline_s)
 
-    def predict_async(self, xs, targets, return_var: bool = False
-                      ) -> "Future":
+    def predict_async(self, xs, targets, return_var: bool = False,
+                      deadline_s: Optional[float] = None) -> "Future":
         """Queue a conditional read; resolves off the caller's thread
         against whichever snapshot is current when it runs — the serving
         front door keeps answering eq. 27 while the coordinator is mid
         ingest.  With admission control configured, compatible queued
         requests (same targets, same return_var) coalesce into one device
-        dispatch."""
-        t = time.perf_counter()
-        if self.batcher is not None:
-            return self.batcher.submit("predict", xs, targets, return_var,
-                                       t)
-        return self._pool.submit(self._serve, "predict", xs, targets, t,
-                                 return_var)
+        dispatch; expired deadlines resolve with DeadlineExceeded before
+        any device work."""
+        return self._submit_async("predict", xs, targets, return_var,
+                                  deadline_s)
 
-    def close(self) -> None:
+    def close(self, cancel_pending: bool = False) -> None:
+        """Shut the read path down with every pending future resolved
+        deterministically: the default drains (queued work completes and
+        resolves with results); ``cancel_pending=True`` resolves queued
+        futures with CancelledError instead.  In-flight device work
+        always runs to completion — only un-started work is cancelled."""
         if self.batcher is not None:
-            self.batcher.close()
-        self._pool.shutdown(wait=True)
+            self.batcher.close(cancel_pending)
+        self._pool.shutdown(wait=True, cancel_futures=cancel_pending)

@@ -22,6 +22,7 @@ import dataclasses
 import threading
 from typing import Dict, List, Sequence, Tuple
 
+from repro.ft.supervisor import RecoveryEvent  # noqa: F401  (re-export)
 from repro.obs import export as obs_export
 
 
@@ -61,14 +62,28 @@ class _Counters:
     published snapshot can never change under a reader."""
     events: Tuple[ConsolidationEvent, ...] = ()
     scale_events: Tuple[ScaleEvent, ...] = ()
+    recovery_events: Tuple[RecoveryEvent, ...] = ()
     total_consolidations: int = 0
     total_merges: int = 0
     scale_ups: int = 0
     scale_downs: int = 0
+    recoveries: int = 0             # "rejoin" stages
+    points_lost: int = 0            # "rejoin"/"dropped" loss totals
+    points_replayed: int = 0
+    #: counter totals absorbed from replicas retired by scale-down/drain —
+    #: without this, a drained replica's ingested/quarantined counts would
+    #: silently vanish from the fleet aggregate and break the fleet-level
+    #: mass identity (sum(sp) itself survives via the drain merge)
+    retired: Tuple[Tuple[str, int], ...] = ()
 
 
 class FleetTelemetry:
     """Consolidation/scale event log + cross-replica summary aggregation."""
+
+    #: per-replica counter totals summed into the fleet aggregate (live
+    #: replicas + the retired accumulator)
+    AGG_KEYS = ("total_points", "created", "pruned", "merged",
+                "spawned", "drift_alarms", "chunks", "quarantined")
 
     def __init__(self, capacity: int = 1024):
         self.capacity = int(capacity)
@@ -93,6 +108,31 @@ class FleetTelemetry:
                 scale_ups=c.scale_ups + (ev.action == "up"),
                 scale_downs=c.scale_downs + (ev.action == "down"))
 
+    def record_recovery(self, ev: RecoveryEvent) -> None:
+        """One rung of the supervisor's ladder (ft/supervisor.py):
+        quarantine, rejoin, straggler drain, or a dropped delivery."""
+        with self._lock:
+            c = self._counters
+            self._counters = dataclasses.replace(
+                c, recovery_events=(c.recovery_events
+                                    + (ev,))[-self.capacity:],
+                recoveries=c.recoveries + (ev.stage == "rejoin"),
+                points_lost=c.points_lost + ev.points_lost,
+                points_replayed=c.points_replayed + ev.points_replayed)
+
+    def absorb_retired(self, replica_summary: Dict) -> None:
+        """Fold a retiring replica's counter totals into the fleet
+        aggregate before the replica object is dropped (scale-down /
+        straggler drain) — its points were really ingested and must keep
+        counting toward the fleet totals and the mass identity."""
+        with self._lock:
+            c = self._counters
+            acc = dict(c.retired)
+            for k in self.AGG_KEYS:
+                acc[k] = acc.get(k, 0) + int(replica_summary.get(k, 0))
+            self._counters = dataclasses.replace(
+                c, retired=tuple(sorted(acc.items())))
+
     # -- readers (any thread; lock-free) -------------------------------
 
     def snapshot(self) -> _Counters:
@@ -106,6 +146,10 @@ class FleetTelemetry:
     @property
     def scale_events(self) -> List[ScaleEvent]:
         return list(self._counters.scale_events)
+
+    @property
+    def recovery_events(self) -> List[RecoveryEvent]:
+        return list(self._counters.recovery_events)
 
     @property
     def total_consolidations(self) -> int:
@@ -128,10 +172,10 @@ class FleetTelemetry:
         the same snap for the summary AND the event dumps, or the file
         could show N+1 consolidations above an N-entry event list."""
         last = snap.events[-1] if snap.events else None
-        agg_keys = ("total_points", "created", "pruned", "merged",
-                    "spawned", "drift_alarms", "chunks")
+        retired = dict(snap.retired)
         agg = {k: sum(int(s.get(k, 0)) for s in replica_summaries)
-               for k in agg_keys}
+               + retired.get(k, 0)
+               for k in self.AGG_KEYS}
         # replicas run concurrently in production, so fleet throughput is
         # the SUM of replica rates (each rate is that replica's exact
         # points/wall over its own stream).  NaN-aware: a replica whose
@@ -150,6 +194,9 @@ class FleetTelemetry:
             "consolidation_merges": snap.total_merges,
             "scale_ups": snap.scale_ups,
             "scale_downs": snap.scale_downs,
+            "recoveries": snap.recoveries,
+            "points_lost": snap.points_lost,
+            "points_replayed": snap.points_replayed,
             "snapshot_version": last.version if last else 0,
             "global_active_k": last.active_out if last else 0,
             "global_sp_mass": last.sp_mass if last else 0.0,
@@ -166,4 +213,6 @@ class FleetTelemetry:
             "consolidations": [dataclasses.asdict(e)
                                for e in snap.events],
             "scale_events": [dataclasses.asdict(e)
-                             for e in snap.scale_events]})
+                             for e in snap.scale_events],
+            "recovery_events": [dataclasses.asdict(e)
+                                for e in snap.recovery_events]})

@@ -1,2 +1,26 @@
-"""repro.ft — fault tolerance: FIGMN anomaly detection on training
-telemetry, straggler detection/mitigation, auto-resume."""
+"""repro.ft — fault tolerance for the stream fleet.
+
+  anomaly.py    FIGMN anomaly detection on training telemetry
+  straggler.py  per-host chunk-latency divergence detection (the gauge the
+                supervisor escalates into drains)
+  retry.py      seeded, budgeted backoff+jitter RetryPolicy (chunk retry,
+                supervised re-delivery, serving resubmission)
+  faults.py     deterministic seeded fault injection (crash / hang /
+                poison / checkpoint corruption) as chunk hooks on real
+                StreamRuntime replicas
+  supervisor.py FleetSupervisor: heartbeat watchdog + escalating recovery
+                ladder (chunk retry → quarantine/re-route → checkpoint
+                restore + rejoin) with exact mass accounting
+"""
+from repro.ft.faults import (Fault, FaultInjector, FaultPlan,
+                             InjectedCrash, corrupt_npz)
+from repro.ft.retry import RetryPolicy
+from repro.ft.straggler import StragglerConfig, StragglerMonitor
+from repro.ft.supervisor import (FleetSupervisor, RecoveryEvent,
+                                 SupervisorConfig)
+
+__all__ = [
+    "Fault", "FaultInjector", "FaultPlan", "FleetSupervisor",
+    "InjectedCrash", "RecoveryEvent", "RetryPolicy", "StragglerConfig",
+    "StragglerMonitor", "SupervisorConfig", "corrupt_npz",
+]

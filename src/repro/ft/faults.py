@@ -1,0 +1,207 @@
+"""Deterministic, seeded fault injection for the stream fleet.
+
+Chaos testing only means something when the chaos replays: a ``FaultPlan``
+is a frozen list of faults pinned to (replica id, chunk index), and the
+``FaultInjector`` installs them as *chunk hooks* on real ``StreamRuntime``
+replicas — the injected crash unwinds through the actual chunk-retry /
+supervisor / checkpoint-restore code paths, never through mocks.  The same
+plan against the same stream produces the same failure sequence, the same
+recovery ladder walk, and (poison patterns being seeded) the same
+quarantined rows.
+
+Fault kinds:
+
+  crash        raise ``InjectedCrash`` at the top of chunk ``chunk``
+               (before any state mutation — the chunk is cleanly
+               un-applied, exactly like a worker dying between chunks).
+               ``times`` > 1 makes the fault sticky across retries, which
+               is how a test escalates past the chunk-retry rung to the
+               supervisor's quarantine/restore rung.
+  hang         sleep ``delay_s`` inside the chunk (a stalled device /
+               network partition / GC pause): heartbeats stop, the
+               supervisor's watchdog trips, and the hung thread is left
+               to finish in the background.
+  poison       replace a seeded fraction of the chunk's rows with
+               NaN/Inf before the ingest body sees them — the finite
+               guard (stream.ingest.finite_guard) must quarantine them
+               before they can touch Λ.
+  corrupt_ckpt flip bytes in the replica's NEWEST on-disk checkpoint
+               payload at the chunk boundary — recovery must then fall
+               back to an earlier intact step (CheckpointManager
+               verification fallback) and account the extra lost points.
+
+Hooks are installed with ``FaultInjector.attach(rid, runtime)`` (the
+coordinator exposes ``install_faults``); each fires at most ``times``
+times and then disarms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+KINDS = ("crash", "hang", "poison", "corrupt_ckpt")
+
+
+class InjectedCrash(RuntimeError):
+    """A planned replica death (distinguishable from organic failures in
+    test assertions, indistinguishable in the recovery code paths — the
+    supervisor handles it like any escaped exception)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One planned fault at (replica ``rid``, chunk ``chunk``).
+
+    times:    how many firings before the fault disarms.  For ``crash``,
+              1 = transient (absorbed by the chunk-retry rung); larger
+              values out-stick the retry budget and escalate to the
+              supervisor.
+    delay_s:  hang duration (``hang`` only).
+    fraction: share of the chunk's rows to poison (``poison`` only);
+              at least one row is always poisoned.
+    """
+    kind: str
+    rid: int
+    chunk: int
+    times: int = 1
+    delay_s: float = 0.0
+    fraction: float = 0.25
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind must be one of {KINDS}")
+        if self.times < 1:
+            raise ValueError("times must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A frozen chaos schedule; ``seed`` keys every random pattern."""
+    faults: Tuple[Fault, ...] = ()
+    seed: int = 0
+
+    def for_replica(self, rid: int) -> List[Fault]:
+        return [f for f in self.faults if f.rid == rid]
+
+
+def corrupt_npz(path: str, seed: int = 0, n_bytes: int = 16) -> None:
+    """Flip ``n_bytes`` seeded byte positions in the middle of ``path``
+    (skipping the zip header region so the file stays *openable* but its
+    content hashes — or CRCs — no longer match)."""
+    data = bytearray(open(path, "rb").read())
+    if len(data) < 256:
+        raise ValueError(f"{path} too small to corrupt meaningfully")
+    rng = np.random.default_rng(seed)
+    lo, hi = 128, len(data) - 64
+    for pos in rng.integers(lo, hi, size=n_bytes):
+        data[int(pos)] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(data)
+
+
+class _ReplicaHook:
+    """The chunk hook one (injector, rid, runtime) triple installs.
+
+    StreamRuntime hook protocol (stream/runtime.py):
+      on_chunk_start(chunk_idx, xc_host) -> Optional[np.ndarray]
+          may raise, sleep, or return replacement host rows;
+      on_chunk_end(chunk_idx, n_points, latency_s)
+          observation only (the heartbeat hook uses it; faults do not).
+
+    Keyed on the runtime's own ``chunk_idx`` clock, so a fault pinned to
+    chunk n fires on the n-th chunk the replica ingests regardless of how
+    the coordinator sliced the stream into rounds.
+    """
+
+    def __init__(self, injector: "FaultInjector", rid: int, runtime):
+        self._inj = injector
+        self.rid = rid
+        self._runtime = runtime
+        self._armed: Dict[int, List[Fault]] = {}
+        self._fired: Dict[Tuple[str, int], int] = {}
+        for f in injector.plan.for_replica(rid):
+            self._armed.setdefault(f.chunk, []).append(f)
+
+    def _take(self, chunk_idx: int) -> List[Fault]:
+        out = []
+        for f in self._armed.get(chunk_idx, []):
+            key = (f.kind, f.chunk)
+            n = self._fired.get(key, 0)
+            if n < f.times:
+                self._fired[key] = n + 1
+                out.append(f)
+        return out
+
+    def on_chunk_start(self, chunk_idx: int, xc_host: np.ndarray
+                       ) -> Optional[np.ndarray]:
+        replacement = None
+        for f in self._take(chunk_idx):
+            self._inj.record(f, self.rid, chunk_idx)
+            if f.kind == "corrupt_ckpt":
+                self._corrupt_newest()
+            elif f.kind == "hang":
+                time.sleep(f.delay_s)
+            elif f.kind == "poison":
+                replacement = self._poison(
+                    replacement if replacement is not None else xc_host, f)
+            elif f.kind == "crash":
+                raise InjectedCrash(
+                    f"injected crash: replica {self.rid} chunk {chunk_idx}")
+        return replacement
+
+    def _poison(self, xc_host: np.ndarray, f: Fault) -> np.ndarray:
+        rng = np.random.default_rng(
+            (self._inj.plan.seed, self.rid, f.chunk))
+        xs = np.array(xc_host, np.float32, copy=True)
+        n = xs.shape[0]
+        k = max(int(round(f.fraction * n)), 1)
+        rows = rng.choice(n, size=min(k, n), replace=False)
+        # half NaN, half Inf — both must be caught by the finite guard
+        for i, r in enumerate(sorted(int(r) for r in rows)):
+            xs[r, int(rng.integers(0, xs.shape[1]))] = (
+                np.nan if i % 2 == 0 else np.inf)
+        return xs
+
+    def _corrupt_newest(self) -> None:
+        ckpt = self._runtime.ckpt
+        if ckpt is None:
+            return
+        ckpt.wait()                      # never race the async writer
+        step = ckpt.latest_step()
+        if step is None:
+            return
+        path = os.path.join(ckpt.dir, f"step_{step}", "host_0.npz")
+        corrupt_npz(path, seed=self._inj.plan.seed ^ self.rid)
+        self._inj.corrupted_steps.append((self.rid, int(step)))
+
+
+class FaultInjector:
+    """Installs a FaultPlan onto live runtimes and logs every firing."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        #: (kind, rid, chunk_idx, monotonic time) per firing — the chaos
+        #: log tests and the faults benchmark assert against
+        self.fired: List[Tuple[str, int, int, float]] = []
+        self.corrupted_steps: List[Tuple[int, int]] = []
+
+    def record(self, f: Fault, rid: int, chunk_idx: int) -> None:
+        self.fired.append((f.kind, rid, chunk_idx, time.monotonic()))
+
+    def first_fired_t(self, kind: Optional[str] = None) -> Optional[float]:
+        for k, _, _, t in self.fired:
+            if kind is None or k == kind:
+                return t
+        return None
+
+    def attach(self, rid: int, runtime) -> None:
+        """Install this plan's faults for replica ``rid`` as a chunk hook
+        on ``runtime``.  Injection hooks go FIRST so downstream hooks
+        (heartbeats) observe the faulted chunk, not the pristine one."""
+        if not self.plan.for_replica(rid):
+            return
+        runtime.chunk_hooks.insert(0, _ReplicaHook(self, rid, runtime))

@@ -1,0 +1,79 @@
+"""Budgeted exponential backoff with deterministic jitter.
+
+One policy object is shared by every retry loop in the fault-tolerance
+stack — the StreamRuntime's chunk-level retry (recovery-ladder rung 1),
+the FleetSupervisor's restore attempts, and the ScoringFrontend's
+admission-rejection resubmits — so backoff behaviour is configured once
+and tested once.
+
+Determinism: the jitter stream is seeded (``seed``), so the exact delay
+sequence of a retried run is reproducible — the property the seeded
+fault-injection harness (ft/faults.py) needs to make chaos runs
+replayable.  Budgeting: ``max_retries`` bounds attempts and ``budget_s``
+bounds the TOTAL sleep a single operation may accumulate, whichever is
+hit first (an unbounded retry loop against a sticky fault is just a
+slower hang).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff: delay_i = min(base*2^i, max_delay) * jitter.
+
+    max_retries: retry attempts AFTER the first try (0 disables retries).
+    base_delay_s/max_delay_s: the exponential envelope.
+    jitter: relative half-width of the multiplicative jitter band —
+            each delay is scaled by U(1-jitter, 1+jitter) from the seeded
+            stream (decorrelates replica retry storms without giving up
+            reproducibility).
+    budget_s: cap on the TOTAL sleep one ``delays()`` walk may emit;
+            past it the iterator stops even if max_retries remain.
+    """
+    max_retries: int = 3
+    base_delay_s: float = 0.01
+    max_delay_s: float = 1.0
+    jitter: float = 0.25
+    budget_s: float = 30.0
+    seed: int = 0
+
+    def delays(self, salt: int = 0) -> Iterator[float]:
+        """The (deterministic) backoff delay sequence for one operation.
+
+        ``salt`` decorrelates concurrent walkers (e.g. per replica id)
+        while keeping each walker's sequence reproducible."""
+        rng = np.random.default_rng((self.seed, salt))
+        spent = 0.0
+        for i in range(self.max_retries):
+            d = min(self.base_delay_s * (2.0 ** i), self.max_delay_s)
+            if self.jitter > 0:
+                d *= 1.0 + self.jitter * float(rng.uniform(-1.0, 1.0))
+            if spent + d > self.budget_s:
+                return
+            spent += d
+            yield d
+
+    def call(self, fn: Callable, *, retry_on=Exception, salt: int = 0,
+             on_retry: Optional[Callable[[int, BaseException], None]] = None):
+        """Run ``fn()`` under this policy: sleep-and-retry on ``retry_on``
+        until the delay budget is exhausted, then let the error surface.
+        ``on_retry(attempt, exc)`` observes each retry (metrics hook)."""
+        attempt = 0
+        delays = self.delays(salt=salt)
+        while True:
+            try:
+                return fn()
+            except retry_on as e:
+                d = next(delays, None)
+                if d is None:
+                    raise
+                attempt += 1
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                time.sleep(d)

@@ -1,0 +1,415 @@
+"""FleetSupervisor — watchdog + escalating recovery for replica fleets.
+
+The paper's single-pass contract (every point is discarded after its
+update) makes replica failure expensive in a way batch learners never
+feel: un-checkpointed work is gone *forever*.  The supervisor's job is to
+(a) notice failure fast, (b) climb an escalating recovery ladder, and
+(c) never lie about what was lost — the design contract is **exact mass
+accounting**: with pruning disabled, every ingested point adds exactly 1
+to some replica's ``sum(sp)`` (gate-pass posteriors sum to 1; gate-fail
+creates a component with sp=1), so at any quiesced moment
+
+    Σ_replicas sum(sp)  +  points_lost  −  points_replayed
+        +  points_quarantined  ==  points ingested
+
+holds to float-sum rounding.  ``points_lost`` is exported as
+``figmn_points_lost_total`` and pinned by test/benchmark.
+
+Detection (per supervised ingest): replicas stamp a **heartbeat at every
+chunk boundary** (a chunk hook installed by ``attach``); the shard runs on
+a worker thread while the supervisor polls for (1) an escaped exception —
+crash, (2) heartbeat silence beyond ``heartbeat_timeout_s`` — hang, (3)
+total wall beyond ``ingest_deadline_s`` — deadline overrun.
+
+The recovery ladder:
+
+  rung 1  chunk retry — installed ON the replicas as
+          ``RuntimeConfig.chunk_retry`` (stream/runtime.py): transient
+          faults are absorbed with backoff + seeded jitter and never
+          reach the supervisor.
+  rung 2  quarantine + re-route — the replica is masked out of the
+          ShardRouter (its hash-ring arcs fall to the clockwise
+          neighbours, ~1/n of keys remap), the failed shard is
+          immediately re-routed to the surviving replicas, and serving
+          enters degraded mode (ScoringFrontend keeps answering from the
+          last good snapshot).
+  rung 3  restore + rejoin — at the next consolidation boundary
+          (``tick``), the replica restores from its newest INTACT
+          checkpoint at or before the pre-failure step (checkpoint
+          verification + fallback, checkpoint/manager.py); with no intact
+          checkpoint it resets to an empty state.  The delta between the
+          points it had delivered and the points its restored state
+          contains is accounted: positive → ``points_lost``, negative →
+          ``points_replayed``.  Then it is unmasked and rejoins routing.
+
+Straggler escalation (graduating ft/straggler.py from gauge-only): at
+consolidation boundaries ``escalate_stragglers`` consults the monitor's
+striking ``check()``; a persistent straggler is DRAINED into a peer via
+the coordinator's mass-conserving ``scale_down`` — its pool survives, its
+slot does not.
+
+This module deliberately imports nothing from ``repro.fleet`` (the
+coordinator imports *us*); the coordinator is duck-typed through the
+attributes it already exposes (replicas, replica_ids, router, scoring,
+telemetry, straggler, scale_down).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutTimeout
+from typing import Dict, List, Optional
+
+from repro.ft.retry import RetryPolicy
+from repro.obs import registry as obs_registry
+
+#: reason classes for the figmn_replica_failures_total label
+FAILURE_REASONS = ("crash", "heartbeat_timeout", "deadline_overrun",
+                   "straggler")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryEvent:
+    """One step of the supervisor's ladder, logged to FleetTelemetry."""
+    stage: str              # "quarantine" | "rejoin" | "drain" | "dropped"
+    rid: int                # replica id (or -1 for fleet-wide drops)
+    reason: str             # failure class + detail
+    round_idx: int          # coordinator ingest-round clock
+    t_monotonic: float      # when (time.monotonic) — benchmarks diff this
+    detect_latency_s: float = 0.0   # silence span at detection
+    points_lost: int = 0            # rejoin: delivered-but-unrecovered
+    points_replayed: int = 0        # rejoin: recovered-beyond-delivered
+    restored_step: int = -1         # rejoin: checkpoint step (-1 = reset)
+    wall_s: float = 0.0             # quarantine→rejoin wall (recovery time)
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    """Watchdog + ladder knobs.
+
+    heartbeat_timeout_s: chunk-boundary silence that reads as a hang.
+                         Must exceed the worst honest chunk latency
+                         (device compute + chunk retries' backoff).
+    ingest_deadline_s:   whole-shard wall deadline (0 disables) — catches
+                         a replica that heartbeats but crawls.
+    poll_s:              watchdog poll resolution while a shard runs.
+    retry:               the chunk-retry policy (rung 1) the coordinator
+                         installs on every supervised replica that does
+                         not configure its own.
+    reroute_attempts:    how many times one shard may cascade through
+                         re-routing before its points are declared lost
+                         (guards against correlated fleet-wide failure
+                         turning ingest into an infinite loop).
+    straggler_drain:     escalate the straggler monitor's evictions into
+                         mass-conserving drains (False = gauge-only, the
+                         pre-supervisor behaviour).
+    """
+    heartbeat_timeout_s: float = 30.0
+    ingest_deadline_s: float = 0.0
+    poll_s: float = 0.02
+    retry: RetryPolicy = RetryPolicy()
+    reroute_attempts: int = 2
+    straggler_drain: bool = True
+
+
+@dataclasses.dataclass
+class _Quarantine:
+    rid: int
+    replica: object
+    reason: str
+    failure_class: str
+    t_detected: float
+    #: the hung ingest's future, still running on its daemon thread — the
+    #: replica's state may be mutating under it, so restore waits for
+    #: done() (checked at each tick; the thread is never joined/blocked on)
+    pending: Optional[Future]
+    #: newest checkpoint step that predates the failed ingest call —
+    #: restore must not go past it (a hung thread that later completes
+    #: auto-checkpoints state containing work that was already re-routed)
+    ceiling_step: Optional[int]
+
+
+class _HeartbeatHook:
+    """Chunk hook stamping liveness at every applied chunk boundary."""
+
+    def __init__(self, sup: "FleetSupervisor", rid: int):
+        self._sup = sup
+        self._rid = rid
+
+    def on_chunk_end(self, chunk_idx: int, n_points: int,
+                     latency_s: float) -> None:
+        self._sup.heartbeat(self._rid)
+
+
+class FleetSupervisor:
+    """Owns heartbeats, the watchdog, quarantine state and loss totals."""
+
+    def __init__(self, cfg: SupervisorConfig = SupervisorConfig(),
+                 registry: Optional[obs_registry.Registry] = None):
+        self.cfg = cfg
+        #: rid -> monotonic stamp of the last chunk boundary (GIL-atomic
+        #: dict assignment: written from ingest worker threads, read from
+        #: the watchdog loop)
+        self._hb: Dict[int, float] = {}
+        #: rid -> telemetry.total_points after the last SUCCESSFUL shard —
+        #: the accounting baseline a restore reconciles against
+        self.delivered: Dict[int, int] = {}
+        self.quarantined: Dict[int, _Quarantine] = {}
+        self.points_lost = 0
+        self.points_replayed = 0
+        reg = registry or obs_registry.default_registry()
+        self._m_lost = reg.counter(
+            "figmn_points_lost_total",
+            "points delivered to a replica but unrecoverable after its "
+            "crash (the mass-accounting reconciliation term)")
+        self._m_replayed = reg.counter(
+            "figmn_points_replayed_total",
+            "points double-counted by restoring past the delivery "
+            "baseline (0 under whole-shard delivery semantics)")
+        self._m_failures = {
+            r: reg.counter("figmn_replica_failures_total",
+                           "supervised replica failures by class",
+                           {"reason": r})
+            for r in FAILURE_REASONS}
+        self._m_recoveries = reg.counter(
+            "figmn_replica_recoveries_total",
+            "quarantined replicas restored and rejoined")
+        self._m_quarantined = reg.gauge(
+            "figmn_quarantined_replicas",
+            "replicas currently quarantined (masked out of routing)")
+        self._m_detect_s = reg.histogram(
+            "figmn_detection_latency_seconds",
+            "heartbeat silence span when the watchdog declared a failure")
+
+    # -- wiring ---------------------------------------------------------
+
+    def attach(self, rid: int, runtime) -> None:
+        """Install the heartbeat hook on a replica (idempotent per rid)."""
+        if any(isinstance(h, _HeartbeatHook) and h._rid == rid
+               for h in runtime.chunk_hooks):
+            return
+        runtime.chunk_hooks.append(_HeartbeatHook(self, rid))
+        self.heartbeat(rid)
+
+    def forget(self, rid: int) -> None:
+        """Drop all per-replica state (the replica was retired)."""
+        self._hb.pop(rid, None)
+        self.delivered.pop(rid, None)
+        self.quarantined.pop(rid, None)
+        self._m_quarantined.set(len(self.quarantined))
+
+    def heartbeat(self, rid: int) -> None:
+        self._hb[rid] = time.monotonic()
+
+    def sync_delivered(self, rids, replicas) -> None:
+        """Re-anchor the accounting baselines to the replicas' restored
+        telemetry (fleet resume: the restored counters ARE the delivered
+        truth of the cut)."""
+        for rid, r in zip(rids, replicas):
+            self.delivered[rid] = int(r.telemetry.total_points)
+
+    @property
+    def recovering(self) -> bool:
+        """True while any replica is quarantined — the signal that blocks
+        autoscaler scale-downs and keeps serving in degraded mode."""
+        return bool(self.quarantined)
+
+    # -- supervised delivery (watchdog) ---------------------------------
+
+    def ingest_shard(self, coordinator, rid: int, replica, shard) -> bool:
+        """Run ``replica.ingest(shard)`` under the watchdog.
+
+        True on success (accounting baseline advanced); False means the
+        replica was quarantined — the caller must re-route the shard.
+        The shard runs on its own daemon thread (never a pool: a hung
+        task must not block the next shard's delivery), and the watchdog
+        polls its future at ``poll_s`` while checking heartbeat silence
+        and the deadline.
+        """
+        cfg = self.cfg
+        self.heartbeat(rid)
+        t0 = time.monotonic()
+        fut: Future = Future()
+
+        def _run() -> None:
+            try:
+                fut.set_result(replica.ingest(shard))
+            except BaseException as e:      # noqa: BLE001 — forwarded
+                fut.set_exception(e)
+
+        ceiling = (replica.ckpt.latest_step()
+                   if replica.ckpt is not None else None)
+        threading.Thread(target=_run, daemon=True,
+                         name=f"figmn-shard-{rid}").start()
+        while True:
+            try:
+                fut.result(timeout=cfg.poll_s)
+            except _FutTimeout:
+                now = time.monotonic()
+                silence = now - self._hb.get(rid, t0)
+                if silence > cfg.heartbeat_timeout_s:
+                    self._quarantine(coordinator, rid, replica,
+                                     "heartbeat_timeout",
+                                     f"no chunk boundary for "
+                                     f"{silence:.3f}s", fut, ceiling,
+                                     silence)
+                    return False
+                if (cfg.ingest_deadline_s > 0
+                        and now - t0 > cfg.ingest_deadline_s):
+                    self._quarantine(coordinator, rid, replica,
+                                     "deadline_overrun",
+                                     f"shard wall {now - t0:.3f}s > "
+                                     f"deadline", fut, ceiling, silence)
+                    return False
+            except BaseException as e:      # escaped the chunk retries
+                silence = time.monotonic() - self._hb.get(rid, t0)
+                self._quarantine(coordinator, rid, replica, "crash",
+                                 f"{type(e).__name__}: {e}", None,
+                                 ceiling, silence)
+                return False
+            else:
+                self.delivered[rid] = int(replica.telemetry.total_points)
+                self.heartbeat(rid)
+                return True
+
+    def _quarantine(self, coordinator, rid: int, replica,
+                    failure_class: str, detail: str,
+                    pending: Optional[Future],
+                    ceiling_step: Optional[int],
+                    detect_latency: float) -> None:
+        if rid in self.quarantined:
+            return
+        t = time.monotonic()
+        reason = f"{failure_class}: {detail}"
+        self.quarantined[rid] = _Quarantine(
+            rid=rid, replica=replica, reason=reason,
+            failure_class=failure_class, t_detected=t, pending=pending,
+            ceiling_step=ceiling_step)
+        pos = coordinator.replica_ids.index(rid)
+        try:
+            # mask out of routing: ring arcs fall to the neighbours
+            coordinator.router.set_quarantined(pos, True)
+        except ValueError:
+            # last live replica — nothing to re-route onto; _deliver
+            # will account its shards as dropped until it recovers
+            pass
+        self._m_failures[failure_class].inc()
+        self._m_detect_s.observe(detect_latency)
+        self._m_quarantined.set(len(self.quarantined))
+        coordinator.telemetry.record_recovery(RecoveryEvent(
+            stage="quarantine", rid=rid, reason=reason,
+            round_idx=coordinator.rounds, t_monotonic=t,
+            detect_latency_s=detect_latency))
+        coordinator.scoring.set_degraded(f"replica {rid} {failure_class}")
+
+    def record_dropped(self, coordinator, n: int, detail: str) -> None:
+        """Account points that could not be delivered to ANY replica
+        (every re-route attempt exhausted / whole fleet quarantined)."""
+        self.points_lost += int(n)
+        self._m_lost.inc(int(n))
+        coordinator.telemetry.record_recovery(RecoveryEvent(
+            stage="dropped", rid=-1, reason=detail,
+            round_idx=coordinator.rounds, t_monotonic=time.monotonic(),
+            points_lost=int(n)))
+
+    # -- recovery (consolidation boundary) ------------------------------
+
+    def tick(self, coordinator) -> int:
+        """Rung 3, run at each consolidation boundary: restore + rejoin
+        every quarantined replica whose failed ingest thread has ended.
+        Returns how many replicas rejoined."""
+        recovered = 0
+        for rid in list(self.quarantined):
+            q = self.quarantined[rid]
+            if q.pending is not None and not q.pending.done():
+                # hung thread still running — its state may be mutating
+                # under us; rejoin is deferred to a later boundary
+                continue
+            replica = q.replica
+            step = self._restore(replica, q.ceiling_step)
+            delivered = self.delivered.get(rid, 0)
+            now_pts = int(replica.telemetry.total_points)
+            lost = max(delivered - now_pts, 0)
+            replayed = max(now_pts - delivered, 0)
+            if lost:
+                self.points_lost += lost
+                self._m_lost.inc(lost)
+            if replayed:
+                self.points_replayed += replayed
+                self._m_replayed.inc(replayed)
+            self.delivered[rid] = now_pts
+            pos = coordinator.replica_ids.index(rid)
+            coordinator.router.set_quarantined(pos, False)
+            del self.quarantined[rid]
+            self.heartbeat(rid)
+            recovered += 1
+            self._m_recoveries.inc()
+            coordinator.telemetry.record_recovery(RecoveryEvent(
+                stage="rejoin", rid=rid, reason=q.reason,
+                round_idx=coordinator.rounds,
+                t_monotonic=time.monotonic(),
+                points_lost=lost, points_replayed=replayed,
+                restored_step=-1 if step is None else int(step),
+                wall_s=time.monotonic() - q.t_detected))
+        self._m_quarantined.set(len(self.quarantined))
+        if not self.quarantined:
+            coordinator.scoring.clear_degraded()
+        return recovered
+
+    def _restore(self, replica, ceiling: Optional[int]) -> Optional[int]:
+        """Newest INTACT checkpoint at or before the pre-failure step;
+        empty reset when none exists.  Returns the restored step."""
+        if replica.ckpt is not None and ceiling is not None:
+            for step in reversed(replica.ckpt.all_steps()):
+                if step > ceiling or not replica.ckpt.verify_step(step):
+                    continue
+                if replica.resume(step=step):
+                    return step
+        replica.reset_state()
+        return None
+
+    # -- straggler escalation -------------------------------------------
+
+    def escalate_stragglers(self, coordinator) -> List[int]:
+        """Graduate the straggler monitor from gauge to action: replicas
+        the monitor evicts (``check()``'s strike/patience policy) are
+        drained into a live peer via the coordinator's mass-conserving
+        ``scale_down``.  Runs at consolidation boundaries, right after
+        the monitor was fed the window's latencies."""
+        if not self.cfg.straggler_drain:
+            return []
+        drained: List[int] = []
+        for host in coordinator.straggler.check():
+            try:
+                rid = int(str(host).rsplit("_", 1)[1])
+            except (IndexError, ValueError):
+                continue
+            if rid not in coordinator.replica_ids or rid in self.quarantined:
+                continue
+            peers = [r for r in coordinator.replica_ids
+                     if r != rid and r not in self.quarantined]
+            if not peers:
+                continue            # never drain the last live replica
+            self._m_failures["straggler"].inc()
+            coordinator.telemetry.record_recovery(RecoveryEvent(
+                stage="drain", rid=rid,
+                reason="straggler: persistent chunk-latency divergence",
+                round_idx=coordinator.rounds,
+                t_monotonic=time.monotonic()))
+            coordinator.scale_down(rid, peers[0],
+                                   reason="supervisor straggler drain")
+            self.forget(rid)
+            drained.append(rid)
+        return drained
+
+    # -- manifest round-trip --------------------------------------------
+
+    def export_state(self) -> Dict[str, object]:
+        return {"points_lost": int(self.points_lost),
+                "points_replayed": int(self.points_replayed)}
+
+    def load_state(self, payload: Dict[str, object]) -> None:
+        self.points_lost = int(payload.get("points_lost", 0))
+        self.points_replayed = int(payload.get("points_replayed", 0))

@@ -29,6 +29,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import figmn
 from repro.core.types import FIGMNConfig
 from repro.fleet import AutoscaleConfig, FleetConfig
+from repro.ft import RetryPolicy, SupervisorConfig
 from repro.models import transformer as tr
 from repro.obs import export as obs_export
 from repro.obs import trace as obs_trace
@@ -54,6 +55,24 @@ def main() -> None:
                     help="let the OOD fleet autoscale from 1 replica up "
                          "to --ood-replicas off its own telemetry "
                          "(load skew / budget pressure / drift rate)")
+    ap.add_argument("--ood-supervise", action="store_true",
+                    help="run the OOD fleet under the FleetSupervisor "
+                         "(repro.ft): heartbeat watchdog per replica, "
+                         "chunk retry with backoff+jitter, and the "
+                         "quarantine → re-route → checkpoint-restore "
+                         "recovery ladder with exact mass accounting")
+    ap.add_argument("--ood-heartbeat-timeout", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="supervisor watchdog: quarantine a replica whose "
+                         "chunk boundary goes silent this long (must "
+                         "clear the first-chunk compile; only with "
+                         "--ood-supervise)")
+    ap.add_argument("--ood-max-staleness", type=float, default=None,
+                    metavar="SECONDS",
+                    help="degraded-serving bound: OOD reads fail with "
+                         "StalenessExceeded rather than serve a snapshot "
+                         "older than this (default: serve any last-good "
+                         "snapshot)")
     ap.add_argument("--score-shortlist", type=int, default=0,
                     metavar="C",
                     help="top-C component shortlist for the OOD monitor "
@@ -168,7 +187,12 @@ def main() -> None:
             autoscale=AutoscaleConfig(
                 min_replicas=1,
                 max_replicas=max(args.ood_replicas, 1),
-                cooldown=1) if args.ood_autoscale else None)))
+                cooldown=1) if args.ood_autoscale else None,
+            supervisor=SupervisorConfig(
+                heartbeat_timeout_s=args.ood_heartbeat_timeout,
+                retry=RetryPolicy(seed=args.seed))
+            if args.ood_supervise else None,
+            max_staleness_s=args.ood_max_staleness)))
     monitor.partial_fit(feats)
     summary = monitor.summary()
     # snapshot reads — non-blocking w.r.t. ingestion (score_async /
@@ -188,6 +212,11 @@ def main() -> None:
     monitor.close()
     shortcut = (f"shortlist C={gcfg.shortlist_c}, "
                 if gcfg.shortlist_c > 0 else "")
+    if args.ood_supervise:
+        shortcut += (f"supervised (quarantined="
+                     f"{summary.get('quarantined_replicas', [])}, "
+                     f"recoveries={summary.get('recoveries', 0)}, "
+                     f"lost={summary.get('supervisor_points_lost', 0)}), ")
     print(f"FIGMN OOD fleet active ({summary['replicas']} replicas, "
           f"{shortcut}router load {summary['router_load']}): "
           f"in-dist logp median "

@@ -21,7 +21,9 @@ runs off the hot path at a fixed cadence so jitted shapes stay static.
 """
 from repro.stream.costmodel import CostTable, DispatchDecision
 from repro.stream.drift import DriftConfig, DriftDetector
-from repro.stream.ingest import DoubleBufferedLoader, select_path
+from repro.stream.ingest import (DoubleBufferedLoader,
+                                 NonFiniteChunkError, finite_guard,
+                                 select_path)
 from repro.stream.lifecycle import FailureBuffer, LifecycleConfig
 from repro.stream.runtime import RuntimeConfig, StreamRuntime
 from repro.stream.telemetry import ChunkMetrics, Telemetry
@@ -29,6 +31,7 @@ from repro.stream.telemetry import ChunkMetrics, Telemetry
 __all__ = [
     "ChunkMetrics", "CostTable", "DispatchDecision",
     "DoubleBufferedLoader", "DriftConfig", "DriftDetector",
-    "FailureBuffer", "LifecycleConfig", "RuntimeConfig", "StreamRuntime",
-    "Telemetry", "select_path",
+    "FailureBuffer", "LifecycleConfig", "NonFiniteChunkError",
+    "RuntimeConfig", "StreamRuntime", "Telemetry", "finite_guard",
+    "select_path",
 ]

@@ -83,6 +83,52 @@ def select_path(cfg: FIGMNConfig, *,
     return "scan"
 
 
+NONFINITE_POLICIES = ("drop", "reject", "raise")
+
+
+class NonFiniteChunkError(ValueError):
+    """A chunk carried NaN/Inf rows under ``on_nonfinite="raise"``."""
+
+
+def finite_guard(xc_host: np.ndarray, policy: str = "drop"
+                 ) -> Tuple[np.ndarray, int]:
+    """Quarantine non-finite rows BEFORE they can touch Λ.
+
+    One NaN coordinate reaching the rank-one update poisons a component's
+    (mu, Λ, logdet) forever — and, through consolidation, the global
+    snapshot; the single-pass design has no replay to heal from.  So the
+    guard runs on the host chunk ahead of every device dispatch:
+
+      "drop"   keep only the finite rows (per-row quarantine).  Since
+               chunking never changes the math (the PR-1 invariant), the
+               resulting state is bit-identical to ingesting a stream
+               that never contained the poisoned rows.
+      "reject" quarantine the WHOLE chunk (a poisoned producer is not
+               trusted for the rest of its batch).
+      "raise"  raise NonFiniteChunkError (strict pipelines that must
+               halt on corrupt input).
+
+    Returns ``(kept_rows, n_quarantined)``.  The all-finite fast path
+    returns the input array UNTOUCHED (same object) so the runtime can
+    keep using the already-in-flight device copy — zero overhead beyond
+    one vectorised isfinite sweep.
+    """
+    if policy not in NONFINITE_POLICIES:
+        raise ValueError(
+            f"on_nonfinite must be one of {NONFINITE_POLICIES}")
+    finite = np.isfinite(xc_host).all(axis=1)
+    if finite.all():
+        return xc_host, 0
+    if policy == "raise":
+        bad = int((~finite).sum())
+        raise NonFiniteChunkError(
+            f"{bad}/{xc_host.shape[0]} non-finite rows in chunk "
+            f"(on_nonfinite='raise')")
+    if policy == "reject":
+        return xc_host[:0], int(xc_host.shape[0])
+    return xc_host[finite], int((~finite).sum())
+
+
 class DoubleBufferedLoader:
     """Chunked host→device feed with one chunk of transfer lookahead.
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +32,7 @@ from repro.stream import costmodel
 from repro.stream import drift as drift_mod
 from repro.stream import ingest, lifecycle, telemetry
 from repro.ft.anomaly import AnomalyDetector
+from repro.ft.retry import RetryPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +67,22 @@ class RuntimeConfig:
                       None ⇒ the PR-6 heuristic, bit-compatibly.
     telemetry_anomaly: learn a FIGMN over the runtime's own telemetry
                       (ft.anomaly) and flag anomalous chunks.
+    on_nonfinite:     NaN/Inf row policy, applied by ``ingest.finite_guard``
+                      before any chunk can touch Λ: "drop" quarantines the
+                      bad rows (default — state bit-identical to a stream
+                      that never contained them), "reject" quarantines the
+                      whole chunk, "raise" raises NonFiniteChunkError.
+                      Quarantined rows land in the
+                      figmn_points_quarantined_total counter and the
+                      telemetry's ``quarantined`` total.
+    chunk_retry:      recovery-ladder rung 1 (ft.retry.RetryPolicy): a
+                      chunk whose ingest raises is retried with backoff +
+                      seeded jitter.  Safe because the chunk body is
+                      atomic — ``self.state`` is only reassigned after the
+                      jitted body returns, so a failed attempt leaves the
+                      chunk cleanly un-applied.  None disables (errors
+                      surface immediately); the fleet supervisor installs
+                      its policy on replicas it supervises.
     """
     chunk: int = 256
     path: str = "auto"
@@ -79,6 +96,8 @@ class RuntimeConfig:
     cost_table: Optional[object] = None
     telemetry_anomaly: bool = False
     telemetry_capacity: int = 4096
+    on_nonfinite: str = "drop"
+    chunk_retry: Optional[RetryPolicy] = None
 
 
 class StreamRuntime:
@@ -112,6 +131,21 @@ class StreamRuntime:
             "figmn_dispatch_measured_seconds",
             "last observed per-chunk ingest seconds (pair with "
             "figmn_dispatch_predicted_seconds)")
+        self._m_quarantined = reg.counter(
+            "figmn_points_quarantined_total",
+            "NaN/Inf rows quarantined by the finite guard before they "
+            "could touch the mixture")
+        self._m_chunk_retries = reg.counter(
+            "figmn_chunk_retries_total",
+            "chunk ingest attempts retried (recovery-ladder rung 1)")
+        # Chunk hooks (fault injection, supervisor heartbeats): objects
+        # with optional ``on_chunk_start(chunk_idx, xc_host) ->
+        # Optional[replacement_rows]`` (runs BEFORE the finite guard and
+        # the ingest body; may raise — the failure enters the chunk-retry
+        # ladder) and ``on_chunk_end(chunk_idx, n_points, latency_s)``
+        # (observation only, fires after the chunk applied — the
+        # supervisor's heartbeat stamp).
+        self.chunk_hooks: List[object] = []
         self.state: FIGMNState = figmn.init_state(cfg)
         self.chunk_idx = 0
         # Pool epoch: bumped on EVERY state mutation (chunk ingest,
@@ -169,13 +203,73 @@ class StreamRuntime:
             for xc_dev, xc_host in loader:
                 with span("stream.ingest_chunk", path=self.path,
                           n=int(xc_dev.shape[0])):
-                    self._ingest_chunk(xc_dev, xc_host)
+                    self._ingest_chunk_guarded(xc_dev, xc_host)
             if rc.lifecycle is not None:
                 self._run_lifecycle(final=True)
             self._fold_accept_counter()
             if self.ckpt is not None:
                 self.checkpoint()
         return self.telemetry.summary()
+
+    def _ingest_chunk_guarded(self, xc_dev: Array,
+                              xc_host: np.ndarray) -> None:
+        """One chunk through hooks → finite guard → ingest body, under
+        the chunk-retry policy (recovery-ladder rung 1).
+
+        Retry is EXACT because the chunk body is atomic: ``_ingest_chunk``
+        only reassigns ``self.state`` after the jitted body returns, and
+        the hooks/guard run before any mutation — so a failed attempt
+        leaves the chunk un-applied and a retry replays it from scratch
+        (hooks fire again: a sticky injected fault keeps firing until it
+        disarms or the budget escalates the error to the supervisor).
+        ``NonFiniteChunkError`` is a policy decision, not a transient
+        fault — it surfaces immediately.
+        """
+        policy = self.rcfg.chunk_retry
+        delays = (policy.delays(salt=self.chunk_idx)
+                  if policy is not None else iter(()))
+        while True:
+            try:
+                self._ingest_chunk_once(xc_dev, xc_host)
+                return
+            except ingest.NonFiniteChunkError:
+                raise
+            except Exception:
+                d = next(delays, None)
+                if d is None:
+                    raise
+                self._m_chunk_retries.inc()
+                time.sleep(d)
+
+    def _ingest_chunk_once(self, xc_dev: Array,
+                           xc_host: np.ndarray) -> None:
+        idx = self.chunk_idx
+        xh, replaced = xc_host, False
+        for h in self.chunk_hooks:
+            fn = getattr(h, "on_chunk_start", None)
+            if fn is not None:
+                rep = fn(idx, xh)
+                if rep is not None:
+                    xh, replaced = np.asarray(rep, np.float32), True
+        xh, n_bad = ingest.finite_guard(xh, self.rcfg.on_nonfinite)
+        if n_bad:
+            self.telemetry.add_quarantined(n_bad)
+            self._m_quarantined.inc(n_bad)
+            replaced = True
+        t0 = time.perf_counter()
+        n_in = int(xh.shape[0])
+        if n_in:
+            # the all-finite, un-replaced fast path reuses the device copy
+            # already in flight — the guard costs one host isfinite sweep
+            xd = (jax.device_put(jnp.asarray(xh, self.cfg.dtype))
+                  if replaced else xc_dev)
+            self._ingest_chunk(xd, xh)
+        for h in self.chunk_hooks:
+            fn = getattr(h, "on_chunk_end", None)
+            if fn is not None:
+                # fires for fully-quarantined chunks too (n_in == 0): a
+                # replica that is dropping poison is alive, not hung
+                fn(idx, n_in, time.perf_counter() - t0)
 
     def _ingest_chunk(self, xc: Array, xc_host: np.ndarray) -> None:
         rc, cfg = self.rcfg, self.cfg
@@ -360,6 +454,30 @@ class StreamRuntime:
         if self.detector is not None:
             self.detector.reset_baseline()
 
+    def reset_state(self) -> None:
+        """Recovery of last resort: discard the mixture AND the stream
+        clocks (telemetry counters, chunk index, drift state, spawn
+        buffer) — what the fleet supervisor does when a crashed replica
+        has NO intact checkpoint to restore from.  Every point the
+        replica had ever ingested is gone; the caller (supervisor) is
+        responsible for accounting them as lost, which is why the
+        telemetry reset here must be total — a fresh state with stale
+        ``total_points`` would double-count in the mass identity."""
+        rc = self.rcfg
+        self.state = figmn.init_state(self.cfg)
+        self.state_epoch += 1
+        self.chunk_idx = 0
+        self.buffer = lifecycle.FailureBuffer(
+            rc.lifecycle.buffer_cap if rc.lifecycle else 0, self.cfg.dim)
+        self.detector = (drift_mod.DriftDetector(rc.drift)
+                         if rc.drift else None)
+        self.telemetry = telemetry.Telemetry(
+            capacity=rc.telemetry_capacity,
+            anomaly=AnomalyDetector(dim=3, warmup=16)
+            if rc.telemetry_anomaly else None)
+        self._accepted_dev = jnp.zeros((), jnp.int32)
+        self._pending_fails = []
+
     # ------------------------------------------------------------------
     # scoring / checkpointing
     # ------------------------------------------------------------------
@@ -439,7 +557,10 @@ class StreamRuntime:
         if self.ckpt is None:
             raise RuntimeError("no checkpoint_dir configured")
         if step is None:
-            step = self.ckpt.latest_step()
+            # newest INTACT step: auto-resume must never pick a payload
+            # whose content hashes no longer match its manifest when an
+            # earlier verified step exists (crash-recovery semantics)
+            step = self.ckpt.latest_step(verify=True)
         elif step not in self.ckpt.all_steps():
             return False
         if step is None:

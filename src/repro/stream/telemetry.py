@@ -71,6 +71,10 @@ class Telemetry:
         # and folded in here only at lifecycle boundaries (no per-chunk
         # host sync)
         self.total_accepted = 0
+        # rows quarantined by the non-finite guard (never ingested —
+        # excluded from total_points, reconciled by the fleet's mass
+        # accounting identity)
+        self.total_quarantined = 0
 
     def record(self, m: ChunkMetrics) -> None:
         self.history.append(m)
@@ -91,6 +95,12 @@ class Telemetry:
             })
             if verdict.get("anomalous"):
                 self.anomalies.append(m.idx)
+
+    def add_quarantined(self, n: int) -> None:
+        """Count rows the finite guard quarantined (NaN/Inf) — they never
+        reach the learner, so they are NOT in total_points; the fleet's
+        mass-accounting identity reconciles them explicitly."""
+        self.total_quarantined += int(n)
 
     def add_accepted(self, n: int) -> None:
         """Fold a batch of vmem-path gate accepts into the running total
@@ -120,7 +130,9 @@ class Telemetry:
                "total_chunks": np.asarray(self.total_chunks, np.int64),
                "total_drift_alarms": np.asarray(self.total_drift_alarms,
                                                 np.int64),
-               "total_accepted": np.asarray(self.total_accepted, np.int64)}
+               "total_accepted": np.asarray(self.total_accepted, np.int64),
+               "total_quarantined": np.asarray(self.total_quarantined,
+                                               np.int64)}
         for k in self._COUNTERS:
             out[k] = np.asarray(self.totals[k], np.int64)
         return out
@@ -132,6 +144,7 @@ class Telemetry:
         self.total_drift_alarms = int(payload["total_drift_alarms"])
         # pre-shortlist checkpoints restore via missing="template" ⇒ zeros
         self.total_accepted = int(payload.get("total_accepted", 0))
+        self.total_quarantined = int(payload.get("total_quarantined", 0))
         for k in self._COUNTERS:
             self.totals[k] = int(payload[k])
 
@@ -141,7 +154,8 @@ class Telemetry:
                "total_time_s": np.zeros((), np.float64),
                "total_chunks": np.zeros((), np.int64),
                "total_drift_alarms": np.zeros((), np.int64),
-               "total_accepted": np.zeros((), np.int64)}
+               "total_accepted": np.zeros((), np.int64),
+               "total_quarantined": np.zeros((), np.int64)}
         for k in cls._COUNTERS:
             out[k] = np.zeros((), np.int64)
         return out
@@ -160,6 +174,7 @@ class Telemetry:
             "active_k": last.active_k if last else 0,
             **dict(self.totals),
             "accepted": self.total_accepted,
+            "quarantined": self.total_quarantined,
             "drift_alarms": self.total_drift_alarms,
             "telemetry_anomalies": list(self.anomalies),
         }

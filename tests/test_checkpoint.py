@@ -100,3 +100,52 @@ print("OK")
                          text=True, timeout=300, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))
     assert "OK" in out.stdout, out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# PR 9 satellite (a): integrity-checked discovery + restore fallback
+# ---------------------------------------------------------------------------
+
+def _flip_payload(root, step):
+    path = os.path.join(str(root), f"step_{step}", "host_0.npz")
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(path, "wb").write(data)
+
+
+def test_latest_step_verify_skips_corrupted(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False, keep_n=10)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(s))
+    _flip_payload(tmp_path, 3)
+    assert mgr.latest_step() == 3             # unverified: newest wins
+    assert mgr.latest_step(verify=True) == 2  # verified: newest INTACT
+    assert mgr.all_steps(verify=True) == [1, 2]
+    assert not mgr.verify_step(3)
+    assert mgr.verify_step(2)
+
+
+def test_restore_fallback_to_earlier_intact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False, keep_n=10)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(s))
+    _flip_payload(tmp_path, 3)
+    tmpl = jax.tree.map(jnp.zeros_like, _state())
+    out = mgr.restore(3, tmpl, fallback=True)
+    want = _state(2)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # without fallback the corruption still surfaces
+    with pytest.raises(Exception):
+        mgr.restore(3, tmpl)
+
+
+def test_restore_fallback_exhausted_raises_ioerror(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False, keep_n=10)
+    for s in (1, 2):
+        mgr.save(s, _state(s))
+    _flip_payload(tmp_path, 1)
+    _flip_payload(tmp_path, 2)
+    tmpl = jax.tree.map(jnp.zeros_like, _state())
+    with pytest.raises(IOError):
+        mgr.restore(2, tmpl, fallback=True)

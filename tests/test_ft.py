@@ -78,3 +78,410 @@ def test_int8_quantisation_roundtrip_error():
     err = float(jnp.max(jnp.abs(back - x)))
     assert err <= float(scale) * 0.5 + 1e-7      # half-ULP of the grid
     assert q.dtype == jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# PR 9: seeded fault injection + supervised recovery + degraded serving
+# ---------------------------------------------------------------------------
+
+import tempfile
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import pytest
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import (AdmissionConfig, AdmissionRejected, FleetConfig,
+                         FleetCoordinator, ScoringFrontend,
+                         StalenessExceeded, sp_mass)
+from repro.ft import (Fault, FaultInjector, FaultPlan, RetryPolicy,
+                      SupervisorConfig)
+from repro.obs import registry as obs_registry
+from repro.stream import RuntimeConfig, StreamRuntime
+
+
+def _stream9(n=600, d=4, seed=0):
+    centers = np.random.default_rng(99).normal(0, 6.0, (3, d))
+    rng = np.random.default_rng(seed)
+    x = centers[rng.integers(0, 3, n)] + rng.normal(0, 1.0, (n, d))
+    return x.astype(np.float32)
+
+
+def _cfg9(x, **kw):
+    defaults = dict(kmax=16, dim=x.shape[1], beta=0.1, delta=1.0,
+                    vmin=10 ** 9, spmin=0.0, update_mode="exact",
+                    sigma_ini=figmn.sigma_from_data(jnp.asarray(x), 1.0))
+    defaults.update(kw)
+    return FIGMNConfig(**defaults)
+
+
+def test_retry_policy_deterministic_and_budgeted():
+    p = RetryPolicy(max_retries=4, base_delay_s=0.01, jitter=0.5, seed=3)
+    assert list(p.delays(salt=7)) == list(p.delays(salt=7))
+    assert list(p.delays(salt=7)) != list(p.delays(salt=8))
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert p.call(flaky, retry_on=OSError) == "ok"
+    assert len(calls) == 3
+
+
+def test_fault_plan_determinism():
+    """Same plan + same stream twice → identical fired logs (kind, rid,
+    chunk), including the seeded poison row choice."""
+    x = _stream9(n=240)
+    cfg = _cfg9(x)
+    logs = []
+    for _ in range(2):
+        plan = FaultPlan(faults=(
+            Fault("poison", rid=0, chunk=1, fraction=0.25),
+            Fault("crash", rid=0, chunk=3, times=1),
+        ), seed=11)
+        inj = FaultInjector(plan)
+        rt = StreamRuntime(cfg, RuntimeConfig(chunk=40,
+                                              on_nonfinite="drop"))
+        inj.attach(0, rt)
+        try:
+            rt.ingest(x)
+        except Exception:
+            pass
+        logs.append([(k, r, c) for k, r, c, _ in inj.fired])
+    assert logs[0] == logs[1]
+    assert ("crash", 0, 3) in logs[0]
+
+
+def test_transient_crash_absorbed_by_chunk_retry():
+    """A crash that fires once is absorbed by recovery rung 1 (chunk
+    retry): the stream completes and the state is identical to the
+    no-fault run, because a failed attempt leaves the chunk un-applied."""
+    x = _stream9(n=320)
+    cfg = _cfg9(x)
+    rc = RuntimeConfig(chunk=40,
+                       chunk_retry=RetryPolicy(max_retries=2,
+                                               base_delay_s=0.001))
+    ref = StreamRuntime(cfg, rc)
+    ref.ingest(x)
+
+    rt = StreamRuntime(cfg, rc)
+    inj = FaultInjector(FaultPlan(faults=(
+        Fault("crash", rid=0, chunk=3, times=1),)))
+    inj.attach(0, rt)
+    rt.ingest(x)
+    assert [(k, c) for k, r, c, _ in inj.fired] == [("crash", 3)]
+    np.testing.assert_array_equal(np.asarray(rt.state.sp),
+                                  np.asarray(ref.state.sp))
+    np.testing.assert_array_equal(np.asarray(rt.state.mu),
+                                  np.asarray(ref.state.mu))
+
+
+def test_poison_drop_bit_identical_to_finite_only_stream():
+    """Satellite (b): under on_nonfinite="drop", a NaN/Inf-poisoned chunk
+    must leave the state bit-identical to ingesting only its finite rows
+    — the guard quarantines rows BEFORE any state mutation."""
+    x = _stream9(n=200)
+    cfg = _cfg9(x)
+    bad = x.copy()
+    bad[45:55] = np.nan                       # inside chunk 1 (40..79)
+    bad[60] = np.inf
+    finite_only = np.concatenate([bad[:45], bad[55:60], bad[61:]])
+
+    reg = obs_registry.Registry()
+    rt = StreamRuntime(cfg, RuntimeConfig(chunk=40, on_nonfinite="drop"),
+                       registry=reg)
+    rt.ingest(bad)
+    # reference replays the SAME chunk boundaries minus the bad rows
+    ref = StreamRuntime(cfg, RuntimeConfig(chunk=40))
+    for lo in range(0, bad.shape[0], 40):
+        chunk = bad[lo:lo + 40]
+        keep = chunk[np.isfinite(chunk).all(axis=1)]
+        if keep.size:
+            ref.ingest(keep)
+    np.testing.assert_array_equal(np.asarray(rt.state.sp),
+                                  np.asarray(ref.state.sp))
+    np.testing.assert_array_equal(np.asarray(rt.state.mu),
+                                  np.asarray(ref.state.mu))
+    assert rt.telemetry.total_quarantined == 11
+    assert reg.counter("figmn_points_quarantined_total").value == 11
+
+
+def test_nonfinite_raise_policy():
+    x = _stream9(n=80)
+    x[10] = np.nan
+    cfg = _cfg9(x)
+    from repro.stream import NonFiniteChunkError
+    rt = StreamRuntime(cfg, RuntimeConfig(chunk=40, on_nonfinite="raise"))
+    with pytest.raises(NonFiniteChunkError):
+        rt.ingest(x)
+
+
+@pytest.mark.fleet
+def test_supervised_crash_quarantine_restore_mass_identity(tmp_path):
+    """The full recovery ladder: a sticky crash exhausts rung 1 (chunk
+    retry), escalates to rung 2 (quarantine + re-route through the live
+    peers), and rejoins via rung 3 (checkpoint restore) — with the exact
+    fleet mass identity  Σ sum(sp) + lost − replayed + quarantined ==
+    ingested  pinned to float32 rounding."""
+    retry = RetryPolicy(max_retries=1, base_delay_s=0.001)
+    x0 = _stream9(n=360, seed=1)
+    cfg = _cfg9(x0)
+    fleet = FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=3, router="round_robin",
+                    consolidate_every=1, checkpoint_dir=str(tmp_path),
+                    supervisor=SupervisorConfig(
+                        heartbeat_timeout_s=120.0, poll_s=0.01,
+                        retry=retry, straggler_drain=False)),
+        RuntimeConfig(chunk=40, lifecycle=None, drift=None))
+    fleet.ingest(x0)                          # warm-up: compile + ckpt
+    inj = FaultInjector(FaultPlan(faults=(
+        # fires on every attempt of one shard (1 + max_retries), then
+        # disarms → exactly one quarantine/rejoin cycle
+        Fault("crash", rid=1, chunk=4, times=retry.max_retries + 1),)))
+    fleet.install_faults(inj)
+    ingested = 360
+    for seed in range(2, 6):
+        fleet.ingest(_stream9(n=360, seed=seed))
+        ingested += 360
+    deadline = time.monotonic() + 30.0
+    while fleet.supervisor.recovering and time.monotonic() < deadline:
+        time.sleep(0.05)
+        fleet.consolidate()
+
+    stages = [(e.stage, e.rid) for e in fleet.telemetry.recovery_events]
+    assert ("quarantine", 1) in stages
+    assert ("rejoin", 1) in stages
+    assert not fleet.supervisor.quarantined
+    assert not fleet.scoring.degraded
+    s = fleet.summary()
+    mass = sum(sp_mass(r.state) for r in fleet.replicas)
+    acct = (mass + s["supervisor_points_lost"]
+            - s["supervisor_points_replayed"] + s["quarantined"])
+    assert abs(acct - ingested) / ingested < 1e-5, (acct, ingested)
+    # intact auto-checkpoints ⇒ restore lands exactly on the delivered
+    # baseline and the failed shard is fully re-routed: nothing lost
+    assert s["supervisor_points_lost"] == 0
+    fleet.close()
+
+
+@pytest.mark.fleet
+def test_supervised_hang_detected_and_rejoined(tmp_path):
+    """A hung chunk (injected delay ≫ heartbeat timeout) trips the
+    watchdog: quarantine with reason heartbeat_timeout, shard re-routed,
+    replica rejoins once the straggling thread completes."""
+    x0 = _stream9(n=240, seed=1)
+    cfg = _cfg9(x0)
+    fleet = FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=2, router="round_robin",
+                    consolidate_every=1, checkpoint_dir=str(tmp_path),
+                    supervisor=SupervisorConfig(
+                        heartbeat_timeout_s=1.5, poll_s=0.01,
+                        retry=RetryPolicy(max_retries=0),
+                        straggler_drain=False)),
+        RuntimeConfig(chunk=40, lifecycle=None, drift=None))
+    fleet.ingest(x0)                          # warm-up BEFORE the fault:
+    fleet.ingest(_stream9(n=240, seed=2))     # all chunk shapes compiled
+    inj = FaultInjector(FaultPlan(faults=(
+        Fault("hang", rid=0, chunk=7, delay_s=3.0, times=1),)))
+    fleet.install_faults(inj)
+    ingested = 480
+    for seed in range(3, 6):
+        fleet.ingest(_stream9(n=240, seed=seed))
+        ingested += 240
+    deadline = time.monotonic() + 30.0
+    while fleet.supervisor.recovering and time.monotonic() < deadline:
+        time.sleep(0.05)
+        fleet.consolidate()
+
+    quars = [e for e in fleet.telemetry.recovery_events
+             if e.stage == "quarantine"]
+    assert quars and quars[0].reason.startswith("heartbeat_timeout")
+    assert quars[0].detect_latency_s < 3.0
+    assert any(e.stage == "rejoin" for e in
+               fleet.telemetry.recovery_events)
+    assert not fleet.supervisor.quarantined
+    s = fleet.summary()
+    mass = sum(sp_mass(r.state) for r in fleet.replicas)
+    acct = (mass + s["supervisor_points_lost"]
+            - s["supervisor_points_replayed"] + s["quarantined"])
+    assert abs(acct - ingested) / ingested < 1e-5, (acct, ingested)
+    fleet.close()
+
+
+@pytest.mark.fleet
+def test_straggler_escalates_to_drain():
+    """Supervisor straggler escalation: a persistently slow replica is
+    drained (mass-conserving scale_down) instead of gauge-only flagged,
+    and its counters keep counting in the fleet aggregate."""
+    from repro.ft.straggler import StragglerConfig
+    x0 = _stream9(n=240, seed=1)
+    cfg = _cfg9(x0)
+    fleet = FleetCoordinator(
+        cfg,
+        FleetConfig(n_replicas=3, router="round_robin",
+                    consolidate_every=1,
+                    straggler=StragglerConfig(slow_factor=1.5, patience=2,
+                                              ewma=0.7),
+                    supervisor=SupervisorConfig(
+                        heartbeat_timeout_s=120.0, poll_s=0.01,
+                        straggler_drain=True)),
+        RuntimeConfig(chunk=40, lifecycle=None, drift=None))
+    fleet.ingest(x0)
+    inj = FaultInjector(FaultPlan(faults=tuple(
+        # repeated sub-timeout delays: slow, never "hung"
+        Fault("hang", rid=2, chunk=c, delay_s=0.4, times=1)
+        for c in range(2, 12))))
+    fleet.install_faults(inj)
+    ingested = 240
+    for seed in range(2, 8):
+        fleet.ingest(_stream9(n=240, seed=seed))
+        ingested += 240
+        if len(fleet.replicas) < 3:
+            break
+    drains = [e for e in fleet.telemetry.recovery_events
+              if e.stage == "drain"]
+    assert drains and drains[0].rid == 2
+    assert len(fleet.replicas) == 2
+    s = fleet.summary()
+    # the drained replica's ingested points survive in BOTH the mass
+    # (drain merge) and the counter aggregate (absorb_retired)
+    assert s["total_points"] == ingested
+    mass = sum(sp_mass(r.state) for r in fleet.replicas)
+    acct = (mass + s["supervisor_points_lost"]
+            - s["supervisor_points_replayed"] + s["quarantined"])
+    assert abs(acct - ingested) / ingested < 1e-5, (acct, ingested)
+    fleet.close()
+
+
+# -- degraded serving -------------------------------------------------------
+
+def _fitted_frontend(**kw):
+    x = _stream9(n=300)
+    cfg = _cfg9(x)
+    state = figmn.fit(cfg, figmn.init_state(cfg), jnp.asarray(x))
+    reg = kw.pop("registry", None) or obs_registry.Registry()
+    fe = ScoringFrontend(cfg, registry=reg, **kw)
+    fe.publish(state)
+    return fe, reg, x
+
+
+def test_degraded_mode_metrics():
+    fe, reg, x = _fitted_frontend()
+    fe.set_degraded("replica quarantined")
+    fe.set_degraded("later reason")           # first reason wins
+    assert fe.degraded and fe.degraded_reason == "replica quarantined"
+    fe.score(x[:8])
+    assert reg.counter("figmn_serve_degraded_total").value == 1
+    assert reg.gauge("figmn_serve_degraded").value == 1.0
+    fe.clear_degraded()
+    assert not fe.degraded
+    fe.score(x[:8])
+    assert reg.counter("figmn_serve_degraded_total").value == 1
+    assert reg.gauge("figmn_serve_degraded").value == 0.0
+    fe.close()
+
+
+def test_staleness_bound_enforced():
+    fe, reg, x = _fitted_frontend(max_staleness_s=0.05)
+    fe.score(x[:4])                           # fresh: fine
+    time.sleep(0.12)
+    with pytest.raises(StalenessExceeded):
+        fe.score(x[:4])
+    fe.close()
+
+
+def test_admission_rejection_carries_retry_after():
+    fe, reg, x = _fitted_frontend(
+        admission=AdmissionConfig(max_batch=10_000, max_delay_s=30.0,
+                                  queue_cap=2))
+    futs = [fe.score_async(x[:1]) for _ in range(2)]
+    with pytest.raises(AdmissionRejected) as ei:
+        fe.score_async(x[:1])
+    assert ei.value.retry_after_s == 30.0
+    fe.close()                                # drains the queue
+    for f in futs:
+        f.result(timeout=5)
+
+
+def test_close_resolves_every_pending_future():
+    """Satellite (c): close() must leave no future forever-pending —
+    each queued request either completes or raises CancelledError."""
+    fe, reg, x = _fitted_frontend(
+        admission=AdmissionConfig(max_batch=10_000, max_delay_s=30.0,
+                                  queue_cap=64))
+    futs = [fe.score_async(x[:2]) for _ in range(8)]
+    # a racing slow submitter while close() runs
+    late = []
+
+    def slow_submit():
+        try:
+            late.append(fe.score_async(x[:2]))
+        except Exception as e:                # frontend may already be shut
+            late.append(e)
+
+    t = threading.Thread(target=slow_submit)
+    t.start()
+    fe.close(cancel_pending=True)
+    t.join()
+    for f in futs:
+        assert f.done()
+        try:
+            f.result(timeout=0)
+        except CancelledError:
+            pass
+    for f in late:
+        if hasattr(f, "done"):
+            assert f.done()
+
+
+def test_retry_policy_resubmits_rejected_requests():
+    """Serving-side rung 1: with a RetryPolicy, a queue-cap rejection is
+    retried instead of surfacing — the request eventually lands."""
+    fe, reg, x = _fitted_frontend(
+        admission=AdmissionConfig(max_batch=4, max_delay_s=0.01,
+                                  queue_cap=2),
+        retry=RetryPolicy(max_retries=8, base_delay_s=0.01,
+                          max_delay_s=0.05))
+    futs = [fe.score_async(x[:1]) for _ in range(12)]
+    for f in futs:
+        assert np.asarray(f.result(timeout=10)).shape == (1,)
+    fe.close()
+
+
+# -- hypothesis property: crash/restore conserves mass ----------------------
+
+def test_crash_restore_conserves_mass_property():
+    """Satellite (d): killing a checkpointed runtime at ANY batch
+    boundary and resuming a fresh one conserves the mass identity
+    sum(sp) == points ingested (prune off ⇒ every point adds exactly 1)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16 - 1), cut=st.integers(1, 5))
+    def prop(seed, cut):
+        x = _stream9(n=360, seed=seed)
+        cfg = _cfg9(x)
+        with tempfile.TemporaryDirectory() as d:
+            rc = RuntimeConfig(chunk=30, checkpoint_dir=d,
+                               lifecycle=None, drift=None)
+            rt = StreamRuntime(cfg, rc)
+            batches = np.array_split(x, 6)
+            for b in batches[:cut]:
+                rt.ingest(b)                  # auto-checkpoints each call
+            del rt                            # crash: no clean shutdown
+            fresh = StreamRuntime(cfg, rc)
+            assert fresh.resume()
+            for b in batches[cut:]:
+                fresh.ingest(b)
+            mass = float(sp_mass(fresh.state))
+            assert abs(mass - x.shape[0]) / x.shape[0] < 1e-5
+
+    prop()
