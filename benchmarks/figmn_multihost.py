@@ -1,0 +1,408 @@
+"""Multi-host fleet benchmark → BENCH_multihost.json.
+
+The RPC PR's end-to-end demonstration: the fleet's replicas move from
+threads to WORKER PROCESSES (``FleetConfig(placement="process")``, one
+``repro.rpc.worker`` per replica over the length-prefixed frame wire) and
+the run measures what that placement must prove:
+
+  equivalence  the SAME stream through a threaded fleet and a process
+               fleet of the same shape — held-out mean log-likelihood gap
+               (contract: ≤ 0.05; in practice the states are
+               bit-identical — the wire moves the computation, not the
+               numbers) and both mass identities,
+  scaling      ingest throughput (points/s, post-warm-up) as the worker
+               process count grows — the curve CI publishes; remote
+               shards ingest in PARALLEL (real processes, no GIL), which
+               is the point of the placement,
+  elasticity   a forced scale-up then scale-down over RPC: the pool
+               bisection/drain must conserve Σ sum(sp) EXACTLY across
+               both events (the autoscaler's conservation witness, now
+               crossing process boundaries),
+  recovery     SIGKILL one worker mid-stream under the supervisor: the
+               next heartbeat silence reads as ``worker_dead``, the shard
+               re-routes, and a respawned process restores the SAME
+               incarnation's checkpoints and rejoins — with the exact
+               mass identity
+                 Σ sum(sp) + points_lost − points_replayed
+                     + points_quarantined == points ingested
+               holding through the kill.
+
+The committed smoke baseline gates CI (``--check``): a failed recovery, a
+broken mass identity in ANY section, an equivalence gap above tolerance,
+a missing ``worker_dead`` failure classification, or a >3× throughput
+regression against the baseline curve fails the build.
+
+Run:    PYTHONPATH=src python -m benchmarks.figmn_multihost [--smoke]
+Gate:   PYTHONPATH=src python -m benchmarks.figmn_multihost \
+            --check BENCH_multihost.json \
+            --baseline benchmarks/baselines/BENCH_multihost_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import figmn
+from repro.core.types import FIGMNConfig
+from repro.fleet import FleetConfig, FleetCoordinator, sp_mass
+from repro.ft import RetryPolicy, SupervisorConfig
+from repro.obs import export as obs_export
+from repro.stream import RuntimeConfig
+
+D, KMAX = 8, 48
+CHUNK = 50
+BATCH_PER_REPLICA = 300        # keeps shard size constant as counts grow
+SCALE_ROUNDS = 4
+SCALE_ROUNDS_SMOKE = 2
+WORKER_COUNTS = (1, 2, 4)
+WORKER_COUNTS_SMOKE = (1, 3)
+EQ_REPLICAS = 2
+EQ_ROUNDS = 3
+HOLDOUT = 512
+HOLDOUT_SMOKE = 256
+#: the worker heartbeats once per APPLIED CHUNK; silence past this reads
+#: as a hang/death.  Must clear the worst honest chunk including a
+#: worker-side XLA recompile of a re-routed partial-chunk shape.
+HEARTBEAT_TIMEOUT_S = 12.0
+POLL_S = 0.05
+RETRY = RetryPolicy(max_retries=1, base_delay_s=0.01, seed=0)
+RECOVERY_ROUNDS = 4            # post-kill rounds: detect, re-route, rejoin
+RECOVERY_WAIT_S = 30.0
+LL_GAP_TOL = 0.05              # the acceptance contract
+MASS_RTOL = 1e-5
+THROUGHPUT_REGRESSION_FACTOR = 3.0
+
+
+def _mk_data(seed: int = 0, d: int = D):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 6.0, (4, d))
+
+    def draw(n):
+        x = centers[rng.integers(0, 4, n)] + rng.normal(0, 1.0, (n, d))
+        return x.astype(np.float32)
+    return draw
+
+
+def _cfg(sample: np.ndarray) -> FIGMNConfig:
+    # pruning OFF (spmin=0, vmin unreachable, no lifecycle): every
+    # ingested point adds exactly 1 to some replica's sum(sp), so the
+    # mass identities below must hold to float rounding
+    return FIGMNConfig(kmax=KMAX, dim=D, beta=0.1, delta=1.0,
+                       vmin=10 ** 9, spmin=0.0, update_mode="exact",
+                       sigma_ini=figmn.sigma_from_data(
+                           jnp.asarray(sample), 1.0))
+
+
+def _fleet(cfg: FIGMNConfig, n: int, placement: str,
+           ckpt_dir: str = None, supervised: bool = False
+           ) -> FleetCoordinator:
+    fcfg = FleetConfig(
+        n_replicas=n, router="round_robin", consolidate_every=2,
+        placement=placement, checkpoint_dir=ckpt_dir,
+        supervisor=(SupervisorConfig(
+            heartbeat_timeout_s=HEARTBEAT_TIMEOUT_S, poll_s=POLL_S,
+            retry=RETRY, straggler_drain=False)
+            if supervised else None))
+    rcfg = RuntimeConfig(chunk=CHUNK, lifecycle=None, drift=None,
+                         checkpoint_every=1 if ckpt_dir else 0)
+    return FleetCoordinator(cfg, fcfg, rcfg)
+
+
+def _mass_identity(fleet: FleetCoordinator, ingested: int) -> Dict:
+    s = fleet.summary()
+    mass = float(sum(sp_mass(r.state) for r in fleet.replicas))
+    lost = int(s.get("supervisor_points_lost", 0))
+    replayed = int(s.get("supervisor_points_replayed", 0))
+    quarantined = int(s.get("quarantined", 0))
+    acct = mass + lost - replayed + quarantined
+    rel = abs(acct - ingested) / max(ingested, 1)
+    return {"sp_mass": mass, "points_lost": lost,
+            "points_replayed": replayed, "points_quarantined": quarantined,
+            "accounted": acct, "ingested": ingested,
+            "rel_err": rel, "mass_ok": bool(rel <= MASS_RTOL)}
+
+
+# ---------------------------------------------------------------------------
+# sections
+# ---------------------------------------------------------------------------
+
+def _equivalence(cfg, holdout, rounds: int) -> Dict:
+    """Same stream, threads vs processes: the placement-transparency
+    witness the whole subsystem rests on."""
+    out = {}
+    states = {}
+    for placement in ("thread", "process"):
+        draw = _mk_data(seed=1)          # identical stream both times
+        fl = _fleet(cfg, EQ_REPLICAS, placement)
+        try:
+            n = 0
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                fl.ingest(draw(BATCH_PER_REPLICA * EQ_REPLICAS))
+                n += BATCH_PER_REPLICA * EQ_REPLICAS
+            wall = time.perf_counter() - t0
+            ll = float(np.mean(np.asarray(fl.score(holdout))))
+            states[placement] = [np.asarray(r.state.sp)
+                                 for r in fl.replicas]
+            out[placement] = {"ingested": n, "wall_s": wall,
+                              "holdout_ll": ll,
+                              "mass": _mass_identity(fl, n)}
+        finally:
+            fl.close()
+    gap = abs(out["thread"]["holdout_ll"] - out["process"]["holdout_ll"])
+    out["ll_gap"] = gap
+    out["ll_gap_ok"] = bool(gap <= LL_GAP_TOL)
+    out["sp_bit_identical"] = bool(all(
+        np.array_equal(a, b)
+        for a, b in zip(states["thread"], states["process"])))
+    return out
+
+
+def _scaling(cfg, counts, rounds: int) -> List[Dict]:
+    """Ingest throughput vs worker-process count (constant shard size:
+    total batch grows with the count, so the curve isolates parallelism,
+    not shrinking per-worker work)."""
+    curve = []
+    for n in counts:
+        draw = _mk_data(seed=2)
+        fl = _fleet(cfg, n, "process")
+        try:
+            batch = BATCH_PER_REPLICA * n
+            fl.ingest(draw(batch))               # warm-up: spawn + compile
+            t0 = time.perf_counter()
+            ingested = 0
+            for _ in range(rounds):
+                fl.ingest(draw(batch))
+                ingested += batch
+            wall = time.perf_counter() - t0
+            mass = _mass_identity(fl, ingested + batch)
+            curve.append({"workers": n, "ingested": ingested,
+                          "wall_s": wall,
+                          "points_per_s": ingested / wall,
+                          "mass_ok": mass["mass_ok"],
+                          "pids": [r.pid for r in fl.replicas]})
+        finally:
+            fl.close()
+    return curve
+
+
+def _elasticity(cfg, rounds: int, ckpt_root: str) -> Dict:
+    """Forced scale-up then scale-down across process boundaries; both
+    transitions must conserve active mass EXACTLY (==, not allclose)."""
+    draw = _mk_data(seed=3)
+    fl = _fleet(cfg, 2, "process", ckpt_dir=ckpt_root)
+    try:
+        n = 0
+        for _ in range(rounds):
+            fl.ingest(draw(BATCH_PER_REPLICA * 2))
+            n += BATCH_PER_REPLICA * 2
+        m0 = float(sum(sp_mass(r.state) for r in fl.replicas))
+        up_ok = fl.scale_up(fl.replica_ids[0], reason="benchmark")
+        m1 = float(sum(sp_mass(r.state) for r in fl.replicas))
+        spawned_pid = fl.replicas[-1].pid
+        fl.ingest(draw(BATCH_PER_REPLICA * 3))
+        n += BATCH_PER_REPLICA * 3
+        m2 = float(sum(sp_mass(r.state) for r in fl.replicas))
+        down_ok = fl.scale_down(fl.replica_ids[-1], fl.replica_ids[0],
+                                reason="benchmark")
+        m3 = float(sum(sp_mass(r.state) for r in fl.replicas))
+        return {"scaled_up": bool(up_ok), "scaled_down": bool(down_ok),
+                "spawned_pid": spawned_pid,
+                "mass_before_up": m0, "mass_after_up": m1,
+                "mass_before_down": m2, "mass_after_down": m3,
+                "up_exact": bool(m0 == m1), "down_exact": bool(m2 == m3),
+                "ingested": n,
+                "final_mass": _mass_identity(fl, n)}
+    finally:
+        fl.close()
+
+
+def _recovery(cfg, ckpt_root: str) -> Dict:
+    """SIGKILL one worker mid-stream; the supervisor must classify it
+    ``worker_dead``, re-route, respawn into the SAME incarnation's
+    checkpoint dir and rejoin — mass identity intact."""
+    draw = _mk_data(seed=4)
+    fl = _fleet(cfg, 3, "process", ckpt_dir=ckpt_root, supervised=True)
+    try:
+        ingested = 0
+        batch = BATCH_PER_REPLICA * 3
+        for _ in range(2):
+            fl.ingest(draw(batch))
+            ingested += batch
+        victim = fl.replicas[1]
+        dead_pid = victim.pid
+        t_kill = time.monotonic()
+        victim.kill()
+        t_detect = None
+        seen_quarantine = False
+        for _ in range(RECOVERY_ROUNDS):
+            fl.ingest(draw(batch))
+            ingested += batch
+            if not seen_quarantine \
+                    and fl.summary()["quarantined_replicas"]:
+                seen_quarantine = True
+                t_detect = time.monotonic() - t_kill
+        deadline = time.monotonic() + RECOVERY_WAIT_S
+        while (fl.summary()["quarantined_replicas"]
+               and time.monotonic() < deadline):
+            fl.ingest(draw(batch))
+            ingested += batch
+            fl.consolidate()
+        s = fl.summary()
+        mass = _mass_identity(fl, ingested)
+        dump = fl.fleet_metrics()
+        dead = sum(e.get("value", 0) for e in dump["metrics"]
+                   if e["name"] == "figmn_replica_failures_total"
+                   and e["labels"].get("reason") == "worker_dead")
+        recovered = (not s["quarantined_replicas"]
+                     and all(r.alive for r in fl.replicas))
+        respawned_pid = fl.replicas[1].pid
+        return {"killed_pid": dead_pid,
+                "respawned_pid": respawned_pid,
+                "respawned": bool(respawned_pid != dead_pid),
+                "detect_s": t_detect,
+                "worker_dead_failures": float(dead),
+                "recovered": bool(recovered),
+                "quarantined_final": s["quarantined_replicas"],
+                "mass": mass}
+    finally:
+        fl.close()
+
+
+# ---------------------------------------------------------------------------
+# run / check
+# ---------------------------------------------------------------------------
+
+def run(out_path: str = "BENCH_multihost.json",
+        quick: bool = False) -> Dict:
+    counts = WORKER_COUNTS_SMOKE if quick else WORKER_COUNTS
+    rounds = SCALE_ROUNDS_SMOKE if quick else SCALE_ROUNDS
+    draw = _mk_data()
+    cfg = _cfg(draw(2048))
+    holdout = draw(HOLDOUT_SMOKE if quick else HOLDOUT)
+
+    eq = _equivalence(cfg, holdout, EQ_ROUNDS)
+    print(f"equivalence: LL gap {eq['ll_gap']:.2e} "
+          f"({'OK' if eq['ll_gap_ok'] else 'TOO LARGE'}), "
+          f"sp bit-identical={eq['sp_bit_identical']}")
+
+    curve = _scaling(cfg, counts, rounds)
+    for c in curve:
+        print(f"scaling: {c['workers']} workers -> "
+              f"{c['points_per_s']:.0f} pts/s "
+              f"(mass {'OK' if c['mass_ok'] else 'BROKEN'})")
+
+    d_el = tempfile.mkdtemp(prefix="figmn_mh_elastic_")
+    try:
+        el = _elasticity(cfg, rounds, d_el)
+    finally:
+        shutil.rmtree(d_el, ignore_errors=True)
+    print(f"elasticity: up exact={el['up_exact']} "
+          f"down exact={el['down_exact']} "
+          f"(mass {el['mass_before_up']:.4f} -> {el['mass_after_up']:.4f}"
+          f" -> {el['mass_after_down']:.4f})")
+
+    d_rec = tempfile.mkdtemp(prefix="figmn_mh_recover_")
+    try:
+        rec = _recovery(cfg, d_rec)
+    finally:
+        shutil.rmtree(d_rec, ignore_errors=True)
+    print(f"recovery: killed pid {rec['killed_pid']} -> respawned "
+          f"{rec['respawned_pid']}, worker_dead failures "
+          f"{rec['worker_dead_failures']:.0f}, recovered="
+          f"{rec['recovered']}, mass rel_err "
+          f"{rec['mass']['rel_err']:.2e}")
+
+    doc = {"benchmark": "figmn_multihost",
+           "backend": jax.default_backend(),
+           "smoke": quick,
+           "chunk": CHUNK, "batch_per_replica": BATCH_PER_REPLICA,
+           "heartbeat_timeout_s": HEARTBEAT_TIMEOUT_S,
+           "equivalence": eq,
+           "scaling": curve,
+           "elasticity": el,
+           "recovery": rec}
+    obs_export.to_json(out_path, doc)
+    print(f"wrote {out_path}")
+    return doc
+
+
+def check(bench_path: str, baseline_path: str,
+          factor: float = THROUGHPUT_REGRESSION_FACTOR) -> bool:
+    """CI gate: equivalence within tolerance, every mass identity intact,
+    both elasticity transitions exact, the killed worker classified
+    ``worker_dead`` and recovered, and no worker count's throughput more
+    than ``factor``× below the committed baseline curve."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+
+    eq = bench["equivalence"]
+    ok_eq = bool(eq.get("ll_gap_ok")) \
+        and bool(eq["thread"]["mass"]["mass_ok"]) \
+        and bool(eq["process"]["mass"]["mass_ok"])
+    print(f"equivalence: LL gap {eq.get('ll_gap', 1e9):.2e} "
+          f"(tol {LL_GAP_TOL}) — {'OK' if ok_eq else 'FAILED'}")
+
+    ok_scale = all(bool(c.get("mass_ok")) and c.get("points_per_s", 0) > 0
+                   for c in bench["scaling"])
+    base_curve = {c["workers"]: c["points_per_s"]
+                  for c in base.get("scaling", [])}
+    for c in bench["scaling"]:
+        ref = base_curve.get(c["workers"])
+        line = (f"scaling {c['workers']} workers: "
+                f"{c['points_per_s']:.0f} pts/s")
+        if ref:
+            floor = ref / factor
+            ok = c["points_per_s"] >= floor
+            ok_scale = ok_scale and ok
+            line += (f" vs baseline {ref:.0f} (floor {floor:.0f}) — "
+                     f"{'OK' if ok else 'REGRESSION'}")
+        print(line)
+
+    el = bench["elasticity"]
+    ok_el = (bool(el.get("up_exact")) and bool(el.get("down_exact"))
+             and bool(el.get("final_mass", {}).get("mass_ok")))
+    print(f"elasticity: up_exact={el.get('up_exact')} "
+          f"down_exact={el.get('down_exact')} — "
+          f"{'OK' if ok_el else 'NOT CONSERVED'}")
+
+    rec = bench["recovery"]
+    ok_rec = (bool(rec.get("recovered")) and bool(rec.get("respawned"))
+              and float(rec.get("worker_dead_failures", 0)) >= 1
+              and bool(rec.get("mass", {}).get("mass_ok")))
+    print(f"recovery: recovered={rec.get('recovered')} "
+          f"worker_dead={rec.get('worker_dead_failures')} "
+          f"mass rel_err={rec.get('mass', {}).get('rel_err'):.2e} — "
+          f"{'OK' if ok_rec else 'FAILED'}")
+
+    return ok_eq and ok_scale and ok_el and ok_rec
+
+
+def main(smoke: bool = False) -> None:
+    run(quick=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="gate mode: compare BENCH_JSON against --baseline "
+                         "instead of running the benchmark")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/"
+                            "BENCH_multihost_smoke.json")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(0 if check(args.check, args.baseline) else 1)
+    main(smoke=args.smoke)

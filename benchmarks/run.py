@@ -31,6 +31,12 @@ CSV convention: ``name,us_per_call,derived``.
                     latency, recovery, exact mass accounting, serving
                     availability and held-out LL gap → BENCH_faults.json
                     (CI-gated against benchmarks/baselines/)
+  figmn_multihost — worker-process fleet over repro.rpc: threaded-vs-
+                    process equivalence, throughput scaling curve over
+                    worker counts, exact mass conservation across RPC
+                    scale events, SIGKILL-one-worker recovery with the
+                    mass identity → BENCH_multihost.json (CI-gated
+                    against benchmarks/baselines/)
   figmn_dispatch  — dispatch calibration: measured per-path cost table
                     + decision audit (table choice vs measured fastest
                     vs heuristic) → BENCH_dispatch.json +
@@ -63,7 +69,8 @@ import traceback
 REGISTRY = ("figmn_scaling", "figmn_timing", "figmn_accuracy",
             "figmn_runtime", "figmn_fleet", "figmn_autoscale",
             "figmn_sparse", "figmn_predict", "figmn_serve",
-            "figmn_faults", "figmn_dispatch", "lm_bench", "roofline")
+            "figmn_faults", "figmn_multihost", "figmn_dispatch",
+            "lm_bench", "roofline")
 
 #: CI-gated benchmarks: module -> (fresh bench json, committed baseline);
 #: each module exposes ``check(bench_path, baseline_path) -> bool``.
@@ -78,6 +85,9 @@ GATES = {
                     "benchmarks/baselines/BENCH_serve_smoke.json"),
     "figmn_faults": ("BENCH_faults.json",
                      "benchmarks/baselines/BENCH_faults_smoke.json"),
+    "figmn_multihost": ("BENCH_multihost.json",
+                        "benchmarks/baselines/"
+                        "BENCH_multihost_smoke.json"),
     "figmn_dispatch": ("BENCH_dispatch.json",
                        "benchmarks/baselines/BENCH_dispatch_smoke.json"),
 }

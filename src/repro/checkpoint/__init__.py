@@ -1,2 +1,11 @@
-"""repro.checkpoint — sharded, async, elastic checkpointing."""
+"""repro.checkpoint — sharded, async, elastic checkpointing + the wire
+codec (codec.py) shared by on-disk payloads and RPC pool frames."""
+from repro.checkpoint.codec import (CodecError, decode_manifest,
+                                    decode_tree, encode_tree, hash_array,
+                                    hash_bytes)
 from repro.checkpoint.manager import CheckpointManager
+
+__all__ = [
+    "CheckpointManager", "CodecError", "decode_manifest", "decode_tree",
+    "encode_tree", "hash_array", "hash_bytes",
+]

@@ -1,0 +1,177 @@
+"""Wire-serialization codec for array pytrees (FIGMNState, export_pool,
+checkpoint payloads): one self-describing byte blob per tree.
+
+The on-disk checkpoint format (manager.py) and the RPC pool payloads
+(repro.rpc) need the SAME three guarantees — a versioned envelope, a
+dtype/shape manifest, and a blake2 content digest per entry — so both are
+built from this module:
+
+* ``hash_array``           the blake2b-16 content hash the checkpoint
+                           manifests have always recorded (moved here; the
+                           manager imports it back — zero format change),
+* ``flatten_with_paths`` / ``unflatten_like``
+                           the path-keyed pytree <-> flat-dict bridge,
+* ``encode_tree`` / ``decode_tree``
+                           a framed blob: magic + codec version + JSON
+                           manifest (per-entry shape/dtype/hash + a digest
+                           of the whole payload) + one npz payload.
+
+``decode_tree(encode_tree(t), template=t)`` is BIT-IDENTICAL: npz
+round-trips raw array bytes, the manifest pins dtypes exactly, and
+restoring against a template preserves host-numpy leaves as numpy (64-bit
+counters survive jax's no-x64 default).  Pinned by tests/test_rpc.py.
+
+Layout (all integers little-endian)::
+
+    b"FGTC" | u32 codec_version | u32 manifest_len | manifest JSON | npz
+
+The manifest carries ``payload_blake2`` over the npz bytes — a receiver
+can reject a corrupted/truncated blob before ever parsing the zip — plus
+per-entry hashes so single-entry corruption is attributable.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import struct
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: envelope magic + version: bump the version on any layout change so a
+#: reader that sees a future blob fails loudly instead of misparsing
+MAGIC = b"FGTC"
+CODEC_VERSION = 1
+
+_HEADER = struct.Struct("<4sII")
+
+
+class CodecError(ValueError):
+    """Malformed, truncated, version-skewed or corrupted blob."""
+
+
+def hash_array(arr: np.ndarray) -> str:
+    """blake2b-16 content hash of an array's raw bytes (the checkpoint
+    manifest hash — manager.py and the RPC frames share this exactly)."""
+    return hashlib.blake2b(np.ascontiguousarray(arr).tobytes(),
+                           digest_size=16).hexdigest()
+
+
+def hash_bytes(data: bytes) -> str:
+    """blake2b-16 of a raw byte payload (whole-frame checksums)."""
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+def flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    """Pytree -> {"path/to/leaf": leaf} with stable, human-readable keys."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def unflatten_like(template: Any, flat: Dict[str, Any]) -> Any:
+    """Rebuild ``template``'s structure from a path-keyed flat dict."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    vals = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        vals.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def encode_tree(tree: Any, meta: Optional[Dict[str, object]] = None
+                ) -> bytes:
+    """Serialise an array pytree into one self-describing blob.
+
+    ``meta`` rides in the manifest (e.g. a state epoch, a schema tag) —
+    JSON-able values only; it comes back from ``decode_manifest``.
+    """
+    flat = flatten_with_paths(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    buf = io.BytesIO()
+    np.savez(buf, **host)
+    payload = buf.getvalue()
+    manifest = {
+        "codec_version": CODEC_VERSION,
+        "payload_blake2": hash_bytes(payload),
+        "entries": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                        "hash": hash_array(v)}
+                    for k, v in host.items()},
+        "meta": dict(meta or {}),
+    }
+    mjson = json.dumps(manifest, sort_keys=True).encode()
+    return _HEADER.pack(MAGIC, CODEC_VERSION, len(mjson)) + mjson + payload
+
+
+def decode_manifest(blob: bytes) -> Dict[str, object]:
+    """Parse + validate the envelope/manifest WITHOUT loading arrays
+    (cheap integrity precheck; raises CodecError on any mismatch)."""
+    if len(blob) < _HEADER.size:
+        raise CodecError(f"blob too short ({len(blob)} bytes) for a "
+                         f"codec envelope")
+    magic, version, mlen = _HEADER.unpack_from(blob)
+    if magic != MAGIC:
+        raise CodecError(f"bad magic {magic!r} (want {MAGIC!r})")
+    if version != CODEC_VERSION:
+        raise CodecError(f"codec version {version} unsupported "
+                         f"(this reader speaks {CODEC_VERSION})")
+    try:
+        manifest = json.loads(blob[_HEADER.size:_HEADER.size + mlen])
+    except Exception as e:
+        raise CodecError(f"unparseable manifest: {e}") from e
+    payload = blob[_HEADER.size + mlen:]
+    if hash_bytes(payload) != manifest.get("payload_blake2"):
+        raise CodecError("payload digest mismatch (corrupted or "
+                         "truncated blob)")
+    return manifest
+
+
+def decode_tree(blob: bytes, template: Any = None,
+                verify: bool = True) -> Any:
+    """Decode a blob back into arrays.
+
+    template=None  -> a flat {path: numpy array} dict.
+    template given -> the template's pytree structure, each leaf cast to
+                      the template leaf's dtype; numpy template leaves
+                      stay numpy (no jax no-x64 downcast), everything
+                      else becomes a jnp array.  Bit-identical round trip
+                      when the template matches the encoder's tree.
+    verify=True    -> whole-payload digest AND per-entry hashes checked;
+                      any mismatch raises CodecError.
+    """
+    manifest = decode_manifest(blob)    # always checks the payload digest
+    mlen = _HEADER.unpack_from(blob)[2]
+    payload = blob[_HEADER.size + mlen:]
+    with np.load(io.BytesIO(payload)) as z:
+        flat = {k: z[k] for k in z.files}
+    entries = manifest["entries"]
+    if set(flat) != set(entries):
+        raise CodecError(f"manifest entries {sorted(entries)} != payload "
+                         f"entries {sorted(flat)}")
+    for k, meta in entries.items():
+        arr = flat[k]
+        if list(arr.shape) != list(meta["shape"]) \
+                or str(arr.dtype) != meta["dtype"]:
+            raise CodecError(
+                f"entry {k!r}: payload {arr.shape}/{arr.dtype} != "
+                f"manifest {tuple(meta['shape'])}/{meta['dtype']}")
+        if verify and hash_array(arr) != meta["hash"]:
+            raise CodecError(f"entry {k!r}: content hash mismatch")
+    if template is None:
+        return flat
+    tmpl_flat = flatten_with_paths(template)
+    missing = [k for k in tmpl_flat if k not in flat]
+    if missing:
+        raise CodecError(f"blob lacks template entries {missing}")
+    out = {}
+    for k, tmpl in tmpl_flat.items():
+        arr = flat[k].astype(np.asarray(tmpl).dtype)
+        out[k] = arr if isinstance(tmpl, np.ndarray) else jnp.asarray(arr)
+    return unflatten_like(template, out)

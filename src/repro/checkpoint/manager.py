@@ -27,42 +27,25 @@ this container):
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import shutil
 import threading
 import time
 import zipfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def _flatten_with_paths(tree: Any) -> Dict[str, Any]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        flat[key] = leaf
-    return flat
-
-
-def _unflatten_like(template: Any, flat: Dict[str, Any]) -> Any:
-    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
-    vals = []
-    for path, leaf in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        vals.append(flat[key])
-    return jax.tree_util.tree_unflatten(treedef, vals)
-
-
-def _hash(arr: np.ndarray) -> str:
-    return hashlib.blake2b(np.ascontiguousarray(arr).tobytes(),
-                           digest_size=16).hexdigest()
+# The path-keyed flatten/unflatten bridge and the blake2b-16 content hash
+# are shared with the wire codec (codec.py): RPC pool payloads and on-disk
+# checkpoint manifests hash and key entries identically, so a payload
+# verified on one side of the wire needs no re-derivation on the other.
+from repro.checkpoint.codec import flatten_with_paths as _flatten_with_paths
+from repro.checkpoint.codec import hash_array as _hash
+from repro.checkpoint.codec import unflatten_like as _unflatten_like
 
 
 class CheckpointManager:

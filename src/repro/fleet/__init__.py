@@ -18,6 +18,10 @@ replica count itself tracking traffic via telemetry-driven autoscaling.
                   (immutable atomic-swap snapshots, reader-safe)
   coordinator.py  FleetCoordinator (routing, merge clock, scale events,
                   epoch-pinned whole-cut checkpointing)
+  remote.py       RemoteReplicaHandle — a worker process (repro.rpc)
+                  wearing the same replica protocol, so
+                  FleetConfig(placement="process") runs the fleet
+                  multi-host with no coordinator changes
 
 Design lineage: the replica+merge structure follows Pinto & Engel 2017
 ("Scalable and Incremental Learning of Gaussian Mixture Models" — the
@@ -33,6 +37,7 @@ from repro.fleet.autoscale import (Autoscaler, AutoscaleConfig,
                                    split_state)
 from repro.fleet.consolidate import consolidate, drain, merge_down, sp_mass
 from repro.fleet.coordinator import FleetConfig, FleetCoordinator
+from repro.fleet.remote import RemoteReplicaHandle
 from repro.fleet.router import RouterConfig, ShardRouter
 from repro.fleet.scoring import (AdmissionConfig, AdmissionRejected,
                                  DeadlineExceeded, ScoringFrontend,
@@ -44,7 +49,8 @@ __all__ = [
     "AdmissionConfig", "AdmissionRejected", "Autoscaler",
     "AutoscaleConfig", "ConsolidationEvent", "DeadlineExceeded",
     "FleetConfig", "FleetCoordinator", "FleetTelemetry", "RecoveryEvent",
-    "ReplicaSignal", "RouterConfig", "ScaleDecision", "ScaleEvent",
+    "RemoteReplicaHandle", "ReplicaSignal", "RouterConfig",
+    "ScaleDecision", "ScaleEvent",
     "ScoringFrontend", "ShardRouter", "StalenessExceeded",
     "consolidate", "drain", "merge_down", "split_state", "sp_mass",
 ]

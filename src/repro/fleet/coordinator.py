@@ -41,11 +41,27 @@ replica's step, so ``resume`` after any number of scale events rebuilds
 exactly that membership and restores a whole cut; it then re-consolidates
 to rebuild the serving snapshot.
 
-In this container the replicas step sequentially on one device; the
-coordinator is deliberately ignorant of placement (replicas share no state
-between consolidations), so the multi-host version is this same class with
-``_ingest_shard`` dispatched over processes — the layer later pod-mesh PRs
-plug into.
+Placement (ISSUE 10): the coordinator is deliberately ignorant of WHERE a
+replica runs.  ``FleetConfig(placement="thread")`` (default) builds
+in-process StreamRuntimes; ``placement="process"`` builds
+RemoteReplicaHandles (fleet/remote.py) — each replica is a worker process
+behind repro.rpc, and every coordinator/supervisor/autoscaler code path
+below drives it through the same duck-typed surface.  The autoscaler
+therefore allocates and releases worker PROCESSES at consolidation
+boundaries; unsupervised process fleets ingest their shards on parallel
+threads (real multi-process parallelism — the N-process scaling curve in
+benchmarks/figmn_multihost.py), while supervised delivery keeps the
+watchdog's sequential semantics.
+
+Checkpoint directories are INCARNATION-namespaced
+(``<root>/replica_<rid>/inc_<n>``): every time a coordinator creates a
+replica fresh (construction, scale-up), it allocates a new incarnation —
+so a restarted fleet whose replica ids collide with an earlier run can
+never resume another life's ``replica_<rid>`` steps (the supervisor's
+restore ceiling reads an empty dir, not a stale one).  A supervisor
+respawn of a dead worker process deliberately KEEPS the incarnation: the
+respawned process must restore its own checkpoints.  The fleet manifest
+pins incarnations; legacy manifests map to the bare un-namespaced dirs.
 """
 from __future__ import annotations
 
@@ -53,6 +69,7 @@ import dataclasses
 import json
 import logging
 import os
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -75,6 +92,7 @@ from repro.ft.straggler import StragglerConfig, StragglerMonitor
 from repro.ft.supervisor import FleetSupervisor, SupervisorConfig
 from repro.obs import registry as obs_registry
 from repro.obs.trace import span
+from repro.rpc.client import RpcConfig
 from repro.stream import RuntimeConfig, StreamRuntime, costmodel
 
 _log = logging.getLogger(__name__)
@@ -127,6 +145,16 @@ class FleetConfig:
                        latency monitor (None = StragglerConfig defaults);
                        with supervisor.straggler_drain the monitor's
                        evictions become mass-conserving drains.
+    placement:         where replicas live: "thread" (in-process
+                       StreamRuntimes, the default) | "process" (one
+                       worker process per replica behind repro.rpc —
+                       fleet/remote.py handles wearing the same replica
+                       protocol).
+    rpc:               wire/process knobs for placement="process" (None =
+                       RpcConfig defaults; an unset ingest_silence_s is
+                       resolved from the supervisor's heartbeat timeout
+                       so the watchdog always quarantines before the
+                       wire kills a silent worker).
     """
     n_replicas: int = 2
     router: str = "round_robin"
@@ -143,6 +171,8 @@ class FleetConfig:
     max_staleness_s: Optional[float] = None
     serve_retry: Optional[RetryPolicy] = None
     straggler: Optional[StragglerConfig] = None
+    placement: str = "thread"
+    rpc: Optional[RpcConfig] = None
 
 
 class FleetCoordinator:
@@ -155,15 +185,24 @@ class FleetCoordinator:
         self.fcfg = fcfg
         self.rcfg = rcfg
         self._registry = registry or obs_registry.default_registry()
+        if fcfg.placement not in ("thread", "process"):
+            raise ValueError(f"placement must be 'thread' or 'process', "
+                             f"got {fcfg.placement!r}")
+        self._remote = fcfg.placement == "process"
+        self._rpc = self._resolve_rpc()
         self.router = ShardRouter(
             RouterConfig(policy=fcfg.router, seed=fcfg.router_seed),
             fcfg.n_replicas)
         self.replica_ids: List[int] = list(range(fcfg.n_replicas))
         self._next_id = fcfg.n_replicas
-        self.replicas: List[StreamRuntime] = [
-            StreamRuntime(cfg, self._rcfg_for_id(rid),
-                          registry=self._registry)
-            for rid in self.replica_ids]
+        #: rid -> checkpoint-dir incarnation (None = legacy bare dir).
+        #: Allocated fresh for every replica THIS coordinator creates, so
+        #: an id recycled across fleet runs never sees old steps.
+        self._incarnations: Dict[int, Optional[int]] = {}
+        for rid in self.replica_ids:
+            self._incarnations[rid] = self._alloc_incarnation(rid)
+        self.replicas: List[object] = [
+            self._make_replica(rid) for rid in self.replica_ids]
         # serving mirrors the replicas' RESOLVED ingest path: a forced
         # dense RuntimeConfig.path must score densely too, or the fleet's
         # two read fronts (replica.score vs coordinator.score) would
@@ -238,21 +277,80 @@ class FleetCoordinator:
         each other's saves and resume() would silently swap states)."""
         return self.fcfg.checkpoint_dir or self.rcfg.checkpoint_dir
 
-    def _rcfg_for_id(self, rid: int) -> RuntimeConfig:
-        """Per-replica RuntimeConfig, checkpoint dir keyed by STABLE id —
-        positions shift on scale-down, directories must not.  A supervised
-        fleet also installs its SupervisorConfig.retry as the replicas'
-        chunk-retry policy (rung 1 of the ladder) unless the RuntimeConfig
-        already carries its own."""
-        out = self.rcfg
+    def _resolve_rpc(self) -> Optional[RpcConfig]:
+        """Concrete RpcConfig for process placement (None for threads).
+        An unset ingest_silence_s resolves to 2x the supervisor heartbeat
+        timeout — the watchdog must always win the race and quarantine on
+        heartbeat silence BEFORE the wire declares the worker hung and
+        kills it (the kill then resolves the pending future)."""
+        if not getattr(self, "_remote", False):
+            return None
+        rpc = self.fcfg.rpc or RpcConfig()
+        if rpc.ingest_silence_s is None:
+            if self.fcfg.supervisor is not None:
+                hb = self.fcfg.supervisor.heartbeat_timeout_s
+                silence = max(2.0 * hb, hb + 1.0)
+            else:
+                silence = 600.0
+            rpc = dataclasses.replace(rpc, ingest_silence_s=silence)
+        return rpc
+
+    def _alloc_incarnation(self, rid: int) -> int:
+        """Next unused incarnation number for this replica id's
+        checkpoint dir: max of the existing ``inc_<n>`` subdirs + 1, so a
+        freshly created replica always starts from an EMPTY directory —
+        never another run's steps (legacy bare ``step_*`` dirs under
+        ``replica_<rid>`` are likewise shadowed, not resumed)."""
         root = self._ckpt_root
-        if root is not None:
-            out = dataclasses.replace(
-                out, checkpoint_dir=os.path.join(root, f"replica_{rid}"))
+        if root is None:
+            return 0
+        base = os.path.join(root, f"replica_{rid}")
+        if not os.path.isdir(base):
+            return 0
+        incs = [int(name[4:]) for name in os.listdir(base)
+                if name.startswith("inc_") and name[4:].isdigit()]
+        return max(incs, default=-1) + 1
+
+    def _replica_dir(self, rid: int) -> Optional[str]:
+        root = self._ckpt_root
+        if root is None:
+            return None
+        base = os.path.join(root, f"replica_{rid}")
+        inc = self._incarnations.get(rid)
+        return base if inc is None else os.path.join(base, f"inc_{inc}")
+
+    def _rcfg_for_id(self, rid: int) -> RuntimeConfig:
+        """Per-replica RuntimeConfig, checkpoint dir keyed by STABLE id +
+        incarnation — positions shift on scale-down, directories must
+        not, and recycled ids across fleet runs must not share steps.  A
+        supervised fleet also installs its SupervisorConfig.retry as the
+        replicas' chunk-retry policy (rung 1 of the ladder) unless the
+        RuntimeConfig already carries its own."""
+        out = self.rcfg
+        d = self._replica_dir(rid)
+        if d is not None:
+            out = dataclasses.replace(out, checkpoint_dir=d)
         if self.fcfg.supervisor is not None and out.chunk_retry is None:
             out = dataclasses.replace(
                 out, chunk_retry=self.fcfg.supervisor.retry)
         return out
+
+    def _make_replica(self, rid: int):
+        """Construct one replica at the configured placement.  For
+        process placement this SPAWNS a worker (and blocks on its init
+        handshake) — callers only create replicas at construction, scale
+        events and resume, all consolidation-boundary operations."""
+        rcfg = self._rcfg_for_id(rid)
+        if self._remote:
+            from repro.fleet.remote import RemoteReplicaHandle
+            return RemoteReplicaHandle(rid, self.cfg, rcfg, self._rpc)
+        return StreamRuntime(self.cfg, rcfg, registry=self._registry)
+
+    @staticmethod
+    def _close_replica(replica) -> None:
+        close = getattr(replica, "close", None)
+        if callable(close):
+            close()
 
     # ------------------------------------------------------------------
     # ingestion
@@ -270,10 +368,34 @@ class FleetCoordinator:
         """
         xs = np.asarray(xs, np.float32)
         if self.supervisor is None:
-            # unsupervised: exceptions propagate to the caller unchanged
-            for replica, idx in zip(self.replicas, self.router.route(xs)):
-                if idx.size:
-                    replica.ingest(xs[idx])
+            # unsupervised: exceptions propagate to the caller unchanged.
+            # Process placement ingests shards on parallel threads — each
+            # thread only blocks on its worker's socket, so N processes
+            # genuinely compute concurrently (the scaling curve).  Thread
+            # placement stays sequential: the runtimes share one device.
+            shards = self.router.route(xs)
+            work = [(r, xs[idx]) for r, idx in zip(self.replicas, shards)
+                    if idx.size]
+            if self._remote and len(work) > 1:
+                errs: List[BaseException] = []
+
+                def _run(replica, shard):
+                    try:
+                        replica.ingest(shard)
+                    except BaseException as e:  # noqa: BLE001 re-raised
+                        errs.append(e)
+
+                threads = [threading.Thread(target=_run, args=w,
+                                            daemon=True) for w in work]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                if errs:
+                    raise errs[0]
+            else:
+                for replica, shard in work:
+                    replica.ingest(shard)
         else:
             self._deliver(xs)
         self.rounds += 1
@@ -321,9 +443,15 @@ class FleetCoordinator:
     def install_faults(self, injector) -> None:
         """Attach a ft.faults.FaultInjector's plan to the live replicas
         (chunk hooks on the real runtimes — chaos runs exercise the real
-        retry/quarantine/restore paths, never mocks)."""
+        retry/quarantine/restore paths, never mocks).  Remote replicas
+        receive the plan over RPC and arm it on the runtime inside their
+        worker process (fault hooks need on_chunk_start, which only
+        exists where the rows are)."""
         for rid, r in zip(self.replica_ids, self.replicas):
-            injector.attach(rid, r)
+            if hasattr(r, "install_faults"):
+                r.install_faults(injector)
+            else:
+                injector.attach(rid, r)
 
     # ------------------------------------------------------------------
     # consolidation / serving
@@ -503,8 +631,10 @@ class FleetCoordinator:
         mass_before = sp_mass(parent.state)
         new_id = self._next_id
         self._next_id += 1
-        child = StreamRuntime(self.cfg, self._rcfg_for_id(new_id),
-                              registry=self._registry)
+        # a fresh replica is a fresh life: new incarnation dir (and, at
+        # process placement, a newly allocated worker process)
+        self._incarnations[new_id] = self._alloc_incarnation(new_id)
+        child = self._make_replica(new_id)
         parent.import_pool(kept)
         child.import_pool(child_state)
         self.router.grow(new_id, centroid=centroid)
@@ -555,6 +685,9 @@ class FleetCoordinator:
         self.telemetry.absorb_retired(cold.telemetry.summary())
         del self.replicas[pos]
         del self.replica_ids[pos]
+        self._incarnations.pop(rid, None)
+        # at process placement a retired replica is a released worker
+        self._close_replica(cold)
         self.epoch += 1
         self.straggler.remove_host(self._host(rid))
         self._strag_last.pop(rid, None)
@@ -614,6 +747,8 @@ class FleetCoordinator:
         # longer referenced).
         manifest = {"n_replicas": len(self.replicas),
                     "replica_ids": list(self.replica_ids),
+                    "incarnations": {str(rid): self._incarnations.get(rid)
+                                     for rid in self.replica_ids},
                     "epoch": self.epoch,
                     "next_replica_id": self._next_id,
                     "rounds": self.rounds,
@@ -662,10 +797,27 @@ class FleetCoordinator:
                     f"fleet configured with {len(self.replicas)}")
             ids = list(self.replica_ids)
         ids = [int(i) for i in ids]
-        rebuild = ids != self.replica_ids
-        replicas = ([StreamRuntime(self.cfg, self._rcfg_for_id(rid),
-                                   registry=self._registry)
-                     for rid in ids] if rebuild else self.replicas)
+        incs = manifest.get("incarnations")
+        if incs is None:
+            # legacy manifest (pre-incarnation): bare replica_<rid> dirs
+            pinned: Dict[int, Optional[int]] = {rid: None for rid in ids}
+        else:
+            pinned = {int(k): (None if v is None else int(v))
+                      for k, v in incs.items()}
+            pinned = {rid: pinned.get(rid) for rid in ids}
+        rebuild = (ids != self.replica_ids
+                   or any(pinned[rid] != self._incarnations.get(rid)
+                          for rid in ids))
+        if rebuild:
+            # replicas must be rebuilt on the manifest's PINNED
+            # incarnation dirs — a fresh coordinator allocated new (empty)
+            # ones at construction, which is exactly what stops it from
+            # reading this manifest's steps by accident
+            old_incarnations = dict(self._incarnations)
+            self._incarnations = dict(pinned)
+            replicas = [self._make_replica(rid) for rid in ids]
+        else:
+            replicas = self.replicas
         steps = manifest.get("replica_steps", [None] * len(ids))
         # Resolve and validate the WHOLE cut before touching any replica:
         # a partial restore (some replicas rolled back, some not) is worse
@@ -675,25 +827,40 @@ class FleetCoordinator:
         # GC (keep_n) outran fleet.checkpoint() — that is an operator
         # error (checkpoint the fleet at least every keep_n-1 ingest
         # rounds), and it is loud, not a silent False.
+        def _abort() -> None:
+            # a failed resume must leave the fleet exactly as it was:
+            # release any just-built replicas (worker processes!) and
+            # roll the incarnation map back to this run's allocations
+            if rebuild:
+                for r in replicas:
+                    self._close_replica(r)
+                self._incarnations = old_incarnations
+
         resolved = [step if step is not None else r.ckpt.latest_step()
                     for r, step in zip(replicas, steps)]
         if None in resolved:
+            _abort()
             return False
         lost = [i for i, (r, step) in enumerate(zip(replicas, resolved))
                 if step not in r.ckpt.all_steps()]
         if lost:
             if any(s is not None for s in steps):
+                _abort()
                 raise RuntimeError(
                     f"fleet manifest pins replica steps {steps} but "
                     f"replicas {lost} no longer have theirs (GC'd by "
                     f"keep_n); call fleet.checkpoint() at least every "
                     f"keep_n-1 ingest rounds or raise "
                     f"RuntimeConfig.keep_n")
+            _abort()
             return False
         for r, step in zip(replicas, resolved):
             if not r.resume(step=step):
+                _abort()
                 return False
         if rebuild:
+            for r in self.replicas:
+                self._close_replica(r)       # release the replaced set
             self.replicas = replicas
             self.replica_ids = list(ids)
             self.router = ShardRouter(
@@ -739,5 +906,35 @@ class FleetCoordinator:
                 wall_s=time.perf_counter() - t0))
         return True
 
+    # ------------------------------------------------------------------
+    # fleet-wide observability (per-worker registry aggregation)
+    # ------------------------------------------------------------------
+
+    def worker_metric_sources(self) -> List[object]:
+        """Scrape callables for every replica that keeps its own obs
+        registry (process placement) — feed these to
+        ``obs.export.serve_metrics(extra_sources=...)`` so ONE /metrics
+        endpoint serves the merged fleet view.  Thread replicas record
+        into the coordinator's registry already and contribute nothing
+        here."""
+        return [r.metrics_dump for r in self.replicas
+                if callable(getattr(r, "metrics_dump", None))]
+
+    def fleet_metrics(self) -> Dict[str, object]:
+        """One merged registry dump: the coordinator's own registry +
+        every live worker's scraped dump (mergeable-histogram reduce).
+        A dead or quarantined worker is skipped for this scrape — the
+        aggregate must stay serveable through partial failure."""
+        from repro.obs import export as obs_export
+        dumps = [obs_export.registry_dump(self._registry)]
+        for src in self.worker_metric_sources():
+            try:
+                dumps.append(src())
+            except Exception:
+                continue
+        return obs_export.merge_dumps(dumps)
+
     def close(self, cancel_pending: bool = False) -> None:
         self.scoring.close(cancel_pending)
+        for r in self.replicas:
+            self._close_replica(r)

@@ -1,0 +1,248 @@
+"""RemoteReplicaHandle — a worker PROCESS wearing the replica protocol.
+
+The coordinator drives replicas through a narrow duck-typed surface
+(ingest / state / export_pool / import_pool / telemetry / buffer / ckpt /
+checkpoint / resume / reset_state / chunk_hooks).  This class satisfies
+that surface over repro.rpc, so FleetCoordinator, ShardRouter,
+consolidation, the autoscaler and the supervisor stay placement-ignorant:
+``FleetConfig(placement="process")`` swaps StreamRuntime for this handle
+and NOTHING else changes.
+
+Mapping choices that keep the threaded fleet's contracts:
+
+* ``chunk_hooks`` stays a plain client-side list.  The worker streams a
+  ``chunk`` event frame per applied chunk boundary; this handle fires
+  every local hook's ``on_chunk_end`` per event — so the supervisor's
+  heartbeat hook (and anything else listening for liveness) works
+  untouched.  ``on_chunk_start`` hooks cannot run here (the rows live in
+  the worker); fault plans install worker-side via ``install_faults``.
+* ``ckpt`` is a LOCAL CheckpointManager on the replica's checkpoint
+  directory (shared filesystem).  The worker writes checkpoints; the
+  supervisor reads/verifies them through this manager exactly as it did
+  for threads — restore ceilings, blake2 verification, fallback walks.
+* ``state`` is the exported pool, cached by the worker's ``state_epoch``
+  (every mutating RPC reports the epoch back, so a stale cache is
+  impossible as long as mutations go through this handle — they do).
+* ``resume``/``reset_state`` RESPAWN a dead worker process first (same
+  configs, same checkpoint dir — deliberately the same incarnation: a
+  respawned worker must restore its own life's checkpoints), then restore
+  state into it.  Process identity is cheap; verified state is what
+  matters.
+* Telemetry is a client-side snapshot refreshed from every RPC result
+  (each response carries the counters), so coordinator reads like
+  ``r.telemetry.total_points`` cost no extra round-trips.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint import codec
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import figmn
+from repro.core.types import FIGMNConfig, FIGMNState
+from repro.rpc import protocol, wire
+from repro.rpc.client import RpcConfig, WorkerClient
+from repro.stream import RuntimeConfig
+
+
+class _RemoteTelemetry:
+    """Client-side mirror of the worker runtime's telemetry counters,
+    refreshed from every RPC response (never a dedicated round-trip)."""
+
+    def __init__(self):
+        self._summary: Dict[str, object] = {
+            "chunks": 0, "total_points": 0, "points_per_s": 0.0,
+            "active_k": 0, "created": 0, "pruned": 0, "merged": 0,
+            "spawned": 0, "accepted": 0, "quarantined": 0,
+            "drift_alarms": 0, "telemetry_anomalies": 0}
+        self.total_points = 0
+        self.total_chunks = 0
+        self.total_time_s = 0.0
+        self.buffer_len = 0
+
+    def update(self, doc: Dict[str, object]) -> None:
+        if "summary" in doc:
+            self._summary = dict(doc["summary"])
+        self.total_points = int(doc.get("total_points", self.total_points))
+        self.total_chunks = int(doc.get("total_chunks", self.total_chunks))
+        self.total_time_s = float(doc.get("total_time_s",
+                                          self.total_time_s))
+        self.buffer_len = int(doc.get("buffer_len", self.buffer_len))
+
+    def summary(self) -> Dict[str, object]:
+        return dict(self._summary)
+
+
+class _RemoteBuffer:
+    """The worker's spawn FailureBuffer, proxied (len / drain / push)."""
+
+    def __init__(self, handle: "RemoteReplicaHandle"):
+        self._h = handle
+
+    def __len__(self) -> int:
+        return self._h._tel.buffer_len
+
+    def drain(self) -> np.ndarray:
+        res, payload = self._h._call("drain")
+        self._h._sync(res)
+        if not payload:
+            return np.zeros((0, self._h.cfg.dim), np.float32)
+        return np.asarray(codec.decode_tree(payload)["rows"])
+
+    def push(self, rows) -> None:
+        res, _ = self._h._call(
+            "buffer_push",
+            payload=codec.encode_tree(
+                {"rows": np.asarray(rows, np.float32)}))
+        self._h._tel.buffer_len = int(res.get("buffer_len",
+                                              self._h._tel.buffer_len))
+
+
+class RemoteReplicaHandle:
+    """One replica, placed in a worker process.  See module docstring."""
+
+    def __init__(self, rid: int, cfg: FIGMNConfig, rcfg: RuntimeConfig,
+                 rpc: Optional[RpcConfig] = None):
+        self.rid = rid
+        self.cfg = cfg
+        self.rcfg = rcfg
+        self._rpc = rpc or RpcConfig()
+        self.chunk_hooks: List[object] = []
+        self._tel = _RemoteTelemetry()
+        self.buffer = _RemoteBuffer(self)
+        self.state_epoch = 0
+        self._template = figmn.init_state(cfg)
+        self._pool_cache: Optional[tuple] = None
+        #: local (read-side) manager on the worker's checkpoint dir — the
+        #: supervisor verifies/walks steps here; the worker writes them
+        self.ckpt = (CheckpointManager(rcfg.checkpoint_dir)
+                     if rcfg.checkpoint_dir is not None else None)
+        self._client = WorkerClient(
+            rid, protocol.figmn_config_to_doc(cfg),
+            protocol.runtime_config_to_doc(rcfg), self._rpc)
+
+    # -- plumbing -------------------------------------------------------
+
+    def _call(self, action, args=None, payload=b"", timeout_s=None,
+              on_event=None):
+        return self._client.call(action, args=args, payload=payload,
+                                 timeout_s=timeout_s, on_event=on_event)
+
+    def _sync(self, doc: Dict[str, object]) -> None:
+        self._tel.update(doc)
+        if "state_epoch" in doc:
+            self.state_epoch = int(doc["state_epoch"])
+
+    @property
+    def alive(self) -> bool:
+        return self._client.alive
+
+    @property
+    def pid(self) -> Optional[int]:
+        p = self._client._proc
+        return None if p is None else p.pid
+
+    def kill(self) -> None:
+        """Hard-stop the worker process (chaos/benchmark entry point —
+        the next supervised ingest observes worker_dead)."""
+        self._client.kill()
+
+    def close(self) -> None:
+        self._client.close()
+
+    # -- replica protocol -----------------------------------------------
+
+    def ingest(self, xs) -> Dict[str, object]:
+        xs = np.asarray(xs, np.float32)
+
+        def _on_event(h: Dict[str, object]) -> None:
+            idx = int(h.get("chunk_idx", 0))
+            n = int(h.get("n_points", 0))
+            lat = float(h.get("latency_s", 0.0))
+            for hook in list(self.chunk_hooks):
+                fn = getattr(hook, "on_chunk_end", None)
+                if fn is not None:
+                    fn(idx, n, lat)
+
+        res, _ = self._call(
+            "ingest_chunk",
+            payload=codec.encode_tree({"rows": xs}),
+            timeout_s=self._rpc.ingest_silence_s,
+            on_event=_on_event)
+        self._sync(res)
+        return dict(res["summary"])
+
+    @property
+    def state(self) -> FIGMNState:
+        if (self._pool_cache is None
+                or self._pool_cache[0] != self.state_epoch):
+            self.export_pool()
+        return self._pool_cache[1]
+
+    def export_pool(self) -> FIGMNState:
+        res, payload = self._call("export_pool")
+        self._sync(res)
+        st = codec.decode_tree(payload, template=self._template)
+        self._pool_cache = (self.state_epoch, st)
+        return st
+
+    def import_pool(self, state: FIGMNState) -> None:
+        res, _ = self._call(
+            "import_pool",
+            payload=codec.encode_tree(state))
+        self._sync(res)
+        self._pool_cache = None
+
+    @property
+    def telemetry(self) -> _RemoteTelemetry:
+        return self._tel
+
+    def checkpoint(self) -> None:
+        res, _ = self._call("checkpoint")
+        self._sync(res)
+
+    def resume(self, step: Optional[int] = None) -> bool:
+        self._client.ensure_alive()
+        res, _ = self._call("resume", args={"step": step})
+        self._sync(res)
+        self._pool_cache = None
+        return bool(res.get("resumed"))
+
+    def reset_state(self) -> None:
+        self._client.ensure_alive()
+        res, _ = self._call("reset_state")
+        self._sync(res)
+        self._pool_cache = None
+
+    def score(self, xs):
+        _, payload = self._call(
+            "score",
+            payload=codec.encode_tree(
+                {"rows": np.asarray(xs, np.float32)}))
+        return np.asarray(codec.decode_tree(payload)["rows"])
+
+    # -- placement-specific extras --------------------------------------
+
+    def install_faults(self, injector) -> None:
+        """Ship a seeded FaultPlan to the worker (it attaches its own
+        FaultInjector to the real runtime — remote chaos runs exercise the
+        real retry/quarantine/restore paths, same as threaded ones)."""
+        self._call("install_faults",
+                   args=protocol.fault_plan_to_doc(injector.plan))
+
+    def fault_log(self) -> List[List[object]]:
+        res, _ = self._call("fault_log")
+        return list(res.get("fired", []))
+
+    def metrics_dump(self) -> Dict[str, object]:
+        """Scrape the worker's obs registry as a mergeable dump (the
+        fleet /metrics endpoint merges these across workers)."""
+        res, _ = self._call("metrics")
+        return dict(res["dump"])
+
+    def ping(self) -> Dict[str, object]:
+        res, _ = self._call("ping")
+        self._sync(res)
+        return res

@@ -48,10 +48,21 @@ striking ``check()``; a persistent straggler is DRAINED into a peer via
 the coordinator's mass-conserving ``scale_down`` — its pool survives, its
 slot does not.
 
+Process placement (repro.fleet.remote) changes the failure ALPHABET but
+not the ladder: a replica living in a worker process can now also DIE
+(socket EOF / killed-on-silence), surfacing as ``repro.rpc.wire``
+exceptions from ``replica.ingest``.  Those are classed ``worker_dead`` —
+the handle has already killed the process, so the pending future always
+resolves and rung 3 proceeds exactly as for a thread crash (the handle's
+``resume``/``reset_state`` respawn the process before restoring).  The
+heartbeat signal itself is placement-ignorant: remote chunk events fire
+the same ``_HeartbeatHook.on_chunk_end``.
+
 This module deliberately imports nothing from ``repro.fleet`` (the
 coordinator imports *us*); the coordinator is duck-typed through the
 attributes it already exposes (replicas, replica_ids, router, scoring,
-telemetry, straggler, scale_down).
+telemetry, straggler, scale_down).  ``repro.rpc.wire`` is stdlib-only,
+so importing its exception taxonomy keeps that rule intact.
 """
 from __future__ import annotations
 
@@ -64,10 +75,11 @@ from typing import Dict, List, Optional
 
 from repro.ft.retry import RetryPolicy
 from repro.obs import registry as obs_registry
+from repro.rpc import wire as _rpc_wire
 
 #: reason classes for the figmn_replica_failures_total label
 FAILURE_REASONS = ("crash", "heartbeat_timeout", "deadline_overrun",
-                   "straggler")
+                   "straggler", "worker_dead")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,7 +277,12 @@ class FleetSupervisor:
                     return False
             except BaseException as e:      # escaped the chunk retries
                 silence = time.monotonic() - self._hb.get(rid, t0)
-                self._quarantine(coordinator, rid, replica, "crash",
+                # a wire failure means the worker PROCESS is gone (the
+                # client kills on silence before raising), not that the
+                # model code crashed — distinct class, same ladder
+                cls = ("worker_dead"
+                       if isinstance(e, _rpc_wire.WireError) else "crash")
+                self._quarantine(coordinator, rid, replica, cls,
                                  f"{type(e).__name__}: {e}", None,
                                  ceiling, silence)
                 return False

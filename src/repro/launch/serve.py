@@ -33,6 +33,7 @@ from repro.ft import RetryPolicy, SupervisorConfig
 from repro.models import transformer as tr
 from repro.obs import export as obs_export
 from repro.obs import trace as obs_trace
+from repro.rpc import RpcConfig
 from repro.serve.engine import Request, ServeEngine
 from repro.stream import DriftConfig, LifecycleConfig, RuntimeConfig, costmodel
 
@@ -55,6 +56,19 @@ def main() -> None:
                     help="let the OOD fleet autoscale from 1 replica up "
                          "to --ood-replicas off its own telemetry "
                          "(load skew / budget pressure / drift rate)")
+    ap.add_argument("--ood-workers", type=int, default=0, metavar="N",
+                    help="run the OOD fleet's replicas as N WORKER "
+                         "PROCESSES over repro.rpc instead of threads "
+                         "(0 = threads; overrides --ood-replicas). Each "
+                         "worker hosts one StreamRuntime; shards ingest "
+                         "in parallel, the supervisor's recovery ladder "
+                         "gains the worker_dead failure class, and the "
+                         "autoscaler allocates/releases processes at "
+                         "consolidation boundaries")
+    ap.add_argument("--ood-transport", choices=("tcp", "unix"),
+                    default="tcp",
+                    help="worker RPC transport (with --ood-workers): "
+                         "tcp = 127.0.0.1 loopback, unix = socket file")
     ap.add_argument("--ood-supervise", action="store_true",
                     help="run the OOD fleet under the FleetSupervisor "
                          "(repro.ft): heartbeat watchdog per replica, "
@@ -182,17 +196,27 @@ def main() -> None:
             drift=DriftConfig(window=8, threshold=8.0,
                               response="inflate")),
         fleet=FleetConfig(
-            n_replicas=1 if args.ood_autoscale else args.ood_replicas,
+            n_replicas=(args.ood_workers if args.ood_workers > 0
+                        else (1 if args.ood_autoscale
+                              else args.ood_replicas)),
+            placement="process" if args.ood_workers > 0 else "thread",
+            rpc=(RpcConfig(transport=args.ood_transport)
+                 if args.ood_workers > 0 else None),
             router="hash", consolidate_every=1, global_kmax=8,
             autoscale=AutoscaleConfig(
                 min_replicas=1,
-                max_replicas=max(args.ood_replicas, 1),
+                max_replicas=max(args.ood_workers, args.ood_replicas, 1),
                 cooldown=1) if args.ood_autoscale else None,
             supervisor=SupervisorConfig(
                 heartbeat_timeout_s=args.ood_heartbeat_timeout,
                 retry=RetryPolicy(seed=args.seed))
             if args.ood_supervise else None,
             max_staleness_s=args.ood_max_staleness)))
+    if args.metrics_port is not None and args.ood_workers > 0:
+        # one aggregated /metrics: the coordinator's registry merged with
+        # every worker process's scraped registry (mergeable histograms)
+        server.RequestHandlerClass.extra_sources = tuple(
+            monitor.engine.worker_metric_sources())
     monitor.partial_fit(feats)
     summary = monitor.summary()
     # snapshot reads — non-blocking w.r.t. ingestion (score_async /

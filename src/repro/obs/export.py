@@ -9,6 +9,16 @@ does not know can fail loudly instead of misparsing.
 ``serve_metrics`` serves ``prometheus_text`` over HTTP from a daemon
 thread (wired into ``launch/serve.py --metrics-port``): point a
 Prometheus scrape job at ``http://host:port/metrics``.
+
+Multi-host aggregation (ISSUE 10 satellite): ``registry_dump`` renders a
+registry into a JSON-able, MERGEABLE form (histograms keep raw bucket
+counts, not quantiles); ``merge_dumps`` reduces any number of per-worker
+dumps into one fleet view with the same algebra the in-process metrics
+use — counters and gauges sum (worker gauges here are extensive
+quantities: buffer depths, active components — so the fleet total is the
+sum), histograms merge bucket-wise per ``HistSnapshot.merge``.  A
+coordinator scrapes each worker's dump over RPC and serves the merged
+registry from ONE ``/metrics`` endpoint via ``extra_sources``.
 """
 from __future__ import annotations
 
@@ -16,10 +26,10 @@ import json
 import math
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
 from repro.obs import registry as registry_mod
-from repro.obs.metrics import Histogram
+from repro.obs.metrics import HistSnapshot, Histogram
 
 #: bump when the shape of dumped telemetry/bench documents changes
 SCHEMA_VERSION = 1
@@ -97,14 +107,125 @@ def metrics_dict(registry: Optional[registry_mod.Registry] = None
     return out
 
 
+def registry_dump(registry: Optional[registry_mod.Registry] = None
+                  ) -> Dict[str, object]:
+    """Mergeable JSON-able dump of a registry.
+
+    Unlike ``metrics_dict`` (the human/bench-report form, which bakes in
+    quantiles), this keeps histograms as raw bucket counts so any number
+    of dumps — from other threads, other PROCESSES, other hosts — reduce
+    exactly via ``merge_dumps``.  This is the payload of the worker
+    ``metrics`` RPC action.
+    """
+    registry = registry or registry_mod.default_registry()
+    metrics: List[Dict[str, object]] = []
+    for m in registry.collect():
+        entry: Dict[str, object] = {"name": m.name, "kind": m.kind,
+                                    "help": m.help,
+                                    "labels": dict(m.labels)}
+        if isinstance(m, Histogram):
+            s = m.snapshot()
+            entry["hist"] = {"bounds": list(s.bounds),
+                             "counts": list(s.counts),
+                             "total": s.total, "sum": s.sum}
+        else:
+            entry["value"] = float(m.snapshot())
+        metrics.append(entry)
+    return {"schema_version": SCHEMA_VERSION, "metrics": metrics}
+
+
+def merge_dumps(dumps: Iterable[Dict[str, object]]) -> Dict[str, object]:
+    """Reduce registry dumps into one: counters/gauges sum, histograms
+    bucket-sum (bounds must match — same contract as HistSnapshot.merge).
+    Series are keyed by (name, labels); kind mismatches across dumps for
+    the same series fail loudly."""
+    merged: Dict[tuple, Dict[str, object]] = {}
+    for dump in dumps:
+        for entry in dump.get("metrics", []):
+            key = (entry["name"],
+                   tuple(sorted(dict(entry["labels"]).items())))
+            if key not in merged:
+                e = dict(entry)
+                if "hist" in e:
+                    e["hist"] = dict(e["hist"])
+                merged[key] = e
+                continue
+            acc = merged[key]
+            if acc["kind"] != entry["kind"]:
+                raise ValueError(
+                    f"metric {entry['name']} is a {entry['kind']} in one "
+                    f"dump and a {acc['kind']} in another")
+            if "hist" in entry:
+                a = HistSnapshot(bounds=tuple(acc["hist"]["bounds"]),
+                                 counts=tuple(acc["hist"]["counts"]),
+                                 total=int(acc["hist"]["total"]),
+                                 sum=float(acc["hist"]["sum"]))
+                b = HistSnapshot(bounds=tuple(entry["hist"]["bounds"]),
+                                 counts=tuple(entry["hist"]["counts"]),
+                                 total=int(entry["hist"]["total"]),
+                                 sum=float(entry["hist"]["sum"]))
+                s = a.merge(b)
+                acc["hist"] = {"bounds": list(s.bounds),
+                               "counts": list(s.counts),
+                               "total": s.total, "sum": s.sum}
+            else:
+                acc["value"] = float(acc["value"]) + float(entry["value"])
+    return {"schema_version": SCHEMA_VERSION,
+            "metrics": [merged[k] for k in sorted(merged)]}
+
+
+def prometheus_text_from_dump(dump: Dict[str, object]) -> str:
+    """Render a (possibly merged) registry dump in Prometheus text
+    exposition format — the serving form of ``merge_dumps`` output."""
+    lines: List[str] = []
+    seen_header = set()
+    for entry in dump.get("metrics", []):
+        name, labels = entry["name"], dict(entry["labels"])
+        if name not in seen_header:
+            seen_header.add(name)
+            if entry.get("help"):
+                lines.append(f"# HELP {name} {entry['help']}")
+            lines.append(f"# TYPE {name} {entry['kind']}")
+        if "hist" in entry:
+            h = entry["hist"]
+            cum = 0
+            for edge, c in zip(list(h["bounds"]) + [float("inf")],
+                               h["counts"]):
+                cum += c
+                le = _fmt_labels(labels, {"le": _fmt_value(float(edge))})
+                lines.append(f"{name}_bucket{le} {cum}")
+            lines.append(f"{name}_sum{_fmt_labels(labels)} "
+                         f"{float(h['sum'])!r}")
+            lines.append(f"{name}_count{_fmt_labels(labels)} "
+                         f"{int(h['total'])}")
+        else:
+            lines.append(f"{name}{_fmt_labels(labels)} "
+                         f"{_fmt_value(float(entry['value']))}")
+    return "\n".join(lines) + "\n"
+
+
 class _MetricsHandler(BaseHTTPRequestHandler):
     registry: Optional[registry_mod.Registry] = None
+    #: callables returning registry dumps (e.g. per-worker RPC scrapes)
+    #: merged into the local registry's dump on every request; a source
+    #: that raises is skipped for THAT scrape (a dead worker must not
+    #: take the fleet endpoint down with it)
+    extra_sources: tuple = ()
 
     def do_GET(self):                                    # noqa: N802
         if self.path.rstrip("/") not in ("", "/metrics"):
             self.send_error(404)
             return
-        body = prometheus_text(self.registry).encode()
+        if self.extra_sources:
+            dumps = [registry_dump(self.registry)]
+            for src in self.extra_sources:
+                try:
+                    dumps.append(src())
+                except Exception:
+                    continue
+            body = prometheus_text_from_dump(merge_dumps(dumps)).encode()
+        else:
+            body = prometheus_text(self.registry).encode()
         self.send_response(200)
         self.send_header("Content-Type",
                          "text/plain; version=0.0.4; charset=utf-8")
@@ -118,12 +239,21 @@ class _MetricsHandler(BaseHTTPRequestHandler):
 
 def serve_metrics(port: int,
                   registry: Optional[registry_mod.Registry] = None,
-                  host: str = "0.0.0.0") -> ThreadingHTTPServer:
+                  host: str = "0.0.0.0",
+                  extra_sources: Optional[
+                      Iterable[Callable[[], Dict[str, object]]]] = None
+                  ) -> ThreadingHTTPServer:
     """Serve ``/metrics`` from a daemon thread; returns the server (call
     ``.shutdown()`` to stop).  ``port=0`` binds an ephemeral port —
-    read it back from ``server.server_address``."""
+    read it back from ``server.server_address``.
+
+    ``extra_sources``: callables returning registry dumps (see
+    ``registry_dump``) merged into every response — how a coordinator
+    serves ONE aggregated endpoint over its per-worker registries
+    (pass e.g. ``fleet.worker_metric_sources()``)."""
     handler = type("Handler", (_MetricsHandler,),
-                   {"registry": registry or registry_mod.default_registry()})
+                   {"registry": registry or registry_mod.default_registry(),
+                    "extra_sources": tuple(extra_sources or ())})
     server = ThreadingHTTPServer((host, port), handler)
     t = threading.Thread(target=server.serve_forever,
                          name="obs-metrics-http", daemon=True)

@@ -1,0 +1,22 @@
+"""repro.rpc — the fleet's wire layer: replicas as worker processes.
+
+wire.py      dependency-free framing + transports + failure taxonomy
+protocol.py  action vocabulary + config doc (de)serialisation
+worker.py    ``python -m repro.rpc.worker`` — one StreamRuntime per process
+client.py    coordinator-side process handle (spawn/call/kill/respawn)
+
+The placement-facing surface (``RemoteReplicaHandle``) lives in
+repro.fleet.remote — the coordinator drives it through the same replica
+protocol the threaded fleet uses.
+"""
+from repro.rpc.client import RpcConfig, WorkerClient
+from repro.rpc.protocol import (PROTOCOL_VERSION, ProtocolError,
+                                RemoteError)
+from repro.rpc.wire import (WireError, WireProtocolError, WorkerDied,
+                            WorkerTimeout)
+
+__all__ = [
+    "PROTOCOL_VERSION", "ProtocolError", "RemoteError", "RpcConfig",
+    "WireError", "WireProtocolError", "WorkerClient", "WorkerDied",
+    "WorkerTimeout",
+]

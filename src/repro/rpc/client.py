@@ -1,0 +1,219 @@
+"""Coordinator-side worker handle: spawn, handshake, call, kill.
+
+``WorkerClient`` owns exactly one worker process and its socket.  The
+call discipline is strictly request/response (one in-flight action,
+guarded by a lock) — the only multi-frame exchange is ingest, where the
+worker streams ``chunk`` event frames (heartbeats) before its single
+``result`` frame, and the client forwards each onto ``on_event``.
+
+Silence handling is the load-bearing part.  A worker that stops framing
+mid-ingest (hung jit, livelock, injected hang) trips ``silence_s`` on the
+receive side; the client then KILLS the process and raises WorkerTimeout
+— converting silence into death.  That conversion is what lets the fleet
+supervisor's watchdog keep its threaded-era semantics: the pending ingest
+future always completes (with an exception), so quarantine -> restore ->
+rejoin proceeds instead of waiting forever on a zombie.
+
+``ensure_alive`` respawns a dead worker process with the SAME configs and
+checkpoint directory; the caller is responsible for restoring state into
+it (``resume``) — process identity is cheap, replica state is what the
+checkpoint verifies.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+from threading import RLock
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.rpc import protocol, wire
+
+
+@dataclass(frozen=True)
+class RpcConfig:
+    """Wire/process knobs for one fleet's worker pool."""
+
+    #: "tcp" (loopback, default) or "unix" (socket files)
+    transport: str = "tcp"
+    #: worker spawn -> dial-back -> init reply budget.  Dominated by the
+    #: worker's jax import + first runtime build, not the network.
+    spawn_timeout_s: float = 120.0
+    #: deadline for ordinary control actions (export/import/checkpoint...)
+    call_timeout_s: float = 120.0
+    #: max silence BETWEEN ingest chunk events before the worker is
+    #: declared hung and killed.  None -> the fleet resolves it from the
+    #: supervisor's heartbeat timeout (2x, so the watchdog always
+    #: quarantines on heartbeat silence before the wire gives up).
+    ingest_silence_s: Optional[float] = None
+    #: grace given to a polite "shutdown" action before SIGKILL
+    shutdown_grace_s: float = 5.0
+
+
+def _worker_env() -> Dict[str, str]:
+    """Child env with this repro package importable, whatever the parent's
+    cwd/PYTHONPATH situation (tests chdir; CI sets relative paths)."""
+    import repro
+    src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(os.environ)
+    prev = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+    return env
+
+
+class WorkerClient:
+    """One worker process + its control socket."""
+
+    def __init__(self, rid: int, cfg_doc: Dict[str, object],
+                 rcfg_doc: Dict[str, object], rpc: RpcConfig):
+        self.rid = rid
+        self._cfg_doc = cfg_doc
+        self._rcfg_doc = rcfg_doc
+        self._rpc = rpc
+        self._lock = RLock()
+        self._proc: Optional[subprocess.Popen] = None
+        self._sock = None
+        self.spawn_count = 0
+        self._spawn()
+
+    # ---------------- process lifecycle ----------------
+
+    def _spawn(self) -> None:
+        srv, addr = wire.listen(self._rpc.transport)
+        try:
+            self._proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.rpc.worker",
+                 "--connect", addr],
+                env=_worker_env())
+            deadline = time.monotonic() + self._rpc.spawn_timeout_s
+            while True:
+                try:
+                    self._sock = wire.accept(srv, timeout_s=1.0)
+                    break
+                except wire.WorkerTimeout:
+                    if self._proc.poll() is not None:
+                        raise wire.WorkerDied(
+                            f"worker rid={self.rid} exited with code "
+                            f"{self._proc.returncode} before connecting")
+                    if time.monotonic() > deadline:
+                        self.kill()
+                        raise wire.WorkerTimeout(
+                            f"worker rid={self.rid} did not dial back "
+                            f"within {self._rpc.spawn_timeout_s}s")
+        finally:
+            srv.close()
+            addr_kind, _, path = addr.partition(":")
+            if addr_kind == "unix":
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+        wire.send_frame(self._sock, {
+            "action": "init",
+            "args": {"protocol_version": protocol.PROTOCOL_VERSION,
+                     "rid": self.rid, "cfg": self._cfg_doc,
+                     "rcfg": self._rcfg_doc}})
+        header, _ = wire.recv_frame(self._sock,
+                                    timeout_s=self._rpc.spawn_timeout_s)
+        if not header.get("ok"):
+            msg = header.get("message", "init failed")
+            self.kill()
+            raise protocol.ProtocolError(
+                f"worker rid={self.rid} rejected init: {msg}")
+        self.spawn_count += 1
+
+    @property
+    def alive(self) -> bool:
+        return (self._proc is not None and self._proc.poll() is None
+                and self._sock is not None)
+
+    def ensure_alive(self) -> bool:
+        """Respawn the worker process if it is gone.  Returns True iff a
+        respawn happened (caller must then restore replica state)."""
+        with self._lock:
+            if self.alive:
+                return False
+            self.kill()
+            self._spawn()
+            return True
+
+    def kill(self) -> None:
+        """Hard-stop the process and drop the socket.  Idempotent."""
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._sock.close()
+                except OSError:
+                    pass
+                self._sock = None
+            if self._proc is not None and self._proc.poll() is None:
+                self._proc.kill()
+                try:
+                    self._proc.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    pass
+
+    def close(self) -> None:
+        """Polite shutdown: ask, wait briefly, then kill."""
+        with self._lock:
+            if self.alive:
+                try:
+                    self.call("shutdown",
+                              timeout_s=self._rpc.shutdown_grace_s)
+                    self._proc.wait(timeout=self._rpc.shutdown_grace_s)
+                except (wire.WireError, protocol.RemoteError,
+                        subprocess.TimeoutExpired):
+                    pass
+            self.kill()
+
+    # ---------------- calls ----------------
+
+    def call(self, action: str, args: Optional[Dict[str, object]] = None,
+             payload: bytes = b"", timeout_s: Optional[float] = None,
+             on_event: Optional[Callable[[Dict[str, object]], None]] = None
+             ) -> Tuple[Dict[str, object], bytes]:
+        """Execute one action; returns (result doc, reply payload).
+
+        ``timeout_s`` is the per-FRAME silence budget, not a total call
+        deadline: a streaming ingest may run arbitrarily long as long as
+        chunk events keep arriving.  On silence or death the worker
+        process is killed before the exception propagates, so callers
+        never observe a half-alive handle.
+        """
+        timeout_s = (self._rpc.call_timeout_s if timeout_s is None
+                     else timeout_s)
+        with self._lock:
+            if not self.alive:
+                raise wire.WorkerDied(
+                    f"worker rid={self.rid} is not running")
+            try:
+                wire.send_frame(self._sock,
+                                {"action": action, "args": args or {}},
+                                payload)
+                while True:
+                    header, reply = wire.recv_frame(self._sock,
+                                                    timeout_s=timeout_s)
+                    if header.get("event") == "chunk":
+                        if on_event is not None:
+                            on_event(header)
+                        continue
+                    break
+            except wire.WorkerTimeout as e:
+                self.kill()          # silence -> death, observably
+                raise wire.WorkerTimeout(
+                    f"worker rid={self.rid} silent for {timeout_s}s "
+                    f"during {action!r}; killed") from e
+            except wire.WireError:
+                self.kill()
+                raise
+            if header.get("event") != "result":
+                self.kill()
+                raise wire.WireProtocolError(
+                    f"expected result frame, got {header!r}")
+            if not header.get("ok"):
+                raise protocol.RemoteError(
+                    str(header.get("error", "RuntimeError")),
+                    str(header.get("message", "")))
+            return dict(header.get("result") or {}), reply

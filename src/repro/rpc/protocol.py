@@ -1,0 +1,172 @@
+"""RPC schema: the action vocabulary + config (de)serialisation.
+
+The fanout pattern is ARMI's ``mpiActions`` operator-broadcast: the
+coordinator serialises an ACTION (a name + JSON args + optional codec
+payload), every addressed worker executes it against its local
+``StreamRuntime``, and the results gather back.  Workers hold the state;
+actions move.  One request frame -> N event frames (``chunk`` heartbeats
+while an ingest streams) -> exactly one ``result`` or ``error`` frame.
+
+Request header::   {"action": str, "args": {...}}          (+ payload)
+Event header::     {"event": "chunk", "chunk_idx", "n_points",
+                    "latency_s"}                            (heartbeat)
+Result header::    {"event": "result", "ok": true, "result": {...}}
+Error header::     {"event": "result", "ok": false, "error": type name,
+                    "message": str}
+
+Actions (worker.py executes; client.py wraps):
+
+  init             build the runtime from the configs in ``args``
+  ping             liveness + {pid, chunk_idx, state_epoch}
+  ingest_chunk     ingest the payload rows; streams a ``chunk`` event per
+                   applied chunk boundary (the RPC liveness signal the
+                   supervisor's heartbeat watchdog consumes)
+  export_pool      -> pool payload (codec blob of the live FIGMNState)
+  import_pool      <- pool payload (fleet scale events)
+  consolidate_step one pairwise gossip merge: own pool + the payload's
+                   peer pool -> merged pool payload (worker-side reduce)
+  checkpoint       persist; -> {step}
+  resume           restore from checkpoint (args: step|null) -> {resumed}
+  reset_state      recovery of last resort (total telemetry reset)
+  score            payload rows -> scores payload
+  telemetry        -> {summary, total_points/chunks/time_s, buffer_len,
+                       state_epoch, chunk_idx}
+  metrics          -> the worker registry's mergeable dump (obs.export)
+  drain            -> payload of pending spawn-buffer rows (and clears)
+  buffer_push      <- payload rows appended to the spawn buffer
+  install_faults   attach a seeded ft.faults.FaultPlan worker-side
+  drain            graceful shutdown prep: final lifecycle state export
+  shutdown         reply, then exit 0
+
+Config docs are plain JSON: every nested policy dataclass
+(LifecycleConfig / DriftConfig / RetryPolicy) round-trips via asdict;
+``sigma_ini`` arrays ship as nested lists with a dtype tag; a CostTable
+ships as its entries/meta dict (or a path string, resolved worker-side).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+#: bump together with any change to the action vocabulary or doc shapes;
+#: worker and client refuse to pair across versions (fail loud, not weird)
+PROTOCOL_VERSION = 1
+
+
+class ProtocolError(RuntimeError):
+    pass
+
+
+class RemoteError(RuntimeError):
+    """An exception that happened worker-side, re-raised client-side with
+    the remote type name preserved (the supervisor's crash class keys on
+    it like any local replica exception)."""
+
+    def __init__(self, remote_type: str, message: str):
+        super().__init__(f"{remote_type}: {message}")
+        self.remote_type = remote_type
+        self.remote_message = message
+
+
+# ---------------------------------------------------------------------------
+# FIGMNConfig <-> doc
+# ---------------------------------------------------------------------------
+
+def _array_doc(v: Any) -> Any:
+    if v is None or isinstance(v, (int, float)):
+        return v
+    arr = np.asarray(v)
+    return {"__array__": True, "dtype": str(arr.dtype),
+            "data": arr.tolist()}
+
+
+def _array_undoc(doc: Any) -> Any:
+    if isinstance(doc, dict) and doc.get("__array__"):
+        import jax.numpy as jnp
+        return jnp.asarray(np.asarray(doc["data"], doc["dtype"]))
+    return doc
+
+
+def figmn_config_to_doc(cfg) -> Dict[str, object]:
+    d = {f.name: getattr(cfg, f.name)
+         for f in dataclasses.fields(cfg)}
+    d["sigma_ini"] = _array_doc(d["sigma_ini"])
+    return d
+
+
+def figmn_config_from_doc(doc: Dict[str, object]):
+    from repro.core.types import FIGMNConfig
+    d = dict(doc)
+    d["sigma_ini"] = _array_undoc(d.get("sigma_ini"))
+    return FIGMNConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig <-> doc
+# ---------------------------------------------------------------------------
+
+def _policy_doc(obj: Optional[object]) -> Optional[Dict[str, object]]:
+    return None if obj is None else dataclasses.asdict(obj)
+
+
+def runtime_config_to_doc(rcfg) -> Dict[str, object]:
+    from repro.stream import costmodel
+    ct = rcfg.cost_table
+    if ct is None or isinstance(ct, str):
+        ct_doc = ct
+    elif isinstance(ct, costmodel.CostTable):
+        ct_doc = {"entries": ct.entries, "meta": ct.meta}
+    else:                       # unknown object: resolve worker-side
+        ct_doc = None
+    return {
+        "chunk": rcfg.chunk,
+        "path": rcfg.path,
+        "lifecycle": _policy_doc(rcfg.lifecycle),
+        "drift": _policy_doc(rcfg.drift),
+        "checkpoint_dir": rcfg.checkpoint_dir,
+        "checkpoint_every": rcfg.checkpoint_every,
+        "keep_n": rcfg.keep_n,
+        "vmem_budget": rcfg.vmem_budget,
+        "device": rcfg.device,
+        "cost_table": ct_doc,
+        "telemetry_anomaly": rcfg.telemetry_anomaly,
+        "telemetry_capacity": rcfg.telemetry_capacity,
+        "on_nonfinite": rcfg.on_nonfinite,
+        "chunk_retry": _policy_doc(rcfg.chunk_retry),
+    }
+
+
+def runtime_config_from_doc(doc: Dict[str, object]):
+    from repro.ft.retry import RetryPolicy
+    from repro.stream import (DriftConfig, LifecycleConfig, RuntimeConfig,
+                              costmodel)
+    d = dict(doc)
+    if d.get("lifecycle") is not None:
+        d["lifecycle"] = LifecycleConfig(**d["lifecycle"])
+    if d.get("drift") is not None:
+        d["drift"] = DriftConfig(**d["drift"])
+    if d.get("chunk_retry") is not None:
+        d["chunk_retry"] = RetryPolicy(**d["chunk_retry"])
+    ct = d.get("cost_table")
+    if isinstance(ct, dict):
+        d["cost_table"] = costmodel.CostTable(entries=ct["entries"],
+                                              meta=ct["meta"])
+    return RuntimeConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan <-> doc (chaos benchmarks attach faults worker-side)
+# ---------------------------------------------------------------------------
+
+def fault_plan_to_doc(plan) -> Dict[str, object]:
+    return {"seed": plan.seed,
+            "faults": [dataclasses.asdict(f) for f in plan.faults]}
+
+
+def fault_plan_from_doc(doc: Dict[str, object]):
+    from repro.ft.faults import Fault, FaultPlan
+    return FaultPlan(
+        faults=tuple(Fault(**f) for f in doc.get("faults", ())),
+        seed=int(doc.get("seed", 0)))

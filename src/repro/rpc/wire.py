@@ -1,0 +1,233 @@
+"""Length-prefixed frames over local sockets — the fleet's wire layer.
+
+Deliberately dependency-free (stdlib only, no jax/numpy): the framing must
+be importable by supervisors, launchers and health probes that never touch
+an array.  Array payloads are OPAQUE bytes here — the checkpoint codec
+(repro.checkpoint.codec) produces/consumes them, and its blake2 digests
+ride in the frame header so a receiver rejects a corrupted payload before
+any zip/array parsing.
+
+Frame layout (little-endian)::
+
+    b"FRPC" | u8 wire_version | u32 header_len | u64 payload_len
+           | header JSON (UTF-8) | payload bytes
+
+The header is a JSON object (action, args, event kind, error info — see
+protocol.py for the schema); ``payload_blake2`` is stamped into it for any
+non-empty payload and verified on receive.
+
+Transports: ``tcp`` (127.0.0.1 loopback, the default — works everywhere)
+and ``unix`` (a socket file; lower overhead, POSIX only).  Addresses are
+self-describing strings — ``tcp:127.0.0.1:45123`` / ``unix:/tmp/w.sock``
+— so one flag (`--ood-transport`) selects the family end to end.
+
+Failure taxonomy (what the supervisor's ladder keys on):
+
+  WorkerDied     the peer is GONE — EOF, connection reset, broken pipe.
+  WorkerTimeout  the peer is SILENT past a deadline — the caller decides
+                 whether silence means hung (and usually kills the
+                 process, converting silence into death).
+  WireProtocolError  the peer is SPEAKING GARBAGE — bad magic, version
+                 skew, digest mismatch.  Never auto-retried.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import socket
+import struct
+import time
+from typing import Dict, Optional, Tuple
+
+MAGIC = b"FRPC"
+WIRE_VERSION = 1
+
+_HEADER = struct.Struct("<4sBIQ")
+
+#: refuse absurd frames before allocating (a garbage length prefix must
+#: not turn into a multi-GiB recv loop); pools are MBs, not GBs
+MAX_HEADER = 16 * 1024 * 1024
+MAX_PAYLOAD = 4 * 1024 * 1024 * 1024
+
+
+class WireError(RuntimeError):
+    """Base class for everything the wire layer raises."""
+
+
+class WireProtocolError(WireError):
+    """Peer spoke a different protocol (magic/version/digest mismatch)."""
+
+
+class WorkerDied(WireError):
+    """The peer endpoint is gone (EOF / reset / dead process)."""
+
+
+class WorkerTimeout(WireError):
+    """No frame from the peer within the deadline."""
+
+
+def _blake2(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+def _json_default(obj: object):
+    # numpy/jax scalars and small arrays ride in headers (telemetry
+    # counters, summaries); duck-type them down to python scalars/lists so
+    # this module never has to import an array library
+    to_list = getattr(obj, "tolist", None)
+    if callable(to_list):
+        return to_list()
+    item = getattr(obj, "item", None)
+    if callable(item):
+        return item()
+    raise TypeError(f"unserialisable header value of type "
+                    f"{type(obj).__name__}")
+
+
+def send_frame(sock: socket.socket, header: Dict[str, object],
+               payload: bytes = b"") -> None:
+    """Serialise one frame onto ``sock`` (blocking sendall)."""
+    header = dict(header)
+    if payload:
+        header["payload_blake2"] = _blake2(payload)
+    hjson = json.dumps(header, sort_keys=True,
+                       default=_json_default).encode()
+    try:
+        sock.sendall(_HEADER.pack(MAGIC, WIRE_VERSION, len(hjson),
+                                  len(payload)) + hjson + payload)
+    except (BrokenPipeError, ConnectionResetError, OSError) as e:
+        raise WorkerDied(f"send failed: {e}") from e
+
+
+def _recv_exact(sock: socket.socket, n: int,
+                deadline: Optional[float]) -> bytes:
+    """Read exactly ``n`` bytes; WorkerTimeout past ``deadline`` (an
+    absolute time.monotonic stamp), WorkerDied on EOF/reset."""
+    chunks = []
+    got = 0
+    while got < n:
+        if deadline is not None:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise WorkerTimeout(
+                    f"deadline expired mid-frame ({got}/{n} bytes)")
+            sock.settimeout(left)
+        else:
+            sock.settimeout(None)
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except socket.timeout as e:
+            raise WorkerTimeout(
+                f"no data within deadline ({got}/{n} bytes)") from e
+        except (ConnectionResetError, BrokenPipeError, OSError) as e:
+            raise WorkerDied(f"recv failed: {e}") from e
+        if not chunk:
+            raise WorkerDied(f"peer closed the connection "
+                             f"({got}/{n} bytes of a frame)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket,
+               timeout_s: Optional[float] = None
+               ) -> Tuple[Dict[str, object], bytes]:
+    """Read one frame; returns (header dict, payload bytes).
+
+    ``timeout_s`` bounds the WHOLE frame (prefix through payload) — a
+    peer that goes silent mid-frame raises WorkerTimeout, not a hang.
+    """
+    deadline = (time.monotonic() + timeout_s
+                if timeout_s is not None else None)
+    raw = _recv_exact(sock, _HEADER.size, deadline)
+    magic, version, hlen, plen = _HEADER.unpack(raw)
+    if magic != MAGIC:
+        raise WireProtocolError(f"bad magic {magic!r} (want {MAGIC!r})")
+    if version != WIRE_VERSION:
+        raise WireProtocolError(
+            f"wire version {version} unsupported (this end speaks "
+            f"{WIRE_VERSION})")
+    if hlen > MAX_HEADER or plen > MAX_PAYLOAD:
+        raise WireProtocolError(
+            f"frame sizes implausible (header {hlen}, payload {plen})")
+    try:
+        header = json.loads(_recv_exact(sock, hlen, deadline))
+    except WireError:
+        raise
+    except Exception as e:
+        raise WireProtocolError(f"unparseable frame header: {e}") from e
+    payload = _recv_exact(sock, plen, deadline) if plen else b""
+    want = header.get("payload_blake2")
+    if payload and _blake2(payload) != want:
+        raise WireProtocolError("payload digest mismatch (corrupted "
+                                "frame)")
+    return header, payload
+
+
+# ---------------------------------------------------------------------------
+# transports: listen / connect by self-describing address strings
+# ---------------------------------------------------------------------------
+
+def listen(transport: str = "tcp",
+           path_hint: Optional[str] = None
+           ) -> Tuple[socket.socket, str]:
+    """Bind a listener; returns (server socket, address string a peer can
+    ``connect`` to).  tcp binds an ephemeral loopback port; unix binds a
+    socket file (``path_hint`` or a mkstemp-style private path)."""
+    if transport == "tcp":
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(("127.0.0.1", 0))
+        srv.listen(16)
+        return srv, f"tcp:127.0.0.1:{srv.getsockname()[1]}"
+    if transport == "unix":
+        if not hasattr(socket, "AF_UNIX"):
+            raise WireError("unix transport unavailable on this platform")
+        if path_hint is None:
+            import tempfile
+            d = tempfile.mkdtemp(prefix="figmn_rpc_")
+            path_hint = os.path.join(d, "w.sock")
+        srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        srv.bind(path_hint)
+        srv.listen(16)
+        return srv, f"unix:{path_hint}"
+    raise ValueError(f"unknown transport {transport!r} "
+                     f"(expected 'tcp' or 'unix')")
+
+
+def connect(address: str, timeout_s: float = 30.0) -> socket.socket:
+    """Dial an address string produced by ``listen``."""
+    kind, _, rest = address.partition(":")
+    if kind == "tcp":
+        host, _, port = rest.rpartition(":")
+        sock = socket.create_connection((host, int(port)),
+                                        timeout=timeout_s)
+    elif kind == "unix":
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(timeout_s)
+        sock.connect(rest)
+    else:
+        raise ValueError(f"unknown address family in {address!r}")
+    sock.settimeout(None)
+    # RPC frames are small and latency-bound; never Nagle-delay them
+    if kind == "tcp":
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return sock
+
+
+def accept(srv: socket.socket,
+           timeout_s: Optional[float] = None) -> socket.socket:
+    """Accept one peer (WorkerTimeout if none dials in time)."""
+    srv.settimeout(timeout_s)
+    try:
+        conn, _ = srv.accept()
+    except socket.timeout as e:
+        raise WorkerTimeout(
+            f"no connection within {timeout_s}s") from e
+    conn.settimeout(None)
+    try:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    except OSError:
+        pass                                    # unix sockets: no TCP opts
+    return conn

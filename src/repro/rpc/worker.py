@@ -1,0 +1,235 @@
+"""Worker process: one ``StreamRuntime`` behind the wire.
+
+``python -m repro.rpc.worker --connect tcp:127.0.0.1:PORT`` dials BACK to
+the coordinator's listener (no port discovery: the coordinator binds, the
+worker connects), waits for the ``init`` action carrying its configs, then
+executes broadcast actions until ``shutdown`` or the coordinator hangs up.
+
+The loop is single-threaded on purpose: a worker executes exactly one
+action at a time against its runtime (the same serialisation the threaded
+fleet gets from the coordinator's sequential dispatch), so replica state
+never needs a lock.  Liveness during a long ``ingest_chunk`` comes from
+STREAMED ``chunk`` event frames — a chunk hook forwards every applied
+chunk boundary onto the socket, which is what the fleet supervisor's
+heartbeat watchdog consumes on the other end.  A worker that dies
+mid-action simply stops framing; the client turns that into WorkerDied
+and the supervisor climbs its ladder.
+
+Ingest keeps ``StreamRuntime.ingest`` semantics EXACTLY (one call per
+shard: chunking, lifecycle cadence, final lifecycle pass, auto-checkpoint
+— all inside the runtime), so a process replica is contract-equivalent to
+a threaded one; the wire only moves the call.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, Optional
+
+from repro.rpc import protocol, wire
+
+
+class _WireHeartbeat:
+    """Chunk hook streaming liveness frames during an ingest action."""
+
+    def __init__(self, sock):
+        self._sock = sock
+
+    def on_chunk_end(self, chunk_idx: int, n_points: int,
+                     latency_s: float) -> None:
+        wire.send_frame(self._sock, {"event": "chunk",
+                                     "chunk_idx": int(chunk_idx),
+                                     "n_points": int(n_points),
+                                     "latency_s": float(latency_s)})
+
+
+class WorkerServer:
+    """Action dispatch for one runtime (importable for in-process tests)."""
+
+    def __init__(self, sock, rid: int, cfg, rcfg, registry=None):
+        import numpy as np  # noqa: F401  (kept hot for handlers)
+
+        from repro.core import figmn
+        from repro.obs import registry as obs_registry
+        from repro.stream import StreamRuntime
+
+        self.sock = sock
+        self.rid = rid
+        self.registry = registry or obs_registry.default_registry()
+        self.runtime = StreamRuntime(cfg, rcfg, registry=self.registry)
+        self.runtime.chunk_hooks.append(_WireHeartbeat(sock))
+        self._figmn = figmn
+        self._injector = None
+
+    # -- helpers --------------------------------------------------------
+
+    def _telemetry_doc(self) -> Dict[str, object]:
+        rt = self.runtime
+        t = rt.telemetry
+        return {"summary": t.summary(),
+                "total_points": int(t.total_points),
+                "total_chunks": int(t.total_chunks),
+                "total_time_s": float(t.total_time_s),
+                "buffer_len": len(rt.buffer),
+                "state_epoch": int(rt.state_epoch),
+                "chunk_idx": int(rt.chunk_idx)}
+
+    def _rows(self, payload: bytes):
+        from repro.checkpoint import codec
+        return codec.decode_tree(payload)["rows"]
+
+    def _rows_blob(self, rows) -> bytes:
+        import numpy as np
+
+        from repro.checkpoint import codec
+        return codec.encode_tree({"rows": np.asarray(rows)})
+
+    def _pool_blob(self) -> bytes:
+        from repro.checkpoint import codec
+        return codec.encode_tree(
+            self.runtime.export_pool(),
+            meta={"state_epoch": int(self.runtime.state_epoch)})
+
+    def _decode_pool(self, payload: bytes):
+        from repro.checkpoint import codec
+        return codec.decode_tree(
+            payload, template=self._figmn.init_state(self.runtime.cfg))
+
+    # -- actions --------------------------------------------------------
+
+    def handle(self, action: str, args: Dict[str, object],
+               payload: bytes):
+        """Execute one action; returns (result doc, reply payload)."""
+        rt = self.runtime
+        if action == "ping":
+            return {"pid": os.getpid(), "rid": self.rid,
+                    "protocol_version": protocol.PROTOCOL_VERSION,
+                    **self._telemetry_doc()}, b""
+        if action == "ingest_chunk":
+            summary = rt.ingest(self._rows(payload))
+            return {"summary": summary, **self._telemetry_doc()}, b""
+        if action == "export_pool":
+            return self._telemetry_doc(), self._pool_blob()
+        if action == "import_pool":
+            rt.import_pool(self._decode_pool(payload))
+            return self._telemetry_doc(), b""
+        if action == "consolidate_step":
+            # one pairwise gossip reduce, executed where a pool already
+            # lives: own state + the shipped peer pool -> merged pool
+            from repro.fleet.consolidate import consolidate as _consolidate
+            from repro.checkpoint import codec
+            peer = self._decode_pool(payload)
+            merged, merges = _consolidate(
+                rt.cfg, [rt.export_pool(), peer], topology="star",
+                kmax_out=int(args.get("kmax_out", 0)))
+            return ({"merges": int(merges)},
+                    codec.encode_tree(merged, meta={"merges": int(merges)}))
+        if action == "checkpoint":
+            rt.checkpoint()
+            return {"step": rt.ckpt.latest_step(),
+                    **self._telemetry_doc()}, b""
+        if action == "resume":
+            step = args.get("step")
+            ok = rt.resume(step=None if step is None else int(step))
+            return {"resumed": bool(ok), **self._telemetry_doc()}, b""
+        if action == "reset_state":
+            rt.reset_state()
+            return self._telemetry_doc(), b""
+        if action == "score":
+            import numpy as np
+            scores = np.asarray(rt.score(self._rows(payload)))
+            return {}, self._rows_blob(scores)
+        if action == "telemetry":
+            return self._telemetry_doc(), b""
+        if action == "metrics":
+            from repro.obs import export as obs_export
+            return {"dump": obs_export.registry_dump(self.registry)}, b""
+        if action == "drain":
+            rows = rt.buffer.drain() if len(rt.buffer) else None
+            blob = self._rows_blob(rows) if rows is not None else b""
+            return {"n": 0 if rows is None else int(rows.shape[0]),
+                    **self._telemetry_doc()}, blob
+        if action == "buffer_push":
+            rt.buffer.push(self._rows(payload))
+            return {"buffer_len": len(rt.buffer)}, b""
+        if action == "install_faults":
+            from repro.ft.faults import FaultInjector
+            self._injector = FaultInjector(
+                protocol.fault_plan_from_doc(args))
+            self._injector.attach(self.rid, rt)
+            return {"armed": len(self._injector.plan.faults)}, b""
+        if action == "fault_log":
+            fired = ([] if self._injector is None
+                     else [[k, r, c, t]
+                           for k, r, c, t in self._injector.fired])
+            return {"fired": fired}, b""
+        raise protocol.ProtocolError(f"unknown action {action!r}")
+
+    # -- loop -----------------------------------------------------------
+
+    def serve_forever(self) -> None:
+        while True:
+            try:
+                header, payload = wire.recv_frame(self.sock)
+            except wire.WorkerDied:
+                return                       # coordinator hung up: exit
+            action = str(header.get("action"))
+            if action == "shutdown":
+                wire.send_frame(self.sock, {"event": "result", "ok": True,
+                                            "result": {}})
+                return
+            try:
+                result, reply_payload = self.handle(
+                    action, dict(header.get("args") or {}), payload)
+                wire.send_frame(self.sock,
+                                {"event": "result", "ok": True,
+                                 "result": result}, reply_payload)
+            except wire.WireError:
+                raise                        # socket itself is broken
+            except BaseException as e:       # noqa: BLE001 — forwarded
+                wire.send_frame(self.sock,
+                                {"event": "result", "ok": False,
+                                 "error": type(e).__name__,
+                                 "message": str(e)})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--connect", required=True, metavar="ADDRESS",
+                    help="coordinator listener (tcp:host:port | "
+                         "unix:/path)")
+    args = ap.parse_args(argv)
+    sock = wire.connect(args.connect)
+    header, _ = wire.recv_frame(sock)
+    if header.get("action") != "init":
+        wire.send_frame(sock, {"event": "result", "ok": False,
+                               "error": "ProtocolError",
+                               "message": f"expected init, got "
+                                          f"{header.get('action')!r}"})
+        return 2
+    init = dict(header.get("args") or {})
+    if int(init.get("protocol_version", -1)) != protocol.PROTOCOL_VERSION:
+        wire.send_frame(sock, {"event": "result", "ok": False,
+                               "error": "ProtocolError",
+                               "message": f"protocol version skew: "
+                                          f"coordinator "
+                                          f"{init.get('protocol_version')}"
+                                          f", worker "
+                                          f"{protocol.PROTOCOL_VERSION}"})
+        return 2
+    # config docs arrive before any jax import happened: the heavy
+    # runtime build (jax + XLA init) is paid here, once, inside init
+    server = WorkerServer(
+        sock, rid=int(init.get("rid", -1)),
+        cfg=protocol.figmn_config_from_doc(init["cfg"]),
+        rcfg=protocol.runtime_config_from_doc(init["rcfg"]))
+    wire.send_frame(sock, {"event": "result", "ok": True,
+                           "result": {"pid": os.getpid(),
+                                      "rid": server.rid}})
+    server.serve_forever()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

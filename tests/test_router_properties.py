@@ -207,3 +207,114 @@ def test_shrink_guards():
         r2.shrink(1, into=1)
     with pytest.raises(ValueError, match="already routed"):
         r2.grow(rid=0)
+
+
+# ---------------------------------------------------------------------------
+# hash-ring churn under remote replica join / leave / quarantine (ISSUE 10):
+# process placement makes membership churn routine (workers join on
+# scale-up, leave on drain, get masked when their process dies) — the
+# ring must remap minimally and never lose or double-assign a key
+# ---------------------------------------------------------------------------
+
+def _partition(router: ShardRouter, x: np.ndarray) -> np.ndarray:
+    """Like _assign, but also asserts route() is an exact partition:
+    every point assigned exactly once (no lost, no doubled keys)."""
+    shards = router.route(x)
+    flat = np.concatenate([idx for idx in shards]) if shards else \
+        np.zeros(0, np.int64)
+    assert flat.size == x.shape[0]
+    assert np.unique(flat).size == x.shape[0]
+    out = np.full(x.shape[0], -1, np.int64)
+    for pos, idx in enumerate(shards):
+        out[idx] = pos
+    return out
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8])
+def test_hash_quarantine_remaps_only_the_masked_arcs(n):
+    """Masking a (dead) remote replica moves EXACTLY its keys — the
+    consistent-hashing contract under failure — and unmasking restores
+    the original assignment bit-for-bit (rejoin is invisible to the
+    surviving shards)."""
+    x = _points(seed=21)
+    r = ShardRouter(RouterConfig(policy="hash", seed=9), n)
+    base = _partition(r, x)
+    r.set_quarantined(0, True)
+    masked = _partition(r, x)
+    moved = np.nonzero(masked != base)[0]
+    np.testing.assert_array_equal(moved, np.nonzero(base == 0)[0])
+    assert not (masked == 0).any()
+    r.set_quarantined(0, False)
+    np.testing.assert_array_equal(_partition(r, x), base)
+
+
+@pytest.mark.parametrize("n", [2, 3, 5])
+def test_hash_join_remap_fraction_is_minimal(n):
+    """A remote worker joining (scale-up grow) must steal only its own
+    arcs: the moved fraction stays near 1/(n+1), never a rehash-the-world
+    fraction."""
+    x = _points(n=2048, seed=22)
+    r = ShardRouter(RouterConfig(policy="hash", seed=10), n)
+    base = _partition(r, x)
+    pos = r.grow(rid=n)
+    after = _partition(r, x)
+    moved = after != base
+    assert (after[moved] == pos).all()
+    frac = moved.mean()
+    assert frac <= 2.5 / (n + 1), frac
+
+
+@pytest.mark.parametrize("n", [3, 5])
+def test_hash_churn_assignment_depends_only_on_final_membership(n):
+    """Two different join/leave histories ending at the SAME id set route
+    identically (by replica ID): the ring has no path memory, so a fleet
+    rebuilt after churn keeps routing exactly as one that never churned
+    differently."""
+    cfg = RouterConfig(policy="hash", seed=11)
+    x = _points(seed=23)
+
+    r1 = ShardRouter(cfg, n)                   # ids 0..n-1
+    r1.grow(rid=n)
+    r1.grow(rid=n + 1)
+    r1.shrink(r1.ids.index(1), into=r1.ids.index(0))
+
+    r2 = ShardRouter(cfg, n)
+    r2.shrink(r2.ids.index(1), into=r2.ids.index(0))
+    r2.grow(rid=n + 1)
+    r2.grow(rid=n)
+
+    assert sorted(r1.ids) == sorted(r2.ids)
+    by_id_1 = np.asarray(r1.ids)[_partition(r1, x)]
+    by_id_2 = np.asarray(r2.ids)[_partition(r2, x)]
+    np.testing.assert_array_equal(by_id_1, by_id_2)
+
+
+def test_hash_no_lost_keys_under_seeded_churn_sequence():
+    """Drive a seeded random join/leave/quarantine/rejoin sequence (the
+    shapes remote placement produces) and assert EVERY route() along the
+    way is an exact partition that never lands a key on a masked
+    replica."""
+    rng = np.random.default_rng(24)
+    r = ShardRouter(RouterConfig(policy="hash", seed=12), 3)
+    next_id = 3
+    quarantined = set()
+    x = _points(n=512, seed=25)
+    for step in range(30):
+        op = rng.integers(0, 4)
+        if op == 0:                                     # join
+            r.grow(rid=next_id)
+            next_id += 1
+        elif op == 1 and r.n - len(quarantined) > 1:    # quarantine
+            live = [p for p in range(r.n) if p not in quarantined]
+            pos = int(rng.choice(live))
+            r.set_quarantined(pos, True)
+            quarantined.add(pos)
+        elif op == 2 and quarantined:                   # rejoin
+            pos = quarantined.pop()
+            r.set_quarantined(pos, False)
+        elif op == 3 and r.n > 1 and not quarantined:   # leave (drain)
+            pos, into = rng.choice(r.n, 2, replace=False)
+            r.shrink(int(pos), into=int(into))
+        assign = _partition(r, x)
+        for pos in quarantined:
+            assert not (assign == pos).any()
